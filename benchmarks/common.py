@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+EXP_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "experiments", "bench")
+
+
+def save_rows(name: str, rows: list[dict]) -> None:
+    os.makedirs(EXP_DIR, exist_ok=True)
+    with open(os.path.join(EXP_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+
+
+def timed(fn, *args, reps: int = 3, **kwargs):
+    fn(*args, **kwargs)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6  # us

@@ -1,0 +1,86 @@
+"""Paper Fig. 2 (right): communication-learning tradeoff on the grid MDP.
+
+Sweeps lambda for the theoretical trigger (eq. 9), the practical estimate
+(eq. 15) and the random baseline, in BOTH regimes:
+
+  * homogeneous  — all agents draw i.i.d. from d (the paper's stated setup);
+  * heterogeneous— one informative + one junk agent, where informativeness
+    gating has signal to exploit (reproduces Fig 2's ordering; see
+    EXPERIMENTS.md §Repro for the homogeneous-regime discussion).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithm1 import GatedSGDConfig, run_gated_sgd
+from repro.core.trigger import TriggerConfig
+from repro.envs import GridWorld
+
+EPS = 0.5
+N = 250
+SEEDS = 4
+LAMBDAS = (1e-4, 1e-3, 1e-2, 1e-1, 0.3)
+
+
+def _junk_sampler(num_states):
+    def sampler(rng):
+        _, r2 = jax.random.split(rng)
+        phi_t = jax.nn.one_hot(jnp.zeros(10, jnp.int32), num_states)
+        return phi_t, 1.0 + 5.0 * jax.random.normal(r2, (10,))
+    return sampler
+
+
+def run() -> list[dict]:
+    gw = GridWorld()
+    prob = gw.vfa_problem(np.zeros(gw.num_states))
+    rho = prob.min_rho(EPS) * 1.0001
+    good = gw.make_sampler(jnp.zeros(gw.num_states), 10)
+    junk = _junk_sampler(gw.num_states)
+    rows = []
+
+    for regime, samplers in (("homogeneous", good),
+                             ("heterogeneous", (good, junk))):
+        rate_by_lam = {}
+        for mode in ("theoretical", "practical"):
+            for lam in LAMBDAS:
+                t0 = time.perf_counter()
+                rates, js = [], []
+                for s in range(SEEDS):
+                    cfg = GatedSGDConfig(
+                        trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
+                        eps=EPS, num_agents=2, mode=mode)
+                    tr = run_gated_sgd(jax.random.key(s),
+                                       jnp.zeros(gw.num_states), samplers, cfg,
+                                       problem=prob)
+                    rates.append(float(tr.comm_rate))
+                    js.append(float(prob.objective(tr.weights[-1])))
+                rows.append(dict(bench="fig2", regime=regime, mode=mode,
+                                 lam=lam, comm_rate=float(np.mean(rates)),
+                                 J_final=float(np.mean(js)),
+                                 us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
+                if mode == "theoretical":
+                    rate_by_lam[lam] = float(np.mean(rates))
+        # random baseline matched to the theoretical trigger's rates
+        for lam in LAMBDAS:
+            p = rate_by_lam[lam]
+            rates, js = [], []
+            t0 = time.perf_counter()
+            for s in range(SEEDS):
+                cfg = GatedSGDConfig(
+                    trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
+                    eps=EPS, num_agents=2, mode="random", random_tx_prob=p)
+                tr = run_gated_sgd(jax.random.key(50 + s),
+                                   jnp.zeros(gw.num_states), samplers, cfg,
+                                   problem=prob)
+                rates.append(float(tr.comm_rate))
+                js.append(float(prob.objective(tr.weights[-1])))
+            rows.append(dict(bench="fig2", regime=regime, mode="random",
+                             lam=lam, comm_rate=float(np.mean(rates)),
+                             J_final=float(np.mean(js)),
+                             us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
+    return rows

@@ -1,0 +1,57 @@
+"""Paper Fig. 3: continuous-state value-function approximation.
+
+Three panels: (left) large lambda => infrequent, late communication;
+(middle) small lambda => frequent communication, faster weight convergence;
+(right) 10 agents learn faster than 2 at ~the same communication rate.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithm1 import GatedSGDConfig, run_gated_sgd
+from repro.core.trigger import TriggerConfig
+from repro.envs import LinearSystem
+
+N = 1500
+T = 1000
+
+
+def run() -> list[dict]:
+    ls = LinearSystem()
+    prob = ls.vfa_problem(np.zeros(6))
+    eps = 0.9 * prob.max_stable_stepsize()
+    rho = min(prob.min_rho(eps) * 1.0001, 0.9995)
+    wstar = np.asarray(prob.optimum())
+    sampler = ls.make_sampler(jnp.zeros(6), T)
+    rows = []
+
+    def panel(name, lam, agents):
+        t0 = time.perf_counter()
+        cfg = GatedSGDConfig(
+            trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
+            eps=eps, num_agents=agents, mode="practical")
+        tr = run_gated_sgd(jax.random.key(0), jnp.zeros(6), sampler, cfg,
+                           problem=prob)
+        a = np.asarray(tr.alphas).mean(1)
+        first_tx = int(np.argmax(a > 0)) if a.max() > 0 else N
+        w_err = [float(np.linalg.norm(np.asarray(tr.weights[k]) - wstar))
+                 for k in (0, N // 4, N // 2, 3 * N // 4, N)]
+        rows.append(dict(
+            bench="fig3", panel=name, lam=lam, agents=agents,
+            comm_rate=float(tr.comm_rate), first_tx_iter=first_tx,
+            early_rate=float(a[: N // 4].mean()),
+            late_rate=float(a[3 * N // 4:].mean()),
+            J_final=float(prob.objective(tr.weights[-1])),
+            w_err_quarterly=w_err,
+            us_per_call=(time.perf_counter() - t0) * 1e6))
+
+    panel("left_infrequent", lam=1e-1, agents=2)
+    panel("middle_frequent", lam=1e-4, agents=2)
+    panel("right_2agents", lam=1e-2, agents=2)
+    panel("right_10agents", lam=1e-2, agents=10)
+    return rows

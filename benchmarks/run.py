@@ -1,0 +1,79 @@
+"""Benchmark harness: one bench per paper figure/claim + the beyond-paper
+comm-savings and kernel/roofline suites.
+
+Prints ``name,us_per_call,derived`` CSV per row (the repo convention) and
+writes full JSON to experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig2  # one suite
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    agents_scaling,
+    comm_savings,
+    fig2_grid_tradeoff,
+    fig3_continuous,
+    kernels_bench,
+    roofline,
+    theorem1_bound,
+)
+from benchmarks.common import save_rows
+
+SUITES = {
+    "fig2": fig2_grid_tradeoff,
+    "fig3": fig3_continuous,
+    "theorem1": theorem1_bound,
+    "agents_scaling": agents_scaling,
+    "comm_savings": comm_savings,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def _derived(row: dict) -> str:
+    for key in ("J_final", "rhs_bound", "savings_pct", "gflop_per_call",
+                "dominant"):
+        if key in row:
+            return f"{key}={row[key]}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = SUITES[name].run()
+        except Exception as e:  # keep the harness going; report at the end
+            print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
+            failures += 1
+            continue
+        save_rows(name, rows)
+        for row in rows:
+            label = row.get("bench", name)
+            sub = [str(row[k]) for k in ("regime", "mode", "panel", "lam",
+                                         "arch", "shape", "mesh")
+                   if k in row]
+            full = label + ("[" + "/".join(sub) + "]" if sub else "")
+            print(f"{full},{row.get('us_per_call', 0):.1f},{_derived(row)}",
+                  flush=True)
+        if name == "roofline":
+            print("\n" + roofline.format_table(rows) + "\n", file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Theorem 1 validation: the empirical metric (8) vs the bound (12), over a
+(lambda, rho) grid with the theoretical trigger (the bound's setting)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithm1 import GatedSGDConfig, performance_metric, run_gated_sgd
+from repro.core.trigger import TriggerConfig, theorem1_bound
+from repro.core.vfa import stochastic_gradient
+from repro.envs import GridWorld
+
+EPS = 0.5
+N = 150
+T = 10
+SEEDS = 6
+
+
+def run() -> list[dict]:
+    gw = GridWorld()
+    prob = gw.vfa_problem(np.zeros(gw.num_states))
+    w0 = jnp.zeros(gw.num_states)
+    sampler = gw.make_sampler(w0, T)
+    rho_min = prob.min_rho(EPS)
+
+    # empirical Tr(Phi G) at w0 (Theorem 1 assumes constant covariance)
+    grads = [np.asarray(stochastic_gradient(w0, *sampler(jax.random.key(10_000 + s))))
+             for s in range(300)]
+    G = np.cov(np.stack(grads).T)
+    tr_phi_g = float(np.trace(np.asarray(prob.second_moment()) @ G))
+
+    rows = []
+    for lam in (1e-4, 1e-3, 1e-2, 1e-1):
+        for rho in (rho_min * 1.0001, min(rho_min * 1.05, 0.999)):
+            t0 = time.perf_counter()
+            cfg = GatedSGDConfig(
+                trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
+                eps=EPS, num_agents=2, mode="theoretical")
+            vals = []
+            for s in range(SEEDS):
+                tr = run_gated_sgd(jax.random.key(s), w0, sampler, cfg,
+                                   problem=prob)
+                vals.append(float(performance_metric(tr, lam, prob)))
+            lhs = float(np.mean(vals))
+            rhs = theorem1_bound(lam, rho, EPS, N,
+                                 float(prob.objective(w0)),
+                                 float(prob.objective(prob.optimum())),
+                                 tr_phi_g)
+            rows.append(dict(bench="theorem1", lam=lam, rho=round(rho, 5),
+                             lhs_empirical=lhs, rhs_bound=rhs,
+                             holds=bool(lhs <= rhs),
+                             slack=rhs - lhs,
+                             us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
+    return rows

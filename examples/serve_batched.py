@@ -1,0 +1,46 @@
+"""Serving example: batched greedy decoding with per-family KV/state caches.
+
+Runs three different cache disciplines from the zoo:
+  * phi3   — dense causal KV cache
+  * mixtral— sliding-window ring cache (+ MoE decode)
+  * mamba2 — O(1) recurrent state (no KV at all)
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+BATCH, PROMPT, GEN = 4, 32, 16
+
+for arch in ("phi3-mini-3.8b", "mixtral-8x7b", "mamba2-370m"):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (BATCH, PROMPT), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+
+    step = jax.jit(model.decode_step)
+    cache = model.init_cache(BATCH, PROMPT + GEN)
+    t0 = time.time()
+    logits = None
+    for t in range(PROMPT):
+        logits, cache = step(params, cache, prompt[:, t], jnp.int32(t))
+    toks = []
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    for t in range(PROMPT, PROMPT + GEN):
+        toks.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(t))
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    dt = time.time() - t0
+    out = jnp.stack(toks, 1)
+    cache_kind = ("recurrent-state" if cfg.arch_type == "ssm" else
+                  f"ring[{cfg.sliding_window}]" if cfg.sliding_window else "dense-KV")
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    print(f"{arch:16s} cache={cache_kind:16s} "
+          f"{BATCH * (PROMPT + GEN) / dt:7.1f} tok/s  sample={out[0, :8].tolist()}")

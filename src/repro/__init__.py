@@ -1,0 +1,11 @@
+"""repro: Federated Reinforcement Learning at the Edge (Gatsis, 2021) in JAX.
+
+Faithful layer: communication-efficient linear value-function approximation
+(core/, envs/) reproducing the paper's algorithms and experiments.
+
+Framework layer: the paper's gain-triggered communication generalized into a
+gated gradient-aggregation feature for multi-pod distributed training of the
+assigned architecture zoo (models/, parallel/, launch/).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Pytree checkpointing (npz-based; orbax is not available here)."""
+
+from repro.checkpoint.store import restore, save  # noqa: F401

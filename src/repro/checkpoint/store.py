@@ -1,0 +1,64 @@
+"""Flat-key npz checkpointing for arbitrary pytrees of arrays.
+
+Keys encode the tree path (``/``-joined); dtypes and shapes round-trip
+exactly (bf16 is stored via a uint16 view + dtype sidecar).  Atomic via
+write-to-temp + rename.  Sharded arrays are gathered by the caller (the
+train driver saves from fully-addressable hosts; on this CPU container
+everything is single-process anyway).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+    flat = _flatten(tree)
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    payload = {}
+    for k, v in flat.items():
+        payload[k] = v.view(np.uint16) if v.dtype == jnp.bfloat16 else v
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __dtypes__=json.dumps(dtypes),
+                 __meta__=json.dumps(metadata or {}), **payload)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path, allow_pickle=False) as z:
+        dtypes = json.loads(str(z["__dtypes__"]))
+        meta = json.loads(str(z["__meta__"]))
+        flat_like = _flatten(like)
+        restored = {}
+        for k, ref in flat_like.items():
+            arr = z[k]
+            if dtypes[k] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            if arr.shape != ref.shape:
+                raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {ref.shape}")
+            restored[k] = arr
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves_with_path]
+    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(restored[k]) for k in keys]), meta

@@ -1,0 +1,39 @@
+"""Core: the paper's contribution — gain-triggered communication-efficient
+federated value-function approximation, plus its SPMD generalization."""
+
+from repro.core.algorithm1 import (  # noqa: F401
+    GatedSGDConfig,
+    InnerTrace,
+    performance_metric,
+    run_gated_sgd,
+    run_value_iteration,
+)
+from repro.core.fed_sgd import (  # noqa: F401
+    FedConfig,
+    FedStats,
+    gate_and_aggregate,
+    gated_psum_mean,
+    local_gain,
+    tree_bytes,
+    tree_vdot,
+)
+from repro.core.gain import (  # noqa: F401
+    gain_norm_only,
+    practical_gain,
+    practical_gain_streaming,
+    theoretical_gain,
+)
+from repro.core.server import aggregate, server_update  # noqa: F401
+from repro.core.trigger import (  # noqa: F401
+    TriggerConfig,
+    check_assumption_2,
+    check_assumption_3,
+    should_transmit,
+    theorem1_bound,
+)
+from repro.core.vfa import (  # noqa: F401
+    VFAProblem,
+    bellman_targets,
+    empirical_second_moment,
+    stochastic_gradient,
+)

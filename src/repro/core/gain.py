@@ -1,0 +1,71 @@
+"""Performance-gain computation (paper §III eq. 13 and §IV eq. 15).
+
+The gain of transmitting a stochastic gradient ``g`` is the exact change of
+the quadratic objective:
+
+    gain = J(w - eps g) - J(w)
+         = -eps g^T grad J(w) + (eps^2 / 2) g^T hess J g          (eq. 13)
+
+with ``hess J = 2 Phi``.  Transmit iff ``gain <= -threshold`` (eq. 9).
+
+* ``theoretical_gain`` evaluates eq. 13 exactly — requires the model
+  (true grad J and Phi), as the paper notes is "practically impossible".
+* ``practical_gain`` is eq. 15: replace ``grad J ~= g`` (the agent's own
+  stochastic gradient) and ``Phi ~= Phi_hat = (1/T) sum phi phi^T`` from the
+  local batch.  As printed, eq. 15 drops a leading factor eps (it writes
+  ``-g^T [I - (eps/2) Phi_hat] g``); expanding eq. 13 with the substitutions
+  gives ``-eps g^T g + eps^2 g^T Phi_hat g`` (hess = 2*Phi_hat).  We keep the
+  dimensionally-consistent expansion and note the printed form is recovered
+  at eps = 1 up to the factor-2 Hessian convention.
+* ``practical_gain_streaming`` is the O(T n) form the paper's footnote 2
+  promises: ``g^T Phi_hat g = (1/T) sum_t (phi_t^T g)^2`` — no n x n matrix
+  is ever materialized.  This is the compute hot-spot that
+  ``repro.kernels.gain`` implements as a fused Pallas TPU kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def theoretical_gain(g: Array, grad_j: Array, phi: Array, eps: float) -> Array:
+    """Exact gain J(w - eps g) - J(w) via eq. 13 (quadratic => exact).
+
+    Args:
+      g:      (n,) the agent's stochastic gradient.
+      grad_j: (n,) the true gradient grad J(w).
+      phi:    (n, n) the true second moment Phi = E_d phi phi^T  (hess J = 2 Phi).
+      eps:    stepsize.
+    """
+    return -eps * (g @ grad_j) + eps**2 * (g @ (phi @ g))
+
+
+def practical_gain(g: Array, phi_hat: Array, eps: float) -> Array:
+    """Eq. 15: model-free gain estimate from local data only (materialized Phi_hat).
+
+    gain_hat = -eps ||g||^2 + eps^2 g^T Phi_hat g.
+    """
+    return -eps * (g @ g) + eps**2 * (g @ (phi_hat @ g))
+
+
+def practical_gain_streaming(g: Array, phi_t: Array, eps: float) -> Array:
+    """Eq. 15 in the O(T n) streaming form of footnote 2.
+
+    g^T Phi_hat g = (1/T) sum_t (phi_t^T g)^2, so the n x n matrix is never
+    formed.  ``repro.kernels.gain`` provides the fused TPU version.
+    """
+    T = phi_t.shape[0]
+    proj = phi_t @ g  # (T,)
+    return -eps * (g @ g) + eps**2 * jnp.sum(proj**2) / T
+
+
+def gain_norm_only(g: Array, eps: float) -> Array:
+    """Remark 4 strawman: 'large gradient norm == informative'.
+
+    Used as an ablation baseline; the paper (citing [15], [16]) notes this is
+    not necessarily communication-efficient because it ignores curvature.
+    """
+    return -eps * (g @ g)

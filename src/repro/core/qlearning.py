@@ -1,0 +1,104 @@
+"""Q-function extension (paper Remark 1).
+
+The paper notes its approach "can also be extended to learn a Q-function
+approximation but this is not further discussed due to limited space".
+This module supplies that extension for the finite-MDP case: linear
+Q-function approximation over state-action features
+
+    Q(x, a) ~= w . phi(x, a),      phi(x, a) = e_{(x,a)}  (tabular here)
+
+with the *expected-SARSA* Bellman target for a fixed policy pi:
+
+    target(x, a) = c(x, a) + gamma * E_{x+|x,a} E_{a+ ~ pi(.|x+)} Q(x+, a+),
+
+fitted by exactly the same gated SGD machinery (eq. 5/6/9/15): the agents'
+samplers emit (phi(x,a), target) tuples, so ``run_gated_sgd`` and Theorem 1
+apply verbatim — the extension is the *problem construction*, not a new
+algorithm, which is presumably why the paper could omit it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vfa as vfa_lib
+from repro.envs.gridworld import GridWorld
+
+Array = jax.Array
+
+
+def q_dimension(gw: GridWorld) -> int:
+    return gw.num_states * gw.num_actions
+
+
+def _sa_index(gw: GridWorld, s, a):
+    return s * gw.num_actions + a
+
+
+def exact_q(gw: GridWorld, policy: np.ndarray | None = None) -> np.ndarray:
+    """Exact Q_pi via the exact V_pi: Q(s,a) = c(s) + gamma sum P(s'|s,a) V(s')."""
+    v = gw.exact_value(policy)
+    P = gw.transition_matrix()
+    c = gw.cost_vector()
+    q = c[:, None] + gw.gamma * np.einsum("sat,t->sa", P, v)
+    goal = gw._idx(*gw.goal)
+    q[goal, :] = 0.0
+    return q.reshape(-1)
+
+
+def bellman_q_update(gw: GridWorld, q_current: np.ndarray,
+                     policy: np.ndarray | None = None) -> np.ndarray:
+    """Exact expected-SARSA operator on a Q table (flattened (S*A,))."""
+    policy = gw.uniform_policy() if policy is None else policy
+    P = gw.transition_matrix()
+    c = gw.cost_vector()
+    q = q_current.reshape(gw.num_states, gw.num_actions)
+    v_next = np.einsum("ta,ta->t", policy, q)          # E_{a+}[Q(x+, a+)]
+    upd = c[:, None] + gw.gamma * np.einsum("sat,t->sa", P, v_next)
+    goal = gw._idx(*gw.goal)
+    upd[goal, :] = 0.0
+    return upd.reshape(-1)
+
+
+def q_problem(gw: GridWorld, q_current: np.ndarray) -> vfa_lib.VFAProblem:
+    """Population problem (3) for one expected-SARSA update, uniform d over
+    state-action pairs, tabular phi."""
+    n = q_dimension(gw)
+    return vfa_lib.VFAProblem(
+        phi_matrix=jnp.eye(n),
+        d_weights=jnp.full((n,), 1.0 / n),
+        targets=jnp.asarray(bellman_q_update(gw, q_current)),
+        gamma=gw.gamma,
+    )
+
+
+def make_q_sampler(gw: GridWorld, q_current: Array,
+                   num_samples: int) -> Callable[[Array], tuple[Array, Array]]:
+    """sampler(rng) -> (phi_t (T, S*A), targets_t (T,)).
+
+    Draws (x, a) ~ Uniform, x+ ~ P(.|x,a), a+ ~ pi(.|x+); the sampled target
+    is c(x,a) + gamma * Q_cur(x+, a+) (zero at the absorbing goal).
+    """
+    P = jnp.asarray(gw.transition_matrix())
+    c = jnp.asarray(gw.cost_vector())
+    policy = jnp.asarray(gw.uniform_policy())
+    S, A = gw.num_states, gw.num_actions
+    goal = gw._idx(*gw.goal)
+
+    def sampler(rng: Array) -> tuple[Array, Array]:
+        r_s, r_a, r_n, r_an = jax.random.split(rng, 4)
+        s = jax.random.randint(r_s, (num_samples,), 0, S)
+        a = jax.random.randint(r_a, (num_samples,), 0, A)
+        s_next = jax.random.categorical(r_n, jnp.log(P[s, a] + 1e-30), axis=-1)
+        a_next = jax.random.categorical(r_an, jnp.log(policy[s_next] + 1e-30), axis=-1)
+        q_next = q_current[s_next * A + a_next]
+        targets = c[s] + gw.gamma * q_next
+        targets = jnp.where(s == goal, 0.0, targets)
+        phi_t = jax.nn.one_hot(s * A + a, S * A)
+        return phi_t, targets
+
+    return sampler

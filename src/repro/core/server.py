@@ -1,0 +1,37 @@
+"""Server-side aggregation (paper eq. 6), generalized to m agents.
+
+The paper writes the two-agent case explicitly; the natural m-agent form it
+analyzes (average over transmitters, no-op when nobody transmits) is
+
+    w_{k+1} = w_k - eps * ( sum_i alpha_i g_i ) / max( sum_i alpha_i, 1 ).
+
+This file holds the *centralized* (single-controller) form used by the
+faithful reproduction; the SPMD per-device form for large-model training is
+``repro.core.fed_sgd.gated_psum_mean``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def aggregate(grads: Array, alphas: Array) -> Array:
+    """Masked mean over transmitting agents.
+
+    Args:
+      grads:  (m, n) per-agent stochastic gradients.
+      alphas: (m,) 0/1 transmit decisions.
+    Returns:
+      (n,) aggregated direction (zeros if nobody transmits).
+    """
+    num_tx = jnp.sum(alphas)
+    summed = jnp.einsum("m,mn->n", alphas, grads)
+    return summed / jnp.maximum(num_tx, 1.0)
+
+
+def server_update(w: Array, grads: Array, alphas: Array, eps: float) -> Array:
+    """Eq. 6: one server step given all agents' gradients and decisions."""
+    return w - eps * aggregate(grads, alphas)

@@ -1,0 +1,77 @@
+"""Communication triggers and threshold schedules (paper eq. 9, 16).
+
+Transmit decision (eq. 9):   alpha_k = 1  iff  gain_k <= -lambda_k,
+with the geometric schedule used throughout the proof (eq. 16):
+
+    lambda_k = lambda / (N * rho^(N - 1 - k)),   rho in (0, 1).
+
+(The display eq. 9 omits the 1/N that the performance metric (8) and the
+proof both carry; we use the proof-consistent version and expose
+``include_horizon_norm=False`` to recover the display form.)
+
+The schedule *decays*: at k=0 the threshold is huge (only very informative
+updates pass), at k=N-1 it is lambda/N (almost everything passes) — matching
+the paper's §III intuition.
+
+Assumption checkers (2 and 3) live here too since they constrain (eps, rho).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TriggerConfig:
+    lam: float                      # communication price lambda > 0 (metric 8)
+    rho: float                      # decay parameter in (0, 1), Assumption 3
+    num_iterations: int             # horizon N
+    include_horizon_norm: bool = True  # divide by N (proof form) or not (eq. 9 display)
+
+    def threshold(self, k: Array | int) -> Array:
+        """lambda_k for iteration(s) k (0-based)."""
+        norm = self.num_iterations if self.include_horizon_norm else 1.0
+        exponent = self.num_iterations - 1 - jnp.asarray(k)
+        return self.lam / (norm * self.rho**exponent)
+
+    def schedule(self) -> Array:
+        """(N,) vector of thresholds lambda_0..lambda_{N-1}."""
+        return self.threshold(jnp.arange(self.num_iterations))
+
+
+def should_transmit(gain: Array, threshold: Array) -> Array:
+    """Eq. 9: alpha = 1 iff the (negative-is-good) gain clears -threshold."""
+    return (gain <= -threshold).astype(jnp.float32)
+
+
+def check_assumption_2(eps: float, phi_eigs: Array) -> bool:
+    """|1 - 2 eps lambda_i(Phi)| < 1 for all eigenvalues (eq. 10)."""
+    return bool(jnp.all(jnp.abs(1.0 - 2.0 * eps * phi_eigs) < 1.0))
+
+
+def check_assumption_3(rho: float, eps: float, phi_eigs: Array) -> bool:
+    """rho >= max_i (1 - 2 eps lambda_i(Phi))^2 (eq. 11)."""
+    return bool(rho >= float(jnp.max((1.0 - 2.0 * eps * phi_eigs) ** 2)) - 1e-12)
+
+
+def theorem1_bound(
+    lam: float,
+    rho: float,
+    eps: float,
+    num_iterations: int,
+    j_w0: float,
+    j_wstar: float,
+    trace_phi_g: float,
+) -> float:
+    """Right-hand side of Theorem 1 (eq. 12).
+
+    E[ lam * comm_rate + J(w_N) ] <= lam + J(w*) + rho^N (J(w0) - J(w*))
+                                     + (1 - rho^N)/(1 - rho) * eps^2 Tr(Phi G).
+    """
+    geo = (1.0 - rho**num_iterations) / (1.0 - rho)
+    return lam + j_wstar + rho**num_iterations * (j_w0 - j_wstar) + geo * eps**2 * trace_phi_g

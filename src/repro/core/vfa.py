@@ -1,0 +1,112 @@
+"""Linear value-function approximation (paper §II).
+
+The paper fits ``V_updated(x) ~= sum_i w_i phi_i(x)`` by minimizing the
+squared Bellman-target regression loss (eq. 3)
+
+    J(w) = E_d [ (target(x) - w^T phi(x))^2 ],
+    target(x) = c(x, pi(x)) + gamma * E[ V_current(x_+) | x ].
+
+Conventions (documented deviations from the paper's typography):
+
+* eq. (5) as printed omits the factor 2 of the true gradient and sums
+  ``t = 0..T`` (T+1 terms) with a 1/T normalizer.  The proof of Theorem 1
+  uses ``E g = grad J(w) = 2 Phi (w - w*)``, i.e. treats the estimate as
+  unbiased for the *true* gradient.  We therefore define the stochastic
+  gradient with the factor 2 and a clean 1/T over T samples, so that
+  ``E[g_hat] = grad J`` exactly and all Assumptions/Theorem constants
+  (2*eps*lambda_i(Phi) etc.) hold as written.
+* ``Phi := E_d phi(x) phi(x)^T`` (the paper's second-moment matrix), so
+  ``hess J = 2 Phi``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+FeatureMap = Callable[[Array], Array]  # (batch, state_dim) -> (batch, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class VFAProblem:
+    """A fixed instance of problem (3): features + second moment + targets.
+
+    ``phi_matrix``/``targets`` describe the *population* problem when the
+    state space is finite (exact J available); for continuous spaces they
+    are Monte-Carlo stand-ins used only by diagnostics.
+    """
+
+    phi_matrix: Array        # (num_states_or_samples, n) feature matrix under d
+    d_weights: Array         # (num_states_or_samples,) probability weights of d
+    targets: Array           # (num_states_or_samples,) Bellman targets
+    gamma: float
+
+    @property
+    def n(self) -> int:
+        return int(self.phi_matrix.shape[-1])
+
+    def second_moment(self) -> Array:
+        """Phi = E_d phi phi^T  (Assumption 1 requires this PD)."""
+        return jnp.einsum("s,si,sj->ij", self.d_weights, self.phi_matrix, self.phi_matrix)
+
+    def objective(self, w: Array) -> Array:
+        """Exact J(w) under the population distribution d."""
+        resid = self.phi_matrix @ w - self.targets
+        return jnp.sum(self.d_weights * resid**2)
+
+    def grad(self, w: Array) -> Array:
+        """Exact grad J(w) = 2 E_d[ phi (w^T phi - target) ]."""
+        resid = self.phi_matrix @ w - self.targets
+        return 2.0 * jnp.einsum("s,si->i", self.d_weights * resid, self.phi_matrix)
+
+    def optimum(self) -> Array:
+        """w* solving (3): Phi w = E_d[phi * target]."""
+        phi = self.second_moment()
+        b = jnp.einsum("s,si->i", self.d_weights * self.targets, self.phi_matrix)
+        return jnp.linalg.solve(phi, b)
+
+    def check_assumption_1(self, tol: float = 1e-9) -> bool:
+        eigs = jnp.linalg.eigvalsh(self.second_moment())
+        return bool(jnp.min(eigs) > tol)
+
+    def max_stable_stepsize(self) -> float:
+        """Sufficient condition of Assumption 2: eps < 2 / (2*lambda_max) = 1/lambda_max.
+
+        Assumption 2 is |1 - 2 eps lambda_i(Phi)| < 1  for all i, i.e.
+        0 < eps < 1 / lambda_max(Phi) under our factor-2 gradient convention.
+        """
+        lam_max = jnp.max(jnp.linalg.eigvalsh(self.second_moment()))
+        return float(1.0 / lam_max)
+
+    def min_rho(self, eps: float) -> float:
+        """Assumption 3 lower bound: rho >= max_i (1 - 2 eps lambda_i(Phi))^2."""
+        eigs = jnp.linalg.eigvalsh(self.second_moment())
+        return float(jnp.max((1.0 - 2.0 * eps * eigs) ** 2))
+
+
+def stochastic_gradient(w: Array, phi_t: Array, targets_t: Array) -> Array:
+    """Eq. (5) with the unbiasedness convention: g = (2/T) sum_t phi_t (w.phi_t - y_t).
+
+    Args:
+      w:         (n,) current weights.
+      phi_t:     (T, n) features of the T local samples.
+      targets_t: (T,) sampled Bellman targets c_t + gamma * V_current(x_plus_t).
+    """
+    resid = phi_t @ w - targets_t
+    T = phi_t.shape[0]
+    return (2.0 / T) * (phi_t.T @ resid)
+
+
+def empirical_second_moment(phi_t: Array) -> Array:
+    """Phi_hat = (1/T) sum_t phi_t phi_t^T  (eq. 14, the local Hessian/2 estimate)."""
+    T = phi_t.shape[0]
+    return (phi_t.T @ phi_t) / T
+
+
+def bellman_targets(costs: Array, v_next: Array, gamma: float) -> Array:
+    """target_t = c_t + gamma * V_current(x_plus_t)   (sampled eq. 1 RHS)."""
+    return costs + gamma * v_next

@@ -1,0 +1,4 @@
+"""Data pipelines: synthetic LM token streams (framework layer) and RL
+transition batching (faithful layer; samplers live on the env classes)."""
+
+from repro.data.synthetic_lm import SyntheticLMConfig, make_lm_batch, lm_batch_specs  # noqa: F401

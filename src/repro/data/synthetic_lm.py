@@ -1,0 +1,65 @@
+"""Deterministic synthetic language-model data pipeline.
+
+Produces next-token-prediction batches with a reproducible, shardable
+generator: token streams are a fixed-seed Markov-ish mixture (zipfian
+unigram + positional drift) so losses are non-degenerate (better than
+uniform-random tokens for optimizer behaviour) while requiring no files.
+
+Batches are `{"tokens": (B, L) int32, "targets": (B, L) int32,
+"mask": (B, L) f32}` — targets are tokens shifted left, final position
+masked.  For multimodal backbones (vlm/audio), the embedding-stub frontends
+in `repro.models.frontends` replace a prefix of token embeddings; the
+pipeline emits the extra embedding tensor in those cases (see
+`repro.launch.specs.input_specs`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    zipf_exponent: float = 1.1
+
+
+def _zipf_logits(vocab: int, exponent: float) -> Array:
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -exponent * jnp.log(ranks)
+
+
+def make_lm_batch(cfg: SyntheticLMConfig, rng: Array, step: int | Array = 0) -> dict[str, Array]:
+    """One deterministic global batch for `step` (host-shardable by slicing B)."""
+    rng = jax.random.fold_in(rng, step)
+    r_tok, r_shift = jax.random.split(rng)
+    logits = _zipf_logits(cfg.vocab_size, cfg.zipf_exponent)
+    tokens = jax.random.categorical(
+        r_tok, logits, shape=(cfg.global_batch, cfg.seq_len)
+    ).astype(jnp.int32)
+    # positional drift: make later positions statistically distinct so the
+    # model has signal to fit (prevents trivially flat loss curves)
+    drift = (jnp.arange(cfg.seq_len, dtype=jnp.int32) // 64) % 7
+    tokens = (tokens + drift[None, :]) % cfg.vocab_size
+    shift = jax.random.randint(r_shift, (cfg.global_batch, 1), 0, 7, dtype=jnp.int32)
+    tokens = (tokens + shift) % cfg.vocab_size
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones((cfg.global_batch, cfg.seq_len), jnp.float32).at[:, -1].set(0.0)
+    return {"tokens": tokens, "targets": targets, "mask": mask}
+
+
+def lm_batch_specs(cfg: SyntheticLMConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    B, L = cfg.global_batch, cfg.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((B, L), jnp.float32),
+    }

@@ -1,0 +1,4 @@
+"""RL environments for the faithful reproduction (paper §V)."""
+
+from repro.envs.gridworld import GridWorld  # noqa: F401
+from repro.envs.linear_system import LinearSystem  # noqa: F401

@@ -1,0 +1,141 @@
+"""Grid exploration MDP (paper §V, Fig. 2).
+
+A finite H x W grid.  The agent moves in four directions subject to boundary
+clamping; the goal cell G is absorbing with zero cost; every other step costs
+1, so with gamma = 1 the value function of a policy is the expected time to
+reach the goal.  Along the *top row* there is a 50% disturbance pushing the
+agent one cell to the right regardless of the intended action ("50%
+uncertainty in transitions to the right at top row").
+
+Features are tabular indicators phi(s) = e_s, so the weight vector *is* the
+value table and Assumption 1 holds whenever d puts mass on every state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vfa as vfa_lib
+
+Array = jax.Array
+
+ACTIONS = np.array([(-1, 0), (1, 0), (0, -1), (0, 1)])  # up, down, left, right
+
+
+@dataclasses.dataclass(frozen=True)
+class GridWorld:
+    height: int = 5
+    width: int = 5
+    goal: tuple[int, int] = (4, 4)
+    wind_prob: float = 0.5   # top-row disturbance probability
+    gamma: float = 1.0
+
+    @property
+    def num_states(self) -> int:
+        return self.height * self.width
+
+    @property
+    def num_actions(self) -> int:
+        return 4
+
+    def _idx(self, r: int, c: int) -> int:
+        return r * self.width + c
+
+    def transition_matrix(self) -> np.ndarray:
+        """P[s, a, s'] with boundary clamping, absorbing goal, top-row wind."""
+        S, A = self.num_states, self.num_actions
+        P = np.zeros((S, A, S))
+        goal = self._idx(*self.goal)
+        for r in range(self.height):
+            for c in range(self.width):
+                s = self._idx(r, c)
+                if s == goal:
+                    P[s, :, s] = 1.0  # absorbing
+                    continue
+                for a, (dr, dc) in enumerate(ACTIONS):
+                    nr = min(max(r + dr, 0), self.height - 1)
+                    nc = min(max(c + dc, 0), self.width - 1)
+                    intended = self._idx(nr, nc)
+                    if r == 0:  # top row: wind pushes right with prob wind_prob
+                        wc = min(nc + 1, self.width - 1)
+                        windy = self._idx(nr, wc)
+                        P[s, a, intended] += 1.0 - self.wind_prob
+                        P[s, a, windy] += self.wind_prob
+                    else:
+                        P[s, a, intended] = 1.0
+        return P
+
+    def cost_vector(self) -> np.ndarray:
+        """c(s) = 1 everywhere except the absorbing goal (time-to-goal)."""
+        c = np.ones(self.num_states)
+        c[self._idx(*self.goal)] = 0.0
+        return c
+
+    def uniform_policy(self) -> np.ndarray:
+        """pi[s, a]: randomize over all actions at each state (paper's policy)."""
+        return np.full((self.num_states, self.num_actions), 1.0 / self.num_actions)
+
+    # -- exact quantities ---------------------------------------------------
+
+    def policy_transition(self, policy: np.ndarray | None = None) -> np.ndarray:
+        policy = self.uniform_policy() if policy is None else policy
+        return np.einsum("sa,sat->st", policy, self.transition_matrix())
+
+    def exact_value(self, policy: np.ndarray | None = None) -> np.ndarray:
+        """V_pi: expected (gamma-discounted) time to goal; exact linear solve.
+
+        With gamma = 1 the goal is absorbing and cost-free, so restricting the
+        system to non-goal states makes (I - P) invertible (proper policy).
+        """
+        P = self.policy_transition(policy)
+        c = self.cost_vector()
+        goal = self._idx(*self.goal)
+        keep = np.arange(self.num_states) != goal
+        A = np.eye(keep.sum()) - self.gamma * P[np.ix_(keep, keep)]
+        v = np.zeros(self.num_states)
+        v[keep] = np.linalg.solve(A, c[keep])
+        return v
+
+    def bellman_update(self, v_current: np.ndarray, policy: np.ndarray | None = None) -> np.ndarray:
+        """Exact eq. (1): V_upd(s) = c_pi(s) + gamma * (P_pi V_cur)(s)."""
+        P = self.policy_transition(policy)
+        return self.cost_vector() + self.gamma * P @ v_current
+
+    def vfa_problem(self, v_current: np.ndarray) -> vfa_lib.VFAProblem:
+        """Population problem (3) for one Bellman update, uniform d, tabular phi."""
+        S = self.num_states
+        return vfa_lib.VFAProblem(
+            phi_matrix=jnp.eye(S),
+            d_weights=jnp.full((S,), 1.0 / S),
+            targets=jnp.asarray(self.bellman_update(v_current)),
+            gamma=self.gamma,
+        )
+
+    # -- sampling (jax-pure, used by Algorithm 1's agents) -------------------
+
+    def make_sampler(self, v_current: Array, num_samples: int) -> Callable[[Array], tuple[Array, Array]]:
+        """sampler(rng) -> (phi_t (T,S), targets_t (T,)) per paper §II-B.
+
+        Draws x ~ Uniform(X), a ~ pi(.|x), x+ ~ P(.|x,a); the sampled Bellman
+        target is c(x,a) + gamma * V_current(x+)  (costs are state-only here).
+        """
+        P = jnp.asarray(self.transition_matrix())      # (S, A, S)
+        c = jnp.asarray(self.cost_vector())            # (S,)
+        S = self.num_states
+
+        def sampler(rng: Array) -> tuple[Array, Array]:
+            r_x, r_a, r_n = jax.random.split(rng, 3)
+            x = jax.random.randint(r_x, (num_samples,), 0, S)
+            a = jax.random.randint(r_a, (num_samples,), 0, self.num_actions)
+            logits = jnp.log(P[x, a] + 1e-30)
+            x_next = jax.random.categorical(r_n, logits, axis=-1)
+            targets = c[x] + self.gamma * v_current[x_next]
+            phi_t = jax.nn.one_hot(x, S)
+            return phi_t, targets
+
+        return sampler

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  gain            — the paper's O(Tn) practical-gain matvec (eq. 15)
+  flash_attention — blockwise online-softmax attention (GQA + SWA)
+  ssd_scan        — Mamba2 SSD intra-chunk tile (state-space duality)
+
+Each has a pure-jnp oracle in ref.py and jit'd wrappers in ops.py;
+validated with interpret=True on CPU (TPU is the target hardware).
+"""
+
+from repro.kernels import ops  # noqa: F401

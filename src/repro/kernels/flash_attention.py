@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (blockwise online softmax) with GQA + sliding
+window — the hardware-target version of ``repro.models.attention``'s
+chunked_attention recurrence.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks).  TPU executes the grid
+sequentially, so the innermost kv dimension acts as a reduction loop whose
+running max / normalizer / accumulator live in VMEM scratch and persist
+across kv iterations; they are initialized at kv==0 and the output block is
+written at the last kv step.  Block sizes default to (128, 512): the
+working set  q(128 x d) + k,v(512 x d) + p(128 x 512)  is ~1 MB at d=128 —
+comfortably inside the ~16 MB VMEM budget, with all matmul dims multiples
+of the 128-lane MXU.
+
+GQA is handled in the index_map (kv head = h // group); the causal and
+sliding-window masks are applied from absolute positions derived from the
+block indices, matching repro.kernels.ref.flash_attention_ref exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+
+    s = q @ k.T                                          # (bq, bk) MXU
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len                                # padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> Array:
+    """q: (B, Lq, H, d); k/v: (B, Lk, KVH, d), KVH | H.  Returns (B, Lq, H, d).
+
+    Layout inside the kernel is (B, H, L, d) for contiguous (L, d) tiles.
+    """
+    B, Lq, H, D = q.shape
+    Lk, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+
+    bq = min(block_q, max(Lq, 8))
+    bk = min(block_k, max(Lk, 8))
+    pad_q = (-Lq) % bq
+    pad_k = (-Lk) % bk
+
+    qt = jnp.moveaxis(q, 2, 1)                           # (B, H, Lq, d)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Lqp, Lkp = Lq + pad_q, Lk + pad_k
+
+    grid = (B, H, Lqp // bq, Lkp // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=D**-0.5, causal=causal, window=window,
+        block_q=bq, block_k=bk, kv_len=Lk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running normalizer l
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :Lq, :], 1, 2)     # back to (B, Lq, H, d)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the paper's practical-gain hot spot (eq. 15).
+
+The O(T n) quantity is ``proj_t = phi_t . g`` followed by ``sum_t proj_t^2``;
+footnote 2 of the paper promises O(T n) per agent and this kernel delivers it
+without ever materializing ``Phi_hat = (1/T) sum phi phi^T`` (n x n) in HBM.
+
+Tiling: grid (T_tiles, n_tiles); each program multiplies a (BT x BN) VMEM
+tile of the feature matrix against a (BN,) slice of the gradient and
+accumulates into the (BT,) projection block — n_tiles is the sequential
+reduction dimension (TPU grids execute in order, so revisiting the same
+output block accumulates in VMEM).  BT=256, BN=512 keeps the working set
+~0.6 MB, far under the ~16 MB VMEM budget, and both are multiples of the
+(8,128) f32 tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_T = 256
+BLOCK_N = 512
+
+
+def _matvec_kernel(phi_ref, g_ref, out_ref):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    phi = phi_ref[...].astype(jnp.float32)      # (BT, BN)
+    g = g_ref[...].astype(jnp.float32)          # (1, BN)
+    out_ref[...] += phi @ g[0, :, None]         # (BT, 1) accumulate
+
+
+def gain_matvec(phi: Array, g: Array, *, interpret: bool = True,
+                block_t: int = BLOCK_T, block_n: int = BLOCK_N) -> Array:
+    """proj = phi @ g via the tiled kernel.  phi: (T, n); g: (n,) -> (T,)."""
+    T, n = phi.shape
+    bt = min(block_t, T)
+    bn = min(block_n, n)
+    pad_t = (-T) % bt
+    pad_n = (-n) % bn
+    if pad_t or pad_n:
+        phi = jnp.pad(phi, ((0, pad_t), (0, pad_n)))
+        g = jnp.pad(g, (0, pad_n))
+    Tp, np_ = phi.shape
+    grid = (Tp // bt, np_ // bn)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bn), lambda ti, ni: (ti, ni)),
+            pl.BlockSpec((1, bn), lambda ti, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda ti, ni: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, 1), jnp.float32),
+        interpret=interpret,
+    )(phi, g[None, :])
+    return out[:T, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def practical_gain(phi: Array, g: Array, eps: float = 1.0,
+                   interpret: bool = True) -> Array:
+    """Full eq.-15 gain: -eps ||g||^2 + eps^2 (1/T) sum_t (phi_t . g)^2."""
+    proj = gain_matvec(phi, g, interpret=interpret)
+    gf = g.astype(jnp.float32)
+    return -eps * (gf @ gf) + eps**2 * jnp.sum(proj**2) / phi.shape[0]

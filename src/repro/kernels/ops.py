@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the kernels are written for TPU BlockSpec tiling and validated here through
+the interpreter against the pure-jnp oracles in ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gain import gain_matvec as _gain_matvec
+from repro.kernels.gain import practical_gain as _practical_gain
+from repro.kernels.ssd_scan import ssd_chunked_pallas as _ssd
+
+Array = jax.Array
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 512) -> Array:
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=_default_interpret())
+
+
+@jax.jit
+def gain_matvec(phi: Array, g: Array) -> Array:
+    return _gain_matvec(phi, g, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def practical_gain(phi: Array, g: Array, eps: float = 1.0) -> Array:
+    return _practical_gain(phi, g, eps=eps, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(xh: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+                chunk: int = 128):
+    return _ssd(xh, dt, a, b_mat, c_mat, chunk=chunk,
+                interpret=_default_interpret())

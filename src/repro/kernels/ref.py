@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the semantics; the kernels are the TPU-tiled implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gain_matvec_ref(phi: Array, g: Array) -> Array:
+    """proj_t = phi_t . g   — the O(Tn) core of the practical gain (eq. 15)."""
+    return (phi.astype(jnp.float32) @ g.astype(jnp.float32)).astype(jnp.float32)
+
+
+def practical_gain_ref(phi: Array, g: Array, eps: float) -> Array:
+    proj = gain_matvec_ref(phi, g)
+    gf = g.astype(jnp.float32)
+    return -eps * (gf @ gf) + eps**2 * jnp.sum(proj**2) / phi.shape[0]
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0) -> Array:
+    """q: (B, Lq, H, d); k/v: (B, Lk, KVH, d) with KVH | H (GQA)."""
+    B, Lq, H, D = q.shape
+    Lk, KVH = k.shape[1], k.shape[2]
+    if KVH != H:
+        k = jnp.repeat(k, H // KVH, axis=2)
+        v = jnp.repeat(v, H // KVH, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D**-0.5
+    qp = jnp.arange(Lq)[:, None]
+    kp = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_ref(dtx: Array, cum: Array, b: Array, c: Array) -> tuple[Array, Array]:
+    """Intra-chunk SSD tile oracle (one batch row, one head, one chunk).
+
+    dtx: (Q, P) decayed inputs; cum: (Q,) inclusive cumsum of log-decay;
+    b/c: (Q, N).  Returns (y_intra (Q, P), state (N, P)) where
+
+      y[i]  = sum_{j<=i} (c_i . b_j) exp(cum_i - cum_j) dtx_j
+      state = sum_j exp(cum_Q - cum_j) b_j (x) dtx_j
+    """
+    Q = dtx.shape[0]
+    seg = cum[:, None] - cum[None, :]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, seg, -jnp.inf)), 0.0)
+    gbc = (c.astype(jnp.float32) @ b.astype(jnp.float32).T) * decay
+    y = gbc @ dtx.astype(jnp.float32)
+    w = jnp.exp(cum[-1] - cum)
+    state = (b.astype(jnp.float32) * w[:, None]).T @ dtx.astype(jnp.float32)
+    return y.astype(dtx.dtype), state.astype(jnp.float32)

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk tile (arXiv:2405.21060 §6).
+
+This is the compute hot-spot of the chunked state-space-duality algorithm:
+for every (batch, chunk, head) the tile computes
+
+    y[i]  = sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * dtx_j      (Q x P)
+    state = sum_j exp(cum_Q - cum_j) * B_j (x) dtx_j                 (N x P)
+
+as two MXU matmuls plus elementwise decay weighting, entirely in VMEM —
+the (Q x Q) 1-semiseparable decay matrix exists only inside the tile,
+never in HBM.  That is the TPU-native adaptation of the CUDA kernel: the
+GPU version tiles over warps; here the tile IS the VMEM block and the MXU
+consumes the (Q x Q) @ (Q x P) product directly.  The inter-chunk state
+recurrence (a ~L/Q-step scan) stays in XLA — it is tiny and bandwidth-bound.
+
+Grid: (B, nc, H).  Default Q=128, N<=256, P<=128: working set
+Q*Q + Q*(N+P) + N*P floats ~= 0.2 MB, far inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(dtx_ref, cum_ref, b_ref, c_ref, y_ref, state_ref):
+    dtx = dtx_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    cum = cum_ref[0, 0].astype(jnp.float32)          # (Q, 1)... stored (Q,1)
+    b = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                 # (Q, N)
+    Q = dtx.shape[0]
+
+    seg = cum - cum.T                                # (Q, Q) = cum_i - cum_j
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = col <= row
+    decay = jnp.exp(jnp.where(tril, seg, NEG_INF))   # masked before exp
+
+    gbc = (c @ b.T) * decay                          # (Q, Q) MXU + VPU
+    y_ref[0, 0] = (gbc @ dtx).astype(y_ref.dtype)    # (Q, P) MXU
+
+    w = jnp.exp(cum[-1:] - cum.T)                    # (1, Q) suffix decays
+    state_ref[0, 0] = ((b * w.T).T @ dtx).astype(state_ref.dtype)  # (N, P)
+
+
+def ssd_chunk_tiles(
+    dtx: Array,      # (B, nc, Q, H, P)
+    cum: Array,      # (B, nc, Q, H)
+    b_mat: Array,    # (B, nc, Q, N)
+    c_mat: Array,    # (B, nc, Q, N)
+    *, interpret: bool = True,
+) -> tuple[Array, Array]:
+    """All intra-chunk outputs + per-chunk states, tiled per (B, nc, H).
+
+    Returns (y_intra (B, nc, Q, H, P), states (B, nc, H, N, P)).
+    """
+    B, nc, Q, H, P = dtx.shape
+    N = b_mat.shape[-1]
+    # kernel-friendly layout: head-major (B, nc, H, Q, ...)
+    dtx_t = jnp.moveaxis(dtx, 3, 2).reshape(B * nc, H, Q, P)
+    cum_t = jnp.moveaxis(cum, 3, 2).reshape(B * nc, H, Q, 1)
+    b_t = b_mat.reshape(B * nc, Q, N)
+    c_t = c_mat.reshape(B * nc, Q, N)
+
+    grid = (B * nc, H)
+    y, states = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nc, H, Q, P), dtx.dtype),
+            jax.ShapeDtypeStruct((B * nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dtx_t, cum_t, b_t, c_t)
+    y = jnp.moveaxis(y.reshape(B, nc, H, Q, P), 2, 3)            # (B,nc,Q,H,P)
+    states = states.reshape(B, nc, H, N, P)
+    return y, states
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(
+    xh: Array,        # (B, L, H, P)
+    dt: Array,        # (B, L, H)
+    a: Array,         # (H,)
+    b_mat: Array,     # (B, L, N)
+    c_mat: Array,     # (B, L, N)
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Drop-in replacement for repro.models.ssm.ssd_chunked using the Pallas
+    tile for the intra-chunk work; returns (y (B, L, H, P), final_state)."""
+    B, L, H, P = xh.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    Lp = xh.shape[1]
+    nc = Lp // Q
+
+    f32 = jnp.float32
+    xh_c = xh.reshape(B, nc, Q, H, P)
+    dt_c = dt.reshape(B, nc, Q, H).astype(f32)
+    b_c = b_mat.reshape(B, nc, Q, N)
+    c_c = c_mat.reshape(B, nc, Q, N)
+    log_a = dt_c * a[None, None, None, :]
+    cum = jnp.cumsum(log_a, axis=2)
+    total = cum[:, :, -1, :]
+    dtx = dt_c[..., None] * xh_c.astype(f32)
+
+    y_intra, s_chunk = ssd_chunk_tiles(dtx, cum, b_c, c_c, interpret=interpret)
+
+    def scan_fn(h_prev, inp):
+        s_c, tot_c = inp
+        h_new = jnp.exp(tot_c)[..., None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    states = (jnp.moveaxis(s_chunk.astype(f32), 1, 0), jnp.moveaxis(total, 1, 0))
+    h0 = jnp.zeros((B, H, N, P), f32)
+    h_final, h_before = jax.lax.scan(scan_fn, h0, states)
+    h_before = jnp.moveaxis(h_before, 0, 1)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", c_c.astype(f32),
+                         jnp.exp(cum), h_before)
+    y = (y_intra.astype(f32) + y_inter).reshape(B, Lp, H, P)[:, :L]
+    return y.astype(xh.dtype), h_final

@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+against ShapeDtypeStruct inputs — no allocation — and extract the roofline
+terms from the compiled artifact.
+
+The two lines above MUST stay the first statements in this module (before
+any jax-importing import): jax locks the device count on first init, and
+only the dry-run should ever see 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh single --out-dir experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.core.fed_sgd import FedConfig, FedStats
+from repro.launch import hlo_analysis
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_prefill_step, build_serve_step, build_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+# TPU v5e hardware model (assignment constants)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\(?[^()=]*?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"(pred|[sufb]\w*?\d+\w*)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective in the (per-device) module."""
+    per_op: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("rtype"))
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    total = sum(d["bytes"] for d in per_op.values())
+    return {"per_op": per_op, "total_bytes": total}
+
+
+def _cost_dict(compiled) -> dict:
+    """Raw XLA cost analysis (NOTE: while bodies counted once — kept only for
+    reference; the roofline uses hlo_analysis which scales trip counts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    keep = ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+    return {k: float(v) for k, v in dict(cost).items() if k in keep}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # some backends don't implement it
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(m, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(m)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens processed."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * n_active * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE counts top-k experts only)."""
+    d, ff, L, V = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    mlp_mults = 3 if cfg.mlp_activation == "swiglu" else 2
+    dense_mlp = mlp_mults * d * ff
+    moe_mlp = mlp_mults * d * ff * max(cfg.experts_per_token, 1)
+    d_inner = cfg.ssm_expand * d
+    mamba = (d * (d_inner + d_inner + 2 * cfg.ssm_state +
+                  d_inner // max(cfg.ssm_head_dim, 1)) + d_inner * d)
+    total = V * d  # embed (+ lm_head if untied)
+    if not cfg.tie_embeddings:
+        total += V * d
+    if cfg.arch_type == "ssm":
+        total += L * mamba
+        return total
+    if cfg.arch_type == "hybrid":
+        n_attn = L // cfg.attn_period
+        n_mamba = L - n_attn
+        n_moe = L // max(cfg.moe_period, 1)
+        n_dense = L - n_moe
+        total += n_attn * attn + n_mamba * mamba
+        total += n_moe * moe_mlp + n_dense * dense_mlp
+        return total
+    per_layer = attn + (moe_mlp if cfg.is_moe else dense_mlp)
+    total += L * per_layer
+    if cfg.is_encdec:
+        total += cfg.encoder_layers * (attn + dense_mlp)
+    return total
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention arch: 524k dense decode is quadratic; "
+                "skipped per DESIGN.md §6")
+    return None
+
+
+_MODEL_OVERRIDE_KEYS = {
+    "capacity_factor": float, "attn_chunk": int, "loss_chunk": int,
+    "remat": lambda v: v in ("1", "true", "True"), "dtype": str,
+    "decode_dense_attn": lambda v: v in ("1", "true", "True"),
+    "kv_cache_layout": str, "sliding_window": int,
+}
+_FED_OVERRIDE_KEYS = {
+    "estimator": str, "hvp_subsample": int, "agg_dtype": str,
+    "lam": float, "rho": float,
+}
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, fed: bool = True,
+             overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    model_over = {k: _MODEL_OVERRIDE_KEYS[k](v) for k, v in overrides.items()
+                  if k in _MODEL_OVERRIDE_KEYS}
+    fed_over = {k: _FED_OVERRIDE_KEYS[k](v) for k, v in overrides.items()
+                if k in _FED_OVERRIDE_KEYS}
+    if model_over:
+        cfg = _dc.replace(cfg, **model_over)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "fed": fed, "overrides": overrides,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    model = build_model(cfg)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        fed_kwargs = dict(eps=1.0, lam=1e-3 if fed else 0.0, rho=0.999,
+                          horizon=1000, estimator="hvp")
+        fed_kwargs.update(fed_over)
+        bundle = build_train_step(
+            model, cfg, mesh, adamw(1e-4),
+            fed_cfg=FedConfig(**fed_kwargs) if fed else None,
+        )
+        batch = ispec.train_batch_specs(cfg, shape)
+        lowered = bundle.step.lower(bundle.params_shape, bundle.opt_shape,
+                                    bundle.fed_shape, batch)
+    elif shape.kind == "prefill":
+        step, _ = build_prefill_step(model, cfg, mesh)
+        lowered = step.lower(
+            jax.eval_shape(model.init, jax.random.key(0)),
+            ispec.prefill_specs(cfg, shape),
+        )
+    else:  # decode
+        step, pspecs, cspecs, cache_shape = build_serve_step(model, cfg, mesh, shape)
+        d = ispec.decode_specs(cfg, shape, model)
+        lowered = step.lower(
+            jax.eval_shape(model.init, jax.random.key(0)),
+            cache_shape, d["token"], d["t"],
+        )
+
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    cost = _cost_dict(compiled)
+    mem = _memory_dict(compiled)
+    t2 = time.time()
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    record["analyze_s"] = round(time.time() - t2, 2)
+
+    # hlo_analysis numbers are PER DEVICE (the SPMD module is the per-device
+    # program); trip counts of scans are multiplied in.
+    flops = hlo["flops"]
+    traffic = hlo["traffic_bytes"]
+    coll_bytes = hlo["collective_bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = traffic / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    mf = model_flops(cfg, shape)
+
+    record.update({
+        "status": "ok",
+        "chips": chips,
+        "cost_analysis_raw": cost,
+        "memory": mem,
+        "collectives": {
+            "total_bytes": coll_bytes,
+            "counts": hlo["collective_counts"],
+        },
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                (("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)),
+                key=lambda kv: kv[1],
+            )[0],
+            "model_flops_global": mf,
+            "hlo_flops_per_device": flops,
+            "traffic_bytes_per_device": traffic,
+            "useful_flops_ratio": (mf / (flops * chips)) if flops else None,
+        },
+    })
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fed", action="store_true",
+                    help="lower the plain data-parallel step (no gain gating)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VAL",
+                    help="model/fed override for perf iterations "
+                         "(e.g. --set estimator=gnorm --set kv_cache_layout=seq)")
+    ap.add_argument("--tag", default="", help="suffix for the output filename")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    pairs = (
+        [(a, s) for a in ARCH_NAMES for s in SHAPES]
+        if args.all else [(args.arch, args.shape)]
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for arch, shape in pairs:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            if args.no_fed:
+                tag += "__nofed"
+            if args.tag:
+                tag += "__" + args.tag
+            out_path = os.path.join(args.out_dir, tag + ".json")
+            try:
+                rec = run_pair(arch, shape, multi, fed=not args.no_fed,
+                               overrides=overrides)
+            except Exception:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if multi else "single",
+                       "status": "error", "traceback": traceback.format_exc()}
+                failures += 1
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=2)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']} "
+                         f"c={r['compute_s']:.3e}s m={r['memory_s']:.3e}s "
+                         f"x={r['collective_s']:.3e}s "
+                         f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+            elif status == "skipped":
+                extra = f" ({rec['reason'][:60]}...)"
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

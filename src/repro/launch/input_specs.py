@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+One function per step kind; the dry-run lowers against these.  Multimodal
+configs get their stub frontend embeddings here — precomputed patch/frame
+embeddings of the right shape, per the assignment carve-out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        # prefix patches occupy num_prefix positions of the L-token budget
+        Lt = L - cfg.num_prefix
+        return {
+            "tokens": SDS((B, Lt), jnp.int32),
+            "targets": SDS((B, Lt), jnp.int32),
+            "mask": SDS((B, Lt), jnp.float32),
+            "prefix_emb": SDS((B, cfg.num_prefix, cfg.frontend_dim), jnp.float32),
+        }
+    specs = {
+        "tokens": SDS((B, L), jnp.int32),
+        "targets": SDS((B, L), jnp.int32),
+        "mask": SDS((B, L), jnp.float32),
+    }
+    if cfg.frontend == "audio":   # encoder frames (frontend stub output)
+        specs["prefix_emb"] = SDS((B, cfg.num_prefix, cfg.frontend_dim), jnp.float32)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = train_batch_specs(cfg, shape)
+    out = {"tokens": b["tokens"]}
+    if "prefix_emb" in b:
+        out["prefix_emb"] = b["prefix_emb"]
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model) -> dict:
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, B, shape.seq_len)
+    )
+    return {
+        "token": SDS((B,), jnp.int32),
+        "t": SDS((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def params_specs(model) -> dict:
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def concretize(tree, rng=None, int_fill=1):
+    """Turn a ShapeDtypeStruct tree into real (host-fitting) arrays — used by
+    smoke tests on reduced configs only."""
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.full(s.shape, int_fill, s.dtype)
+        return jnp.ones(s.shape, s.dtype)
+    return jax.tree.map(mk, tree)

@@ -1,0 +1,34 @@
+"""Production meshes (assignment §MULTI-POD DRY-RUN).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state — device counts are locked on first jax init, and only
+``dryrun.py`` (which sets XLA_FLAGS before any import) should ever see 512
+host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = jax.device_count()
+    data = n // model_axis
+    return jax.make_mesh(
+        (data, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def federation_axis(mesh) -> str:
+    """The paper's agent axis: cross-pod when present, else data (DESIGN §4)."""
+    return "pod" if "pod" in mesh.axis_names else "data"

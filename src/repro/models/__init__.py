@@ -1,0 +1,3 @@
+"""Model zoo: dense GQA, MoE, Mamba2 SSD, hybrid, enc-dec, multimodal backbones."""
+
+from repro.models.api import build_model  # noqa: F401

@@ -1,0 +1,28 @@
+"""Model factory: ModelConfig -> functional model object.
+
+Every model exposes the same surface:
+  init(rng) -> params
+  loss_fn(params, batch) -> (loss, metrics)            # train step core
+  prefill(params, tokens, prefix_emb) -> (logits, aux) # prefill shapes
+  init_cache(batch, seq_len) / decode_step(...)        # decode shapes
+  cache_len(seq_len)
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDec
+from repro.models.hybrid import HybridLM
+from repro.models.ssm_model import MambaLM
+from repro.models.transformer import Transformer
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return EncDec(cfg)
+    if cfg.arch_type == "ssm":
+        return MambaLM(cfg)
+    if cfg.arch_type == "hybrid":
+        return HybridLM(cfg)
+    # dense / moe / vlm (decoder-only with optional prefix embeddings)
+    return Transformer(cfg)

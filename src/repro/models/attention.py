@@ -1,0 +1,250 @@
+"""Attention: GQA with RoPE, sliding windows, KV caches.
+
+Two interchangeable inner implementations with identical semantics:
+
+* ``reference_attention`` — einsum + softmax, materializes (Lq, Lk) scores.
+  Used by unit tests and tiny smoke configs.
+* ``chunked_attention``   — pure-JAX online-softmax scan over KV chunks
+  ("flash in XLA"): peak memory O(Lq * chunk) instead of O(Lq * Lk), which is
+  what makes the 32k prefill and 500k sliding-window shapes lower within
+  HBM.  The Pallas TPU kernel (``repro.kernels.flash_attention``) is the
+  hardware-target version of the same recurrence and is validated against
+  ``reference_attention`` in the kernel tests.
+
+All entry points take explicit query/key positions so prefill (q_pos = k_pos
+= arange) and decode (q at position `t`, cache positions 0..S-1) share one
+masking rule:  visible iff  k_pos <= q_pos  and  (no window or
+k_pos > q_pos - window)  and  k_pos < valid_len.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def init_attention(rng: Array, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s_in = d_model**-0.5
+    s_out = (num_heads * head_dim) ** -0.5
+    from repro.models.layers import truncated_normal
+    return {
+        "wq": truncated_normal(k1, (d_model, num_heads, head_dim), s_in, dtype),
+        "wk": truncated_normal(k2, (d_model, num_kv_heads, head_dim), s_in, dtype),
+        "wv": truncated_normal(k3, (d_model, num_kv_heads, head_dim), s_in, dtype),
+        "wo": truncated_normal(k4, (num_heads, head_dim, d_model), s_out, dtype),
+    }
+
+
+def _expand_kv(k: Array, num_heads: int) -> Array:
+    """GQA: repeat kv heads to match query heads. (B, L, KV, hd) -> (B, L, H, hd)."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+def _mask(q_pos: Array, k_pos: Array, causal: bool, window: int,
+          valid_len: Array | None) -> Array:
+    """(..., Lq, Lk) boolean visibility."""
+    m = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if valid_len is not None:
+        m = m[None] & (k_pos[None, None, :] < valid_len[:, None, None])
+    return m
+
+
+def reference_attention(
+    q: Array, k: Array, v: Array,
+    q_pos: Array, k_pos: Array,
+    causal: bool = True, window: int = 0,
+    valid_len: Array | None = None,
+) -> Array:
+    """q: (B, Lq, H, hd); k/v: (B, Lk, KV, hd) -> (B, Lq, H, hd)."""
+    H, hd = q.shape[2], q.shape[3]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * hd**-0.5
+    mask = _mask(q_pos, k_pos, causal, window, valid_len)
+    mask = mask[:, None] if mask.ndim == 3 else mask[None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array,
+    q_pos: Array, k_pos: Array,
+    causal: bool = True, window: int = 0,
+    valid_len: Array | None = None,
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax scan over KV chunks; same semantics as reference."""
+    B, Lq, H, hd = q.shape
+    Lk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    chunk = min(chunk, Lk)
+    if Lk % chunk:
+        pad = chunk - Lk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        Lk += pad
+    n_chunks = Lk // chunk
+    k = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(n_chunks, chunk)
+
+    qf = q.astype(jnp.float32) * hd**-0.5
+
+    def body(carry, inp):
+        m, l, acc = carry                         # (B,H,Lq), (B,H,Lq), (B,H,Lq,hd)
+        k_c, v_c, kp_c = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c.astype(jnp.float32))
+        vis = _mask(q_pos, kp_c, causal, window, valid_len)
+        # padded KV slots carry the INT32_MAX sentinel; the causal mask hides
+        # them implicitly but non-causal attention must exclude them too
+        pad_ok = kp_c < jnp.iinfo(jnp.int32).max
+        vis = vis & pad_ok[None, :] if vis.ndim == 2 else vis & pad_ok[None, None, :]
+        vis = vis[:, None] if vis.ndim == 3 else vis[None, None]
+        s = jnp.where(vis, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_c.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, H, Lq), NEG_INF, jnp.float32),
+        jnp.zeros((B, H, Lq), jnp.float32),
+        jnp.zeros((B, H, Lq, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (k, v, kp))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)    # (B, Lq, H, hd)
+
+
+def attention_block(
+    params: dict,
+    x: Array,                       # (B, L, d)
+    positions: Array,               # (L,)
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    kv_override: tuple[Array, Array] | None = None,  # (memory, memory_positions) cross-attn
+    use_chunked: bool = True,
+) -> Array:
+    """Full projection -> RoPE -> attention -> output projection."""
+    from repro.models.layers import apply_rope
+
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+        v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        k_pos = positions
+    else:
+        mem, k_pos = kv_override
+        k = jnp.einsum("bld,dhk->blhk", mem, params["wk"])
+        v = jnp.einsum("bld,dhk->blhk", mem, params["wv"])
+
+    fn = chunked_attention if use_chunked else reference_attention
+    kwargs = dict(causal=causal, window=window)
+    if use_chunked:
+        kwargs["chunk"] = chunk
+    out = fn(q, k, v, positions, k_pos, **kwargs)
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention_block(
+    params: dict,
+    x: Array,                       # (B, 1, d) current token hidden
+    cache: dict,                    # {"k","v"}: (B, S, KV, hd)
+    t: Array,                       # scalar int32: current position (cache has t valid)
+    rope_theta: float,
+    window: int = 0,
+    chunk: int = 1024,
+    use_chunked: bool = True,
+    seq_sharded_kv: bool = False,
+) -> tuple[Array, dict]:
+    """One decode step: append K/V at slot (t mod S for SWA ring), attend to cache."""
+    from repro.models.layers import apply_rope
+
+    B, _, _ = x.shape
+    S = cache["k"].shape[1]
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k_new = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v_new = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    pos = jnp.full((1,), t, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+
+    slot = (t % S) if window > 0 else jnp.minimum(t, S - 1)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1),
+    }
+    # Absolute positions of cache slots: ring layout for SWA, linear otherwise.
+    slots = jnp.arange(S, dtype=jnp.int32)
+    if window > 0:
+        cycle = (t // S) * S
+        k_pos = jnp.where(slots <= slot, cycle + slots, cycle - S + slots)
+        k_pos = jnp.where(k_pos < 0, jnp.iinfo(jnp.int32).max, k_pos)  # unwritten
+    else:
+        k_pos = slots
+    valid = jnp.broadcast_to(jnp.minimum(t + 1, S), (B,))
+    if use_chunked:
+        out = chunked_attention(
+            q, cache["k"], cache["v"], pos, k_pos,
+            causal=True, window=window,
+            valid_len=None if window > 0 else valid,
+            chunk=chunk,
+        )
+    else:
+        # dense einsum path: with a sequence-sharded cache the distributed
+        # softmax reduces via tiny (B,H)-sized all-reduces instead of
+        # re-gathering KV — the §Perf decode optimization.  GSPMD's default
+        # propagation prefers the (head-sharded) q layout and would re-gather
+        # the cache, so pin the layouts explicitly: q head-REPLICATED (it is
+        # ~kB), K/V sequence-sharded on 'model'.
+        k_c, v_c = cache["k"], cache["v"]
+        q_d = q
+        if seq_sharded_kv:
+            from repro.parallel.context import constrain_dims
+            q_d = constrain_dims(q, {1: None, 2: None, 3: None})
+            k_c = constrain_dims(k_c, {1: "model", 2: None, 3: None})
+            v_c = constrain_dims(v_c, {1: "model", 2: None, 3: None})
+        out = reference_attention(
+            q_d, k_c, v_c, pos, k_pos,
+            causal=True, window=window,
+            valid_len=None if window > 0 else valid,
+        )
+        if seq_sharded_kv:
+            out = constrain_dims(out, {1: None, 2: None, 3: None})
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"]), cache

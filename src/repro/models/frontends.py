@@ -1,0 +1,31 @@
+"""Modality frontend stubs (the sanctioned carve-out).
+
+Per the assignment, [vlm] and [audio] entries specify the *transformer
+backbone* only: the ViT / conv-codec that would produce patch/frame
+embeddings is NOT implemented.  ``input_specs()`` supplies precomputed
+embeddings of the right shape; the only learned component here is the
+projector mapping frontend embedding dim -> d_model (real in both InternVL2
+(MLP projector) and SeamlessM4T (length adaptor), so we keep it real too).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+Array = jax.Array
+
+
+def init_projector(rng: Array, frontend_dim: int, d_model: int, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": truncated_normal(k1, (frontend_dim, d_model), frontend_dim**-0.5, dtype),
+        "w2": truncated_normal(k2, (d_model, d_model), d_model**-0.5, dtype),
+    }
+
+
+def apply_projector(params: dict, emb: Array) -> Array:
+    """(B, P, frontend_dim) -> (B, P, d_model); 2-layer MLP projector."""
+    return jax.nn.gelu(emb @ params["w1"]) @ params["w2"]

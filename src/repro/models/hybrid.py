@@ -1,0 +1,255 @@
+"""Jamba-style hybrid: Mamba + attention interleaved 1:7, MoE every other
+layer (arXiv:2403.19887).
+
+The depth is organized as ``num_layers // attn_period`` identical
+*super-blocks* scanned with ``lax.scan``; inside a super-block the
+``attn_period`` (8) layers are unrolled with static structure:
+
+    position p:  mixer = attention if p == attn_period // 2 else mamba
+                 mlp   = MoE if p is odd (moe_period == 2) else dense
+
+which realizes the paper's 1:7 attention:mamba ratio with MoE on every
+second layer.  Caches follow the same two-level structure.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_mlp,
+    chunked_xent_loss,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    rms_norm,
+    truncated_normal,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _stack(trees: list[PyTree]) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        if cfg.num_layers % cfg.attn_period:
+            raise ValueError("num_layers must be a multiple of attn_period")
+        self.cfg = cfg
+        self.period = cfg.attn_period
+        self.attn_pos = cfg.attn_period // 2
+        self.n_super = cfg.num_layers // cfg.attn_period
+        self.moe_positions = [
+            p for p in range(self.period)
+            if cfg.moe_period and p % cfg.moe_period == cfg.moe_period - 1
+        ]
+        self.mamba_positions = [p for p in range(self.period) if p != self.attn_pos]
+
+    # -- init ------------------------------------------------------------------
+
+    def _init_superblock(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(rng, 2 * self.period + 1)
+        mamba = [
+            ssm_lib.init_mamba2(keys[p], cfg.d_model, cfg.ssm_state,
+                                cfg.ssm_head_dim, cfg.ssm_expand,
+                                cfg.ssm_conv_width, dt)
+            for p in self.mamba_positions
+        ]
+        attn = attn_lib.init_attention(keys[self.period], cfg.d_model,
+                                       cfg.num_heads, cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, dt)
+        moe = [
+            moe_lib.init_moe(keys[self.period + 1 + p], cfg.d_model, cfg.d_ff,
+                             cfg.num_experts, cfg.mlp_activation, dt)
+            for p in self.moe_positions
+        ]
+        dense = [
+            init_mlp(keys[self.period + 1 + p], cfg.d_model, cfg.d_ff,
+                     cfg.mlp_activation, dt)
+            for p in range(self.period) if p not in self.moe_positions
+        ]
+        return {
+            "mamba": _stack(mamba),
+            "attn": attn,
+            "moe": _stack(moe) if moe else {},
+            "mlp": _stack(dense) if dense else {},
+            "ln1": jnp.ones((self.period, cfg.d_model), jnp.float32),
+            "ln2": jnp.ones((self.period, cfg.d_model), jnp.float32),
+        }
+
+    def init(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        keys = jax.random.split(rng, self.n_super + 2)
+        params = {
+            "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, _dtype(cfg)),
+            "superblocks": _stack([self._init_superblock(k) for k in keys[1:-1]]),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal(
+                keys[-1], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, _dtype(cfg)
+            )
+        return params
+
+    def _lm_head(self, params: PyTree) -> Array:
+        return params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+
+    # -- forward -----------------------------------------------------------------
+
+    def _super_fn(self, sb: PyTree, h: Array, positions: Array,
+                  window: int) -> tuple[Array, Array]:
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        mamba_i = moe_i = mlp_i = 0
+        pick = lambda tree, i: jax.tree.map(lambda x: x[i], tree)
+        for p in range(self.period):
+            m_in = rms_norm(h, sb["ln1"][p], cfg.norm_eps)
+            if p == self.attn_pos:
+                h = h + attn_lib.attention_block(
+                    sb["attn"], m_in, positions, cfg.rope_theta,
+                    causal=True, window=window, chunk=cfg.attn_chunk,
+                    use_chunked=h.shape[1] > 512,
+                )
+            else:
+                h = h + ssm_lib.apply_mamba2(
+                    pick(sb["mamba"], mamba_i), m_in, cfg.ssm_state,
+                    cfg.ssm_head_dim, norm_eps=cfg.norm_eps,
+                )
+                mamba_i += 1
+            f_in = rms_norm(h, sb["ln2"][p], cfg.norm_eps)
+            if p in self.moe_positions:
+                out, aux = moe_lib.apply_moe(
+                    pick(sb["moe"], moe_i), f_in, cfg.experts_per_token,
+                    cfg.capacity_factor, cfg.mlp_activation,
+                    cfg.router_aux_coef, cfg.router_z_coef,
+                )
+                aux_total = aux_total + aux
+                moe_i += 1
+            else:
+                out = apply_mlp(pick(sb["mlp"], mlp_i), f_in, cfg.mlp_activation)
+                mlp_i += 1
+            h = h + out
+        return h, aux_total
+
+    def hidden_states(self, params: PyTree, tokens: Array,
+                      prefix_emb=None, window: int | None = None) -> tuple[Array, Array]:
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        window = cfg.sliding_window if window is None else window
+
+        def body(carry, sb):
+            h, aux = carry
+            h, a = self._super_fn(sb, h, positions, window)
+            return (h, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.float32(0.0)), params["superblocks"])
+        return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+    def loss_fn(self, params: PyTree, batch: dict[str, Array]) -> tuple[Array, dict]:
+        hidden, aux = self.hidden_states(params, batch["tokens"])
+        xent = chunked_xent_loss(hidden, self._lm_head(params), batch["targets"],
+                                 batch["mask"], self.cfg.loss_chunk)
+        return xent + aux, {"xent": xent, "aux": aux}
+
+    # -- serving --------------------------------------------------------------
+
+    def cache_len(self, seq_len: int) -> int:
+        """Attention cache length; long-context decode uses the SWA variant
+        (window = 4096) documented in DESIGN.md §6."""
+        if seq_len > 131_072:
+            return 4_096
+        if self.cfg.sliding_window > 0:
+            return min(seq_len, self.cfg.sliding_window)
+        return seq_len
+
+    def init_cache(self, batch: int, seq_len: int) -> PyTree:
+        cfg = self.cfg
+        S = self.cache_len(seq_len)
+        attn = attn_lib.init_kv_cache(batch, S, cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, _dtype(cfg))
+        mamba = ssm_lib.init_mamba_cache(batch, cfg.d_model, cfg.ssm_state,
+                                         cfg.ssm_head_dim, cfg.ssm_expand,
+                                         cfg.ssm_conv_width, _dtype(cfg))
+        sb = {
+            "attn": attn,
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (len(self.mamba_positions),) + x.shape),
+                mamba,
+            ),
+        }
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (self.n_super,) + x.shape), sb)
+
+    def decode_step(self, params: PyTree, cache: PyTree, token: Array,
+                    t: Array) -> tuple[Array, PyTree]:
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], token)[:, None, :]
+        window = cache["attn"]["k"].shape[2]  # attention ring size == window
+        pick = lambda tree, i: jax.tree.map(lambda x: x[i], tree)
+
+        def body(carry, xs):
+            h = carry
+            sb, sb_cache = xs
+            new_mamba = []
+            mamba_i = moe_i = mlp_i = 0
+            attn_cache = sb_cache["attn"]
+            for p in range(self.period):
+                m_in = rms_norm(h, sb["ln1"][p], cfg.norm_eps)
+                if p == self.attn_pos:
+                    out, attn_cache = attn_lib.decode_attention_block(
+                        sb["attn"], m_in, attn_cache, t, cfg.rope_theta,
+                        window=window, chunk=cfg.attn_chunk,
+                        use_chunked=not cfg.decode_dense_attn,
+                        seq_sharded_kv=cfg.kv_cache_layout == "seq",
+                    )
+                else:
+                    out, mc = ssm_lib.decode_mamba2(
+                        pick(sb["mamba"], mamba_i), m_in, pick(sb_cache["mamba"], mamba_i),
+                        cfg.ssm_state, cfg.ssm_head_dim, norm_eps=cfg.norm_eps,
+                    )
+                    new_mamba.append(mc)
+                    mamba_i += 1
+                h = h + out
+                f_in = rms_norm(h, sb["ln2"][p], cfg.norm_eps)
+                if p in self.moe_positions:
+                    out, _ = moe_lib.apply_moe(
+                        pick(sb["moe"], moe_i), f_in, cfg.experts_per_token,
+                        cfg.capacity_factor, cfg.mlp_activation, 0.0, 0.0,
+                    )
+                    moe_i += 1
+                else:
+                    out = apply_mlp(pick(sb["mlp"], mlp_i), f_in, cfg.mlp_activation)
+                    mlp_i += 1
+                h = h + out
+            new_cache = {
+                "attn": attn_cache,
+                "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+            }
+            return h, new_cache
+
+        h, new_cache = jax.lax.scan(body, h, (params["superblocks"], cache))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, 0, :] @ self._lm_head(params)).astype(jnp.float32)
+        return logits, new_cache
+
+    def prefill(self, params: PyTree, tokens: Array, prefix_emb=None) -> tuple[Array, Array]:
+        hidden, aux = self.hidden_states(params, tokens)
+        logits = (hidden[:, -1, :] @ self._lm_head(params)).astype(jnp.float32)
+        return logits, aux

@@ -1,0 +1,128 @@
+"""Shared neural building blocks (pure functional JAX).
+
+Parameters are plain pytrees (nested dicts of arrays); every function takes
+params explicitly.  Stacked-layer parameters carry a leading layer axis and
+are consumed via ``jax.lax.scan`` in the model assemblies to keep HLO (and
+dry-run compile times) small.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def truncated_normal(rng: Array, shape, scale: float, dtype=jnp.float32) -> Array:
+    return scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def rms_norm(x: Array, weight: Array, eps: float) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate pairs. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng: Array, d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale_in = d_model**-0.5
+    scale_out = d_ff**-0.5
+    params = {
+        "w_up": truncated_normal(k1, (d_model, d_ff), scale_in, dtype),
+        "w_down": truncated_normal(k2, (d_ff, d_model), scale_out, dtype),
+    }
+    if activation == "swiglu":
+        params["w_gate"] = truncated_normal(k3, (d_model, d_ff), scale_in, dtype)
+    return params
+
+
+def apply_mlp(params: dict, x: Array, activation: str) -> Array:
+    up = x @ params["w_up"]
+    if activation == "swiglu":
+        up = jax.nn.silu(x @ params["w_gate"]) * up
+    elif activation == "relu2":          # nemotron-4 squared ReLU
+        up = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        up = jax.nn.gelu(up)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return up @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + sequence-chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def init_embedding(rng: Array, vocab: int, d_model: int, dtype) -> Array:
+    # 1/sqrt(d) keeps tied-head logits O(1) at init; RMSNorm rescales inputs.
+    return truncated_normal(rng, (vocab, d_model), d_model**-0.5, dtype)
+
+
+def embed_tokens(table: Array, tokens: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_xent_loss(
+    hidden: Array,          # (B, L, d) final hidden states
+    lm_head: Array,         # (d, V)
+    targets: Array,         # (B, L) int
+    mask: Array,            # (B, L) f32
+    chunk: int,
+) -> Array:
+    """Cross-entropy without materializing full (B, L, V) logits.
+
+    Scans over sequence chunks; per-chunk logits are (B, chunk, V) which under
+    vocab-sharded lm_head stay (B, chunk, V/m) per device.  Critical for the
+    256k-vocab configs at seq 4k+ (full logits would be tens of GB/device).
+    """
+    B, L, d = hidden.shape
+    if L % chunk:
+        pad = chunk - L % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        L += pad
+    n_chunks = L // chunk
+    hidden = hidden.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    targets = targets.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    mask = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        h_c, t_c, m_c = inp                               # (B, chunk, ...)
+        logits = (h_c @ lm_head).astype(jnp.float32)      # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * m_c
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(m_c)), None
+
+    (total, denom), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hidden, targets, mask)
+    )
+    return total / jnp.maximum(denom, 1.0)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts MLP with top-k routing (GShard/Switch-style capacity
+dispatch) — TPU-native dense formulation.
+
+Dispatch is position-in-expert scatter/gather with a fixed per-expert
+capacity so every tensor is static — the shape XLA/GSPMD needs for
+expert-parallel sharding.  Routing is *batch-row local* (vmapped over B,
+capacity ``C = ceil(k * L / E * factor)`` per sequence): the position cumsum
+never crosses the data-sharded batch axis, so GSPMD keeps dispatch entirely
+on-shard and the only cross-device traffic is the expert-parallel
+all-to-all implied by the (E-sharded) FFN einsums.  Tokens over capacity are
+dropped (combine contributes zero); the auxiliary load-balance loss pushes
+the router away from that regime.  Includes the router z-loss.
+
+Expert-parallel: (B, E, C, d) buffers and (E, d, ff) weights shard E over
+the `model` mesh axis when E >= axis size (olmoe/moonshot/jamba), else the
+ff dim is tensor-sharded (mixtral E=8 on a 16-way axis) — see
+repro.parallel.specs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+Array = jax.Array
+
+
+def init_moe(rng: Array, d_model: int, d_ff: int, num_experts: int,
+             activation: str, dtype) -> dict:
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    params = {
+        "router": truncated_normal(k0, (d_model, num_experts), s_in, jnp.float32),
+        "w_up": truncated_normal(k1, (num_experts, d_model, d_ff), s_in, dtype),
+        "w_down": truncated_normal(k2, (num_experts, d_ff, d_model), s_out, dtype),
+    }
+    if activation == "swiglu":
+        params["w_gate"] = truncated_normal(k3, (num_experts, d_model, d_ff), s_in, dtype)
+    return params
+
+
+def capacity(num_tokens: int, num_experts: int, k: int, factor: float) -> int:
+    c = int(num_tokens * k * factor / num_experts) + 1
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8 (lane-friendly)
+
+
+def _route_one_row(xt: Array, router: Array, k: int, C: int) -> tuple[Array, ...]:
+    """Per-sequence routing.  xt: (L, d) -> dispatch indices/gates for one row."""
+    L = xt.shape[0]
+    E = router.shape[-1]
+    logits = xt.astype(jnp.float32) @ router                    # (L, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (L, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_ids = expert_ids.reshape(L * k)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                   # (L*k, E)
+    pos_in_expert = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos_in_expert < C
+    gates_flat = gate_vals.reshape(L * k) * keep.astype(gate_vals.dtype)
+    safe_pos = jnp.where(keep, pos_in_expert, C)                # C == scratch row
+    return logits, probs, expert_ids, flat_ids, safe_pos, gates_flat
+
+
+def apply_moe(
+    params: dict,
+    x: Array,                  # (B, L, d)
+    k: int,
+    capacity_factor: float,
+    activation: str,
+    aux_coef: float,
+    z_coef: float,
+) -> tuple[Array, Array]:
+    """Returns (output (B, L, d), aux_loss scalar)."""
+    B, L, d = x.shape
+    E = params["router"].shape[-1]
+    C = capacity(L, E, k, capacity_factor)
+
+    logits, probs, expert_ids, flat_ids, safe_pos, gates_flat = jax.vmap(
+        _route_one_row, in_axes=(0, None, None, None)
+    )(x, params["router"], k, C)
+
+    # -- aux losses (Switch-style balance + z-loss), global over B*L ----------
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = aux_coef * E * jnp.sum(me * ce)
+    zloss = z_coef * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # -- scatter into (B, E, C+1, d); scratch row C holds dropped tokens ------
+    # Batched (not vmapped) indexing so every token-major intermediate keeps
+    # an explicit leading batch dim: the dispatch is a GSPMD propagation
+    # barrier and without the constraints below the BACKWARD scatter/gather
+    # pair materializes (B, L*k, d) replicated over the whole mesh (observed:
+    # 12 TB/dev collective traffic on the multi-pod MoE train step).
+    # (NOTE: additionally sharding the scatter's feature dim on 'model' would
+    # make the scatter fully device-local, but XLA's SPMD partitioner
+    # CHECK-fails on batched scatters with feature sharding — §Perf it5.)
+    from repro.parallel.context import constrain_batch_dim
+
+    token_idx = jnp.arange(L * k) // k
+    b_idx = jnp.arange(B)[:, None]                              # (B, 1)
+    big = constrain_batch_dim(x[:, token_idx, :])               # (B, L*k, d)
+    buf = jnp.zeros((B, E, C + 1, d), x.dtype)
+    expert_in = buf.at[b_idx, flat_ids, safe_pos].add(big)[:, :, :C, :]
+    expert_in = constrain_batch_dim(expert_in)                  # (B, E, C, d)
+
+    # -- expert FFN (batched einsum; GSPMD shards E or ff) ---------------------
+    up = jnp.einsum("becd,edf->becf", expert_in, params["w_up"])
+    if activation == "swiglu":
+        up = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, params["w_gate"])) * up
+    elif activation == "relu2":
+        up = jnp.square(jax.nn.relu(up))
+    else:
+        up = jax.nn.gelu(up)
+    expert_out = jnp.einsum("becf,efd->becd", up, params["w_down"])        # (B,E,C,d)
+
+    # -- combine: gather each token's k expert outputs, weight by gates -------
+    expert_out = constrain_batch_dim(expert_out)
+    vals = expert_out[b_idx, flat_ids, jnp.minimum(safe_pos, C - 1)]  # (B,L*k,d)
+    vals = constrain_batch_dim(vals) * gates_flat[..., None].astype(vals.dtype)
+    out = jnp.sum(vals.reshape(B, L, k, d), axis=2)
+    return constrain_batch_dim(out), aux + zloss

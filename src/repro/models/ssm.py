@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU-native choice: we implement the *chunked SSD* algorithm — intra-chunk
+terms are (Q x Q) matmuls (MXU work, exactly like an attention tile) and
+inter-chunk terms are a short ``lax.scan`` over chunk states — instead of
+porting the CUDA selective-scan kernel.  This is the hardware adaptation
+called out in DESIGN.md §7: the recurrence is re-blocked for VMEM/MXU, not
+emulated warp-by-warp.  ``repro.kernels.ssd_scan`` is the Pallas version of
+the intra-chunk tile; this module is the pure-JAX reference/production path.
+
+Per head h with state (N x P):   h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t,
+y_t = C_t . h_t + D * x_t,   a_t = exp(dt_t * A_h),  A_h < 0 learned.
+B_t, C_t are shared across heads (ngroups = 1), x_t is the (P,) head input.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+Array = jax.Array
+
+
+def init_mamba2(rng: Array, d_model: int, ssm_state: int, head_dim: int,
+                expand: int, conv_width: int, dtype) -> dict:
+    d_inner = expand * d_model
+    num_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * ssm_state
+    ks = jax.random.split(rng, 6)
+    s_in = d_model**-0.5
+    return {
+        # in_proj emits [z (d_inner), xBC (conv_ch), dt (H)]
+        "w_in": truncated_normal(ks[0], (d_model, d_inner + conv_ch + num_heads), s_in, dtype),
+        "conv_w": truncated_normal(ks[1], (conv_width, conv_ch), conv_width**-0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, num_heads, dtype=jnp.float32)),  # A = -exp(a_log)
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((num_heads,), 1e-2, jnp.float32))),
+        "d_skip": jnp.ones((num_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "w_out": truncated_normal(ks[2], (d_inner, d_model), d_inner**-0.5, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d.  x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4): unrolled taps fuse into one kernel
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(
+    xh: Array,        # (B, L, H, P) head inputs
+    dt: Array,        # (B, L, H)    positive step sizes
+    a: Array,         # (H,)         negative decay rates A_h
+    b_mat: Array,     # (B, L, N)
+    c_mat: Array,     # (B, L, N)
+    chunk: int = 128,
+    initial_state: Array | None = None,   # (B, H, N, P)
+) -> tuple[Array, Array]:
+    """Chunked SSD.  Returns (y (B, L, H, P), final_state (B, H, N, P))."""
+    B, L, H, P = xh.shape
+    N = b_mat.shape[-1]
+    Q = min(chunk, L)
+    if L % Q:
+        pad = Q - L % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    Lp = xh.shape[1]
+    nc = Lp // Q
+
+    f32 = jnp.float32
+    xh_c = xh.reshape(B, nc, Q, H, P)
+    dt_c = dt.reshape(B, nc, Q, H).astype(f32)
+    b_c = b_mat.reshape(B, nc, Q, N).astype(f32)
+    c_c = c_mat.reshape(B, nc, Q, N).astype(f32)
+
+    log_a = dt_c * a[None, None, None, :]            # (B, nc, Q, H), negative
+    cum = jnp.cumsum(log_a, axis=2)                  # inclusive cumsum within chunk
+    total = cum[:, :, -1, :]                         # (B, nc, H)
+
+    dtx = (dt_c[..., None] * xh_c.astype(f32))       # (B, nc, Q, H, P)
+
+    # ---- intra-chunk (quadratic, attention-like) ---------------------------
+    # decay(i, j) = exp(cum_i - cum_j) for j <= i else 0
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: upper-triangle exponents are positive and would inf/NaN
+    # the backward pass if only the exp output were masked.
+    seg = jnp.where(tril[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    gbc = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)                # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", gbc, decay, dtx)
+
+    # ---- chunk states + inter-chunk scan -----------------------------------
+    # state contribution of chunk: sum_j exp(total - cum_j) * B_j (x) dtx_j
+    w_state = jnp.exp(total[:, :, None, :] - cum)                # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, w_state, dtx)
+
+    h0 = (jnp.zeros((B, H, N, P), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def scan_fn(h_prev, inp):
+        s_c, tot_c = inp                                         # (B,H,N,P), (B,H)
+        h_new = jnp.exp(tot_c)[..., None, None] * h_prev + s_c
+        return h_new, h_prev                                     # emit state *before* chunk
+
+    states = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0))
+    h_final, h_before = jax.lax.scan(scan_fn, h0, states)
+    h_before = jnp.moveaxis(h_before, 0, 1)                      # (B,nc,H,N,P)
+
+    # ---- inter-chunk output: C_i . (exp(cum_i) * H_before) ------------------
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", c_c, jnp.exp(cum), h_before)
+
+    y = (y_intra + y_inter).reshape(B, Lp, H, P)[:, :L]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_step(
+    state: Array,     # (B, H, N, P)
+    x1: Array,        # (B, H, P) one token's head inputs
+    dt1: Array,       # (B, H)
+    a: Array,         # (H,)
+    b1: Array,        # (B, N)
+    c1: Array,        # (B, N)
+) -> tuple[Array, Array]:
+    """One recurrent decode step.  Returns (y (B, H, P), new_state)."""
+    f32 = jnp.float32
+    dt1 = dt1.astype(f32)
+    decay = jnp.exp(dt1 * a[None, :])                            # (B, H)
+    upd = jnp.einsum("bn,bhp->bhnp", b1.astype(f32), dt1[..., None] * x1.astype(f32))
+    new_state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", c1.astype(f32), new_state)
+    return y.astype(x1.dtype), new_state
+
+
+def apply_mamba2(
+    params: dict,
+    x: Array,                     # (B, L, d)
+    ssm_state: int,
+    head_dim: int,
+    chunk: int = 128,
+    norm_eps: float = 1e-5,
+) -> Array:
+    """Full Mamba2 mixer over a sequence (training / prefill)."""
+    from repro.models.layers import rms_norm
+
+    B, L, d = x.shape
+    d_inner = params["w_out"].shape[0]
+    H = d_inner // head_dim
+    N = ssm_state
+
+    zxbcdt = x @ params["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])     # (B, L, H)
+    a = -jnp.exp(params["a_log"])                                        # (H,)
+
+    xh = xs.reshape(B, L, H, head_dim)
+    y, _ = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, L, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], norm_eps)         # gated norm
+    return y @ params["w_out"]
+
+
+def init_mamba_cache(batch: int, d_model: int, ssm_state: int, head_dim: int,
+                     expand: int, conv_width: int, dtype) -> dict:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    conv_ch = d_inner + 2 * ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, ssm_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+    }
+
+
+def decode_mamba2(
+    params: dict,
+    x: Array,                     # (B, 1, d)
+    cache: dict,
+    ssm_state: int,
+    head_dim: int,
+    norm_eps: float = 1e-5,
+) -> tuple[Array, dict]:
+    """One-token recurrent step (O(1) in context length)."""
+    from repro.models.layers import rms_norm
+
+    B = x.shape[0]
+    d_inner = params["w_out"].shape[0]
+    H = d_inner // head_dim
+    N = ssm_state
+
+    zxbcdt = x[:, 0] @ params["w_in"]                                    # (B, ...)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
+
+    # rolling conv buffer: [prev taps | new] then depthwise dot with conv_w
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, params["conv_w"]) + params["conv_b"])
+    new_conv = conv_in[:, 1:, :]
+
+    xs, b1, c1 = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B, H)
+    a = -jnp.exp(params["a_log"])
+
+    xh = xs.reshape(B, H, head_dim)
+    y, new_ssm = ssd_step(cache["ssm"], xh, dt1, a, b1, c1)
+    y = y + params["d_skip"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm_w"], norm_eps)
+    out = y @ params["w_out"]
+    return out, {"ssm": new_ssm, "conv": new_conv}

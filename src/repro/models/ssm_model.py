@@ -1,0 +1,122 @@
+"""Attention-free Mamba2 language model (mamba2-370m family).
+
+Blocks are {norm, mamba2-mixer} only (the SSD architecture folds the MLP
+into the expanded mixer, hence d_ff = 0 in the assignment).  Decode is O(1)
+in context length — this is the arch that makes long_500k trivial.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    chunked_xent_loss,
+    embed_tokens,
+    init_embedding,
+    rms_norm,
+    truncated_normal,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(rng, cfg.num_layers + 2)
+        blocks = [
+            {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": ssm_lib.init_mamba2(
+                    k, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                    cfg.ssm_expand, cfg.ssm_conv_width, dt,
+                ),
+            }
+            for k in keys[1:-1]
+        ]
+        params = {
+            "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal(
+                keys[-1], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dt
+            )
+        return params
+
+    def _lm_head(self, params: PyTree) -> Array:
+        return params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+
+    def hidden_states(self, params: PyTree, tokens: Array, prefix_emb=None) -> tuple[Array, Array]:
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+
+        def body(carry, block):
+            h = carry
+            m_in = rms_norm(h, block["ln1"], cfg.norm_eps)
+            h = h + ssm_lib.apply_mamba2(
+                block["mamba"], m_in, cfg.ssm_state, cfg.ssm_head_dim,
+                norm_eps=cfg.norm_eps,
+            )
+            return h, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(body_fn, h, params["blocks"])
+        return rms_norm(h, params["final_norm"], cfg.norm_eps), jnp.float32(0.0)
+
+    def loss_fn(self, params: PyTree, batch: dict[str, Array]) -> tuple[Array, dict]:
+        hidden, _ = self.hidden_states(params, batch["tokens"])
+        xent = chunked_xent_loss(hidden, self._lm_head(params), batch["targets"],
+                                 batch["mask"], self.cfg.loss_chunk)
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    def cache_len(self, seq_len: int) -> int:
+        return 1   # O(1) recurrent state; seq_len only sets position bookkeeping
+
+    def init_cache(self, batch: int, seq_len: int) -> PyTree:
+        cfg = self.cfg
+        one = ssm_lib.init_mamba_cache(batch, cfg.d_model, cfg.ssm_state,
+                                       cfg.ssm_head_dim, cfg.ssm_expand,
+                                       cfg.ssm_conv_width, _dtype(cfg))
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+
+    def decode_step(self, params: PyTree, cache: PyTree, token: Array,
+                    t: Array) -> tuple[Array, PyTree]:
+        cfg = self.cfg
+        del t  # recurrent state is position-free
+        h = embed_tokens(params["embed"], token)[:, None, :]
+
+        def body(carry, xs):
+            h = carry
+            block, layer_cache = xs
+            m_in = rms_norm(h, block["ln1"], cfg.norm_eps)
+            out, new_cache = ssm_lib.decode_mamba2(
+                block["mamba"], m_in, layer_cache, cfg.ssm_state,
+                cfg.ssm_head_dim, norm_eps=cfg.norm_eps,
+            )
+            return h + out, new_cache
+
+        h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, 0, :] @ self._lm_head(params)).astype(jnp.float32)
+        return logits, new_cache
+
+    def prefill(self, params: PyTree, tokens: Array, prefix_emb=None) -> tuple[Array, Array]:
+        hidden, aux = self.hidden_states(params, tokens)
+        logits = (hidden[:, -1, :] @ self._lm_head(params)).astype(jnp.float32)
+        return logits, aux

@@ -1,0 +1,9 @@
+"""Native optimizers (optax is not available in this environment)."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgd,
+)

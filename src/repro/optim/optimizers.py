@@ -1,0 +1,123 @@
+"""Minimal functional optimizer library (optax-style API, implemented here
+because only jax/numpy are installed).
+
+An ``Optimizer`` is a pair of pure functions:
+  init(params) -> state
+  update(grads, state, params) -> (updates, state)     # updates are ADDED
+
+State classes are module-level NamedTuples so that two independently
+constructed optimizers produce pytree-compatible states (local classes
+would break pjit in_shardings matching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class SgdState(NamedTuple):
+    step: Array
+    mu: Optional[PyTree]
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def _zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float | Callable[[Array], Array], momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return SgdState(jnp.int32(0), _zeros_like_f32(params) if momentum else None)
+
+    def update(grads, state, params):
+        del params
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state.mu, grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+            return upd, SgdState(step, mu)
+        upd = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, SgdState(step, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable[[Array], Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return AdamWState(jnp.int32(0), _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1**step.astype(jnp.float32)
+        bc2 = 1 - b2**step.astype(jnp.float32)
+
+        def upd_leaf(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        upd = jax.tree.map(upd_leaf, mu, nu, params)
+        return upd, AdamWState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = jnp.sqrt(
+        jax.tree.reduce(
+            jnp.add,
+            jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads),
+            jnp.float32(0.0),
+        )
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

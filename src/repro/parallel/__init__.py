@@ -1,0 +1,8 @@
+"""Distribution: mesh axes, parameter/activation PartitionSpecs, helpers."""
+
+from repro.parallel.specs import (  # noqa: F401
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    param_specs,
+)

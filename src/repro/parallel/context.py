@@ -1,0 +1,63 @@
+"""Activation-sharding hints for model code.
+
+GSPMD propagation reliably shards dense matmul chains, but the MoE dispatch
+(top_k -> cumsum -> scatter) is a propagation barrier: without a constraint
+XLA falls back to REPLICATING the expert computation over the batch axes
+(observed in the dry-run as a ~10x useful-flops collapse for MoE archs on
+the multi-pod mesh).  The step builders install the mesh + batch axes here;
+``constrain_batch_dim`` re-pins dim 0 of an activation to the batch axes and
+is a no-op when no context is set (pure-CPU tests, reduced configs).
+
+Inside a shard_map region only AUTO axes may be constrained — the installer
+passes exactly those.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: tuple[str, ...]):
+    """Install (mesh, batch axes) for the duration of a trace."""
+    token = _CTX.set((mesh, tuple(batch_axes)) if batch_axes else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain_batch_dim(x: jax.Array) -> jax.Array:
+    """Pin dim 0 of ``x`` to the installed batch axes (no-op without context)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, axes = ctx
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_dims(x: jax.Array, dim_axes: dict[int, Optional[str]]) -> jax.Array:
+    """Pin specific dims: {dim: mesh axis or None}; dim 0 defaults to the
+    batch axes; unlisted dims stay unconstrained-replicated.  No-op without
+    context.  Used by the decode attention path to force the
+    distributed-softmax layout over a sequence-sharded KV cache."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes = ctx
+    elems: list = []
+    for d in range(x.ndim):
+        if d == 0 and 0 not in dim_axes:
+            elems.append(batch_axes)
+        else:
+            elems.append(dim_axes.get(d))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*elems)))

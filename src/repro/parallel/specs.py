@@ -1,0 +1,164 @@
+"""PartitionSpec rules for the architecture zoo on the production meshes.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` composes with ``data`` for batch sharding and serves as
+the federation axis of the paper's technique (DESIGN.md §4).
+
+Parameter rules are path-based (leaf name + context), megatron-style:
+
+  attention:  wq/wk/wv  (d, H, hd)  -> heads on "model"  (column-parallel)
+              wo        (H, hd, d)  -> heads on "model"  (row-parallel)
+  MLP:        w_up/w_gate (d, ff)   -> ff on "model";  w_down (ff, d) row-par
+  MoE:        experts (E, d, ff):  E on "model" when E >= model axis size
+              (expert-parallel: olmoe/moonshot/jamba), else ff on "model"
+              (tensor-parallel within expert: mixtral E=8 < 16)
+  embed/lm_head: vocab on "model" (d replicated) — keeps the big (V, d)
+              tables sharded and the chunked-CE logsumexp a "model"-axis
+              all-reduce
+  mamba:      w_in (d, inner...) column-parallel, w_out row-parallel;
+              per-head vectors (a_log, dt_bias, d_skip) replicated (they are
+              tiny; sharding them buys nothing and complicates decode)
+  norms/router: replicated
+
+Stacked-layer leading axes (blocks/superblocks) are unsharded (None).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _moe_expert_parallel(cfg: ModelConfig, mesh) -> bool:
+    return cfg.num_experts >= model_axis_size(mesh)
+
+
+def param_specs(cfg: ModelConfig, params_shape: PyTree, mesh) -> PyTree:
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays)."""
+    ep = _moe_expert_parallel(cfg, mesh)
+    m = model_axis_size(mesh)
+    kv_shardable = cfg.num_kv_heads % m == 0 if cfg.num_kv_heads else False
+
+    # base (unstacked) spec per leaf name; leading stack axes (layer scan,
+    # and for hybrids superblock x position — possibly TWO of them) are
+    # padded with None by rank difference.
+    def base_spec(name: str, moe: bool) -> tuple | None:
+        if name == "wq":                          # (d, H, hd)
+            return (None, "model", None)
+        if name in ("wk", "wv"):                  # (d, KV, hd): GQA with
+            # KV < model-axis replicates K/V projections (Megatron/vLLM
+            # convention); weights are small, activations stay consistent
+            # with the head-dim-sharded KV cache below.
+            return (None, "model", None) if kv_shardable else (None, None, None)
+        if name == "wo":                          # (H, hd, d)
+            return ("model", None, None)
+        if moe and name in ("w_up", "w_gate"):    # (E, d, ff)
+            return ("model", None, None) if ep else (None, None, "model")
+        if moe and name == "w_down":              # (E, ff, d)
+            return ("model", None, None) if ep else (None, "model", None)
+        if name in ("w_up", "w_gate"):            # dense (d, ff)
+            return (None, "model")
+        if name == "w_down":                      # dense (ff, d)
+            return ("model", None)
+        if name == "w_in":                        # mamba (d, inner+conv+H)
+            return (None, "model")
+        if name == "w_out":                       # mamba (inner, d)
+            return ("model", None)
+        if name == "conv_w":                      # (W, conv_ch) depthwise
+            return (None, "model")
+        if name in ("conv_b", "norm_w"):          # (conv_ch,) / (d_inner,)
+            return ("model",)
+        if name == "w1":                          # projector (fd, d)
+            return (None, "model")
+        if name == "w2":                          # projector (d, d)
+            return ("model", None)
+        return None
+
+    def rule(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        moe = "moe" in keys or (cfg.is_moe and cfg.arch_type != "hybrid"
+                                and name in ("w_up", "w_down", "w_gate"))
+        if name == "embed":
+            return P("model", None)
+        if name == "lm_head":
+            return P(None, "model")
+        base = base_spec(name, moe)
+        if base is None or leaf.ndim < len(base):
+            return P(*([None] * leaf.ndim))       # norms/router/etc: replicated
+        lead = (None,) * (leaf.ndim - len(base))
+        return P(*lead, *base)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_spec(cfg: ModelConfig, mesh) -> dict[str, P]:
+    """Input sharding for train/prefill batches."""
+    dp = batch_axes(mesh)
+    spec = {
+        "tokens": P(dp, None),
+        "targets": P(dp, None),
+        "mask": P(dp, None),
+    }
+    if cfg.frontend != "none":
+        spec["prefix_emb"] = P(dp, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: PyTree, mesh,
+                batch_sharded: bool = True) -> PyTree:
+    """KV/SSM cache sharding for decode.
+
+    Layout: batch on (pod, data) [replicated when global_batch == 1, i.e.
+    long_500k], kv-heads / state-heads / conv-channels on "model".
+    Leading layer-stacking axes are detected by rank.
+
+    cfg.kv_cache_layout overrides the KV rule: 'heads' | 'hd' | 'seq'
+    ('seq' shards the sequence dim — the §Perf decode layout, pairing with
+    cfg.decode_dense_attn so softmax reduces via tiny all-reduces).
+    """
+    dp = batch_axes(mesh) if batch_sharded else None
+    m = model_axis_size(mesh)
+    kv_shardable = cfg.num_kv_heads % m == 0 if cfg.num_kv_heads else False
+    layout = cfg.kv_cache_layout
+    if layout == "auto":
+        layout = "heads" if kv_shardable else "hd"
+
+    def rule(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        # ranks below include the layer (and superblock/mamba) stacking axes
+        if name in ("k", "v"):       # (..., B, S, KV, hd)
+            lead = leaf.ndim - 4
+            if layout == "seq":
+                return P(*([None] * lead), dp, "model", None, None)
+            if layout == "heads":
+                return P(*([None] * lead), dp, None, "model", None)
+            # 'hd': shard head_dim (always a multiple of the axis here)
+            return P(*([None] * lead), dp, None, None, "model")
+        if name == "ssm":            # (..., B, H, N, P)
+            lead = leaf.ndim - 4
+            return P(*([None] * lead), dp, "model", None, None)
+        if name == "conv":           # (..., B, W-1, conv_ch)
+            lead = leaf.ndim - 3
+            return P(*([None] * lead), dp, None, "model")
+        if name == "memory":         # (B, F, d) encoder memory
+            return P(dp, None, None)
+        raise ValueError(f"unknown cache leaf {keys}")
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

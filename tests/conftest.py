@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real device count (1 on this container); only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

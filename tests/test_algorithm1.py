@@ -1,0 +1,184 @@
+"""Integration tests for Algorithm 1 + Theorem 1 on the paper's environments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import (
+    GatedSGDConfig,
+    performance_metric,
+    run_gated_sgd,
+    run_value_iteration,
+)
+from repro.core.trigger import TriggerConfig, theorem1_bound
+from repro.envs import GridWorld, LinearSystem
+
+GW = GridWorld()
+EPS = 0.5
+N_ITERS = 250
+
+
+def _cfg(lam, mode, agents=2, rho=None, n=N_ITERS):
+    prob = GW.vfa_problem(np.zeros(GW.num_states))
+    rho = rho or prob.min_rho(EPS) * 1.0001
+    return GatedSGDConfig(
+        trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=n),
+        eps=EPS, num_agents=agents, mode=mode,
+    )
+
+
+def _run(lam, mode, seed=0, agents=2, T=10):
+    prob = GW.vfa_problem(np.zeros(GW.num_states))
+    sampler = GW.make_sampler(jnp.zeros(GW.num_states), T)
+    return prob, run_gated_sgd(jax.random.key(seed), jnp.zeros(GW.num_states),
+                               sampler, _cfg(lam, mode, agents), problem=prob)
+
+
+def test_always_transmit_converges():
+    prob, tr = _run(1e-4, "always")
+    assert float(tr.comm_rate) == 1.0
+    assert float(prob.objective(tr.weights[-1])) < 0.01 * float(
+        prob.objective(tr.weights[0]))
+
+
+def test_gating_reduces_communication_with_lambda():
+    rates, losses = [], []
+    for lam in (1e-4, 1e-2, 1e-1):
+        prob, tr = _run(lam, "practical")
+        rates.append(float(tr.comm_rate))
+        losses.append(float(prob.objective(tr.weights[-1])))
+    assert rates[0] > rates[1] > rates[2] > 0.0, rates
+    # learning degrades gracefully, not catastrophically (Theorem 1 spirit)
+    assert losses[-1] < 0.2 * float(prob.objective(jnp.zeros(GW.num_states)))
+
+
+def _junk_sampler(rng):
+    """Uninformative agent: one state only, hugely noisy targets."""
+    _, r2 = jax.random.split(rng)
+    phi_t = jax.nn.one_hot(jnp.zeros(10, jnp.int32), GW.num_states)
+    targets = 1.0 + 5.0 * jax.random.normal(r2, (10,))
+    return phi_t, targets
+
+
+def test_fig2_ordering_heterogeneous_agents():
+    """Fig. 2's qualitative claim — theoretical > practical > random — holds
+    when agent informativeness differs (one good agent + one junk agent).
+
+    The theoretical trigger (eq. 9, exact gain) suppresses the junk agent
+    entirely; the practical estimate (eq. 15) is biased and keeps paying for
+    it (the paper's own 'learning loss is higher due to the bias'); random
+    gating at the matched rate is worst.  (In the fully homogeneous i.i.d.
+    setting the trigger has no informativeness differences to exploit and
+    random gating is competitive — documented in EXPERIMENTS.md §Repro.)
+    """
+    prob = GW.vfa_problem(np.zeros(GW.num_states))
+    good = GW.make_sampler(jnp.zeros(GW.num_states), 10)
+    lam = 1e-2
+
+    def run(mode, p=0.5, seeds=3):
+        Js, rates, agent_rates = [], [], []
+        for s in range(seeds):
+            cfg = GatedSGDConfig(
+                trigger=TriggerConfig(lam=lam, rho=prob.min_rho(EPS) * 1.0001,
+                                      num_iterations=N_ITERS),
+                eps=EPS, num_agents=2, mode=mode, random_tx_prob=p)
+            tr = run_gated_sgd(jax.random.key(s), jnp.zeros(GW.num_states),
+                               (good, _junk_sampler), cfg, problem=prob)
+            Js.append(float(prob.objective(tr.weights[-1])))
+            rates.append(float(tr.comm_rate))
+            agent_rates.append(np.asarray(tr.alphas).mean(0))
+        return np.mean(rates), np.mean(Js), np.mean(agent_rates, axis=0)
+
+    r_t, j_t, a_t = run("theoretical")
+    _, j_p, _ = run("practical")
+    _, j_r, _ = run("random", p=r_t)
+    assert j_t < j_p < j_r, (j_t, j_p, j_r)
+    assert a_t[1] < 0.05, f"junk agent should be suppressed, rate={a_t[1]}"
+    assert a_t[0] > 0.1, "informative agent must keep transmitting"
+
+
+def test_theorem1_bound_holds_empirically():
+    """E[lam * comm + J(w_N)] <= RHS of eq. 12 (MC over seeds, theoretical trigger)."""
+    prob = GW.vfa_problem(np.zeros(GW.num_states))
+    lam, T = 1e-3, 10
+    cfg = _cfg(lam, "theoretical", n=150)
+    sampler = GW.make_sampler(jnp.zeros(GW.num_states), T)
+    vals = []
+    for seed in range(6):
+        tr = run_gated_sgd(jax.random.key(seed), jnp.zeros(GW.num_states),
+                           sampler, cfg, problem=prob)
+        vals.append(float(performance_metric(tr, lam, prob)))
+    # Tr(Phi G): estimate gradient covariance at w0 empirically
+    w0 = jnp.zeros(GW.num_states)
+    grads = []
+    for seed in range(200):
+        phi_t, tg = sampler(jax.random.key(10_000 + seed))
+        from repro.core.vfa import stochastic_gradient
+        grads.append(np.asarray(stochastic_gradient(w0, phi_t, tg)))
+    G = np.cov(np.stack(grads).T)
+    tr_phi_g = float(np.trace(np.asarray(prob.second_moment()) @ G))
+    rhs = theorem1_bound(lam, cfg.trigger.rho, EPS, 150,
+                         float(prob.objective(w0)),
+                         float(prob.objective(prob.optimum())), tr_phi_g)
+    assert np.mean(vals) <= rhs + 1e-6, (np.mean(vals), rhs)
+
+
+def test_more_agents_learn_faster():
+    """Fig. 3 right: 10 agents reach lower J than 2 at the same iteration count."""
+    short = 60
+    prob = GW.vfa_problem(np.zeros(GW.num_states))
+    sampler = GW.make_sampler(jnp.zeros(GW.num_states), 10)
+    res = {}
+    for agents in (2, 10):
+        losses = []
+        for seed in range(3):
+            cfg = _cfg(5e-3, "practical", agents=agents, n=short)
+            tr = run_gated_sgd(jax.random.key(seed), jnp.zeros(GW.num_states),
+                               sampler, cfg, problem=prob)
+            losses.append(float(prob.objective(tr.weights[-1])))
+        res[agents] = np.mean(losses)
+    assert res[10] < res[2], res
+
+
+def test_outer_value_iteration_approaches_true_value():
+    """Full Algorithm 1: repeated Bellman fits converge toward V_pi.
+
+    Uses a discounted grid (gamma=0.9) so exact VI contracts at 0.9/outer —
+    the paper's undiscounted time-to-goal variant needs O(|V|) outer steps
+    from V=0 (it is covered by the single-Bellman-update tests above).
+    """
+    gw = GridWorld(gamma=0.9)
+    v_true = gw.exact_value()
+    prob0 = gw.vfa_problem(np.zeros(gw.num_states))
+    rho = prob0.min_rho(EPS) * 1.0001
+    cfg = GatedSGDConfig(
+        trigger=TriggerConfig(lam=1e-4, rho=rho, num_iterations=200),
+        eps=EPS, num_agents=2, mode="practical")
+    make_sampler = lambda vw: gw.make_sampler(vw, 20)
+    w, traces = run_value_iteration(jax.random.key(0),
+                                    jnp.zeros(gw.num_states), make_sampler,
+                                    cfg, num_outer=40)
+    err0 = float(jnp.max(jnp.abs(v_true)))
+    err = float(jnp.max(jnp.abs(w - v_true)))
+    assert err < 0.15 * err0, (err, err0)
+    assert all(0.0 <= float(t.comm_rate) <= 1.0 for t in traces)
+
+
+def test_continuous_state_practical_runs():
+    """Fig. 3 setup (continuous 2-D system, polynomial features) one inner run."""
+    ls = LinearSystem()
+    prob = ls.vfa_problem(np.zeros(6))
+    eps = 0.9 * prob.max_stable_stepsize()
+    rho = min(prob.min_rho(eps) * 1.001, 0.9999)
+    cfg = GatedSGDConfig(
+        trigger=TriggerConfig(lam=1e-5, rho=rho, num_iterations=300),
+        eps=eps, num_agents=2, mode="practical",
+    )
+    sampler = ls.make_sampler(jnp.zeros(6), 1000)
+    tr = run_gated_sgd(jax.random.key(0), jnp.zeros(6), sampler, cfg,
+                       problem=prob)
+    j0 = float(prob.objective(jnp.zeros(6)))
+    jn = float(prob.objective(tr.weights[-1]))
+    assert jn < 0.1 * j0, (jn, j0)
+    assert 0.0 < float(tr.comm_rate) <= 1.0

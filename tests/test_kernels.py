@@ -1,0 +1,78 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gain import gain_matvec, practical_gain
+from repro.kernels.ssd_scan import ssd_chunk_tiles, ssd_chunked_pallas
+from repro.models.ssm import ssd_chunked
+
+
+@pytest.mark.parametrize("T,n", [(10, 6), (100, 25), (257, 130), (1024, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gain_kernel_sweep(rng, T, n, dtype):
+    phi = jnp.asarray(rng.normal(size=(T, n))).astype(dtype)
+    g = jnp.asarray(rng.normal(size=(n,))).astype(dtype)
+    got = gain_matvec(phi, g)
+    want = ref.gain_matvec_ref(phi, g)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+    gg = practical_gain(phi, g, eps=0.5)
+    ww = ref.practical_gain_ref(phi, g, 0.5)
+    np.testing.assert_allclose(gg, ww, rtol=tol * 5, atol=tol * 10)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, Lq=64, Lk=64, H=4, KVH=4, D=32, causal=True, window=0),
+    dict(B=1, Lq=128, Lk=128, H=8, KVH=2, D=64, causal=True, window=0),
+    dict(B=2, Lq=100, Lk=100, H=4, KVH=1, D=16, causal=True, window=32),
+    dict(B=1, Lq=96, Lk=96, H=2, KVH=2, D=128, causal=False, window=0),
+    dict(B=1, Lq=160, Lk=160, H=2, KVH=1, D=64, causal=True, window=64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, case, dtype):
+    c = case
+    q = jnp.asarray(rng.normal(size=(c["B"], c["Lq"], c["H"], c["D"]))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(c["B"], c["Lk"], c["KVH"], c["D"]))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(c["B"], c["Lk"], c["KVH"], c["D"]))).astype(dtype)
+    got = flash_attention(q, k, v, causal=c["causal"], window=c["window"],
+                          block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=c["causal"], window=c["window"])
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_ssd_tile_kernel_vs_oracle(rng):
+    B, nc, Q, H, P, N = 2, 3, 32, 4, 16, 8
+    dtx = jnp.asarray(rng.normal(size=(B, nc, Q, H, P)).astype(np.float32))
+    cum = jnp.asarray(
+        (-np.abs(rng.normal(size=(B, nc, Q, H))).cumsum(axis=2) * 0.1).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(B, nc, Q, N)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(B, nc, Q, N)).astype(np.float32))
+    y, st = ssd_chunk_tiles(dtx, cum, bm, cm)
+    for bi in range(B):
+        for ci in range(nc):
+            for h in range(H):
+                yr, sr = ref.ssd_chunk_ref(dtx[bi, ci, :, h], cum[bi, ci, :, h],
+                                           bm[bi, ci], cm[bi, ci])
+                np.testing.assert_allclose(y[bi, ci, :, h], yr, rtol=1e-4, atol=1e-4)
+                np.testing.assert_allclose(st[bi, ci, h], sr, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("L,chunk", [(64, 32), (200, 64), (128, 128)])
+def test_ssd_pallas_full_path(rng, L, chunk):
+    B, H, P, N = 2, 4, 16, 8
+    xh = jnp.asarray(rng.normal(size=(B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, L, H))).astype(np.float32) * 0.1)
+    a = jnp.asarray(-np.abs(rng.normal(size=(H,))).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    y1, h1 = ssd_chunked_pallas(xh, dt, a, bm, cm, chunk=chunk)
+    y2, h2 = ssd_chunked(xh, dt, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)

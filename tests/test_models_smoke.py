@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (assignment requirement f): every assigned
+arch instantiates a REDUCED variant of the same family and runs one forward
++ one train-gradient step + one decode step on CPU, asserting shapes and
+finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build_model
+
+B, L = 2, 128
+
+
+def _batch(cfg, key):
+    if cfg.frontend == "vision":
+        P = cfg.num_prefix
+        Lt = L - P
+        return {
+            "tokens": jax.random.randint(key, (B, Lt), 0, cfg.vocab_size, dtype=jnp.int32),
+            "targets": jax.random.randint(key, (B, Lt), 0, cfg.vocab_size, dtype=jnp.int32),
+            "mask": jnp.ones((B, Lt), jnp.float32),
+            "prefix_emb": 0.1 * jax.random.normal(key, (B, P, cfg.frontend_dim)),
+        }
+    batch = {
+        "tokens": jax.random.randint(key, (B, L), 0, cfg.vocab_size, dtype=jnp.int32),
+        "targets": jax.random.randint(key, (B, L), 0, cfg.vocab_size, dtype=jnp.int32),
+        "mask": jnp.ones((B, L), jnp.float32),
+    }
+    if cfg.frontend == "audio":
+        batch["prefix_emb"] = 0.1 * jax.random.normal(
+            key, (B, cfg.num_prefix, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_backward_decode(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.num_experts <= 4
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch)[0]))(params)
+    assert bool(jnp.isfinite(loss)), arch
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves), arch
+
+    cache = model.init_cache(B, 64)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, cache, jnp.ones((B,), jnp.int32), jnp.int32(3))
+    assert logits.shape == (B, cfg.padded_vocab), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "mamba2-370m",
+                                  "jamba-v0.1-52b", "seamless-m4t-medium",
+                                  "mixtral-8x7b"])
+def test_decode_matches_prefill_logits(arch):
+    """The KV/state cache path must reproduce the teacher-forced forward:
+    decode logits at position t == prefill logits of the length-(t+1) prompt."""
+    import dataclasses
+
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        # capacity-based dropping depends on tokens-per-dispatch (prefill
+        # routes T tokens, decode routes 1), so exact decode==prefill equality
+        # requires drop-free capacity — a property of capacity MoEs, not a bug.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    key = jax.random.key(1)
+    params = model.init(key)
+    T = 10
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size, dtype=jnp.int32)
+    prefix = (0.1 * jax.random.normal(key, (B, cfg.num_prefix, cfg.frontend_dim))
+              if cfg.frontend != "none" else None)
+
+    cache = model.init_cache(B, T)
+    if cfg.is_encdec:
+        memory = model.encode(params, prefix)
+        cache = dict(cache, memory=memory)
+    dec_logits = []
+    for t in range(T):
+        lg, cache = model.decode_step(params, cache, tokens[:, t], jnp.int32(t))
+        dec_logits.append(lg)
+    dec_logits = jnp.stack(dec_logits, axis=1)    # (B, T, V)
+
+    for t in (3, T - 1):
+        if cfg.frontend == "vision":
+            full, _ = model.prefill(params, tokens[:, :t + 1], None)
+        else:
+            full, _ = model.prefill(params, tokens[:, :t + 1], prefix)
+        np.testing.assert_allclose(
+            dec_logits[:, t], full, rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch} decode/prefill mismatch at t={t}")

@@ -1,0 +1,112 @@
+"""Correctness of the §Perf variants: the optimized layouts/estimators must
+be numerically equivalent (or statistically faithful) to the baselines."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def test_seq_cache_decode_matches_default_layout_subprocess():
+    """kv_cache_layout=seq + decode_dense_attn (the §Perf pair-1 win) must
+    produce the same logits as the default layout on a sharded host mesh."""
+    env = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    code = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_serve_step
+from repro.models import build_model
+
+base = get_config('internvl2-2b').reduced()
+mesh = make_host_mesh(model_axis=2)     # (data=4, model=2): real sharding
+shape = ShapeConfig('t', 64, 8, 'decode')
+
+outs = {}
+for name, cfg in {
+    'default': base,
+    'seq': dataclasses.replace(base, kv_cache_layout='seq', decode_dense_attn=True),
+}.items():
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    step, pspecs, cspecs, cache_shape = build_serve_step(model, cfg, mesh, shape)
+    params_s = jax.device_put(params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs))
+    cache = jax.device_put(model.init_cache(8, 64),
+                           jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs))
+    toks = jax.random.randint(jax.random.key(1), (10, 8), 0, cfg.vocab_size, dtype=jnp.int32)
+    logits = None
+    for t in range(10):
+        logits, cache = step(params_s, cache, toks[t], jnp.int32(t))
+    outs[name] = np.asarray(logits)
+np.testing.assert_allclose(outs['default'], outs['seq'], rtol=5e-2, atol=5e-2)
+print('SEQ-LAYOUT-OK maxdiff', np.abs(outs['default'] - outs['seq']).max())
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=REPO, env=env, timeout=540)
+    assert r.returncode == 0, r.stderr[-2500:]
+    assert "SEQ-LAYOUT-OK" in r.stdout
+
+
+def test_hvp_subsample_gain_is_faithful():
+    """The ¼-batch curvature estimate (§Perf it1/it2) stays within sampling
+    noise of the full-batch gain on a quadratic-ish problem."""
+    from repro.core.fed_sgd import FedConfig, local_gain
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+
+    def loss_of(batch_x, batch_y):
+        def loss(p):
+            r = batch_x @ p["w"] - batch_y
+            return jnp.mean(r**2)
+        return loss
+
+    params = {"w": jnp.asarray(rng.normal(size=(16,)).astype(np.float32))}
+    full = jax.grad(loss_of(X, y))
+    quarter = jax.grad(loss_of(X[:64], y[:64]))
+    g = full(params)
+    cfg = FedConfig(eps=0.3, lam=1e-3, estimator="hvp")
+    gain_full = float(local_gain(g, cfg, grad_fn=full, params=params))
+    gain_quarter = float(local_gain(g, cfg, grad_fn=quarter, params=params))
+    assert np.sign(gain_full) == np.sign(gain_quarter)
+    assert abs(gain_full - gain_quarter) < 0.35 * abs(gain_full), (
+        gain_full, gain_quarter)
+
+
+def test_theorem1_holds_on_continuous_env():
+    """Theorem 1's bound also holds on the Fig-3 continuous-state problem."""
+    from repro.core.algorithm1 import (GatedSGDConfig, performance_metric,
+                                       run_gated_sgd)
+    from repro.core.trigger import TriggerConfig, theorem1_bound
+    from repro.core.vfa import stochastic_gradient
+    from repro.envs import LinearSystem
+
+    ls = LinearSystem()
+    prob = ls.vfa_problem(np.zeros(6))
+    eps = 0.5 * prob.max_stable_stepsize()
+    rho = min(prob.min_rho(eps) * 1.0001, 0.9999)
+    N, T, lam = 120, 500, 1e-4
+    sampler = ls.make_sampler(jnp.zeros(6), T)
+    w0 = jnp.zeros(6)
+    cfg = GatedSGDConfig(trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
+                         eps=eps, num_agents=2, mode="theoretical")
+    vals = [float(performance_metric(
+        run_gated_sgd(jax.random.key(s), w0, sampler, cfg, problem=prob),
+        lam, prob)) for s in range(4)]
+    grads = [np.asarray(stochastic_gradient(w0, *sampler(jax.random.key(999 + s))))
+             for s in range(150)]
+    tr_phi_g = float(np.trace(np.asarray(prob.second_moment())
+                              @ np.cov(np.stack(grads).T)))
+    rhs = theorem1_bound(lam, rho, eps, N, float(prob.objective(w0)),
+                         float(prob.objective(prob.optimum())), tr_phi_g)
+    assert np.mean(vals) <= rhs + 1e-9, (np.mean(vals), rhs)

@@ -1,0 +1,189 @@
+"""Substrate tests: losses, optimizers, checkpointing, data pipeline,
+HLO analyzer, fed_sgd math."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fed_sgd
+from repro.data.synthetic_lm import SyntheticLMConfig, lm_batch_specs, make_lm_batch
+from repro.models.layers import chunked_xent_loss
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+from repro.optim.optimizers import apply_updates
+
+
+# ---------------------------------------------------------------- losses ----
+
+@given(chunk=st.sampled_from([7, 16, 32, 100]))
+@settings(max_examples=6, deadline=None)
+def test_chunked_xent_matches_direct(chunk):
+    rng = np.random.default_rng(3)
+    B, L, d, V = 2, 50, 8, 17
+    hidden = jnp.asarray(rng.normal(size=(B, L, d)).astype(np.float32))
+    head = jnp.asarray(rng.normal(size=(d, V)).astype(np.float32))
+    targets = jnp.asarray(rng.integers(0, V, size=(B, L)), dtype=jnp.int32)
+    mask = jnp.asarray((rng.uniform(size=(B, L)) > 0.2).astype(np.float32))
+    got = chunked_xent_loss(hidden, head, targets, mask, chunk)
+    logits = hidden @ head
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    want = jnp.sum((lse - picked) * mask) / jnp.sum(mask)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ------------------------------------------------------------- optimizers ----
+
+def test_adamw_matches_reference_numpy(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+    opt = adamw(1e-2, b1=0.9, b2=0.999, eps=1e-8)
+    state = opt.init(params)
+    m = np.zeros(5); v = np.zeros(5)
+    p_np = np.asarray(params["w"], dtype=np.float64)
+    p = params
+    for t in range(1, 6):
+        g = {"w": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+        g_np = np.asarray(g["w"], dtype=np.float64)
+        m = 0.9 * m + 0.1 * g_np
+        v = 0.999 * v + 0.001 * g_np**2
+        mh = m / (1 - 0.9**t); vh = v / (1 - 0.999**t)
+        p_np = p_np - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(p["w"], p_np, rtol=1e-4)
+
+
+def test_sgd_momentum_and_clip(rng):
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(norm, 5.0)
+    np.testing.assert_allclose(clipped["a"], jnp.asarray([0.6, 0.8]), rtol=1e-5)
+    opt = sgd(0.1, momentum=0.9)
+    s = opt.init(g)
+    upd, s = opt.update(g, s, g)
+    np.testing.assert_allclose(upd["a"], -0.1 * g["a"], rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+# ------------------------------------------------------------ checkpoint ----
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    from repro.checkpoint import restore, save
+    tree = {
+        "a": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+        "b": {"c": jnp.asarray(rng.normal(size=(2,)), dtype=jnp.bfloat16),
+              "d": jnp.arange(5, dtype=jnp.int32)},
+    }
+    path = str(tmp_path / "ckpt.npz")
+    save(path, tree, metadata={"step": 7})
+    got, meta = restore(path, tree)
+    assert meta == {"step": 7}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ------------------------------------------------------------------ data ----
+
+def test_lm_pipeline_deterministic_and_shaped():
+    cfg = SyntheticLMConfig(vocab_size=101, seq_len=32, global_batch=4)
+    key = jax.random.key(0)
+    b1 = make_lm_batch(cfg, key, step=3)
+    b2 = make_lm_batch(cfg, key, step=3)
+    b3 = make_lm_batch(cfg, key, step=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (4, 32)
+    assert int(b1["tokens"].max()) < 101
+    np.testing.assert_array_equal(b1["targets"][:, :-1], b1["tokens"][:, 1:])
+    assert float(b1["mask"][:, -1].max()) == 0.0
+    specs = lm_batch_specs(cfg)
+    assert specs["tokens"].shape == (4, 32)
+
+
+# --------------------------------------------------------------- fed_sgd ----
+
+def test_local_gain_hvp_matches_taylor(rng):
+    """Second-order gain == exact loss difference for a quadratic loss."""
+    A = rng.normal(size=(4, 4)); A = A @ A.T + np.eye(4)
+    A = jnp.asarray(A.astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+
+    def loss(p):
+        w = p["w"]
+        return 0.5 * w @ (A @ w) - b @ w
+
+    params = {"w": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    grad_fn = jax.grad(loss)
+    g = grad_fn(params)
+    cfg = fed_sgd.FedConfig(eps=0.3, lam=1e-3, estimator="hvp")
+    gain = fed_sgd.local_gain(g, cfg, grad_fn=grad_fn, params=params)
+    stepped = jax.tree.map(lambda p, gg: p - 0.3 * gg, params, g)
+    exact = loss(stepped) - loss(params)
+    np.testing.assert_allclose(gain, exact, rtol=1e-4, atol=1e-5)
+
+
+def test_gated_psum_mean_single_device_semantics():
+    """axis of size 1: alpha=1 passes the gradient, alpha=0 zeroes it."""
+    mesh = jax.make_mesh((1,), ("fed",))
+    g = {"w": jnp.asarray([1.0, 2.0])}
+
+    def run(alpha):
+        def f(g):
+            agg, ntx = fed_sgd.gated_psum_mean(g, jnp.float32(alpha), "fed")
+            return agg, ntx
+        return jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(), g),),
+            out_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(), g),
+                       jax.sharding.PartitionSpec()),
+        ))(g)
+
+    agg1, n1 = run(1.0)
+    np.testing.assert_allclose(agg1["w"], g["w"])
+    assert float(n1) == 1.0
+    agg0, n0 = run(0.0)
+    np.testing.assert_allclose(agg0["w"], jnp.zeros(2))
+    assert float(n0) == 0.0
+
+
+def test_threshold_schedule_fedconfig():
+    cfg = fed_sgd.FedConfig(lam=0.1, rho=0.9, horizon=50)
+    th = [float(cfg.threshold(jnp.int32(k))) for k in (0, 25, 49, 80)]
+    assert th[0] > th[1] > th[2] > 0
+    assert th[3] == th[2]          # clamped past horizon
+
+
+def test_tree_bytes():
+    tree = {"a": jnp.zeros((2, 3), jnp.float32), "b": jnp.zeros((4,), jnp.bfloat16)}
+    assert fed_sgd.tree_bytes(tree) == 2 * 3 * 4 + 4 * 2
+
+
+# ----------------------------------------------------------- hlo analyzer ----
+
+def test_hlo_analyzer_scales_scan_bodies():
+    from repro.launch.hlo_analysis import analyze
+
+    def one(x, w):
+        return jnp.tanh(x @ w)
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (one(c, w), None), x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)
+    a1 = analyze(jax.jit(one).lower(x, w1).compile().as_text())
+    a7 = analyze(jax.jit(scanned).lower(x, ws).compile().as_text())
+    assert a1["flops"] == pytest.approx(2 * 64 * 128 * 128)
+    assert a7["flops"] == pytest.approx(7 * a1["flops"])
+    assert a7["traffic_bytes"] > a1["traffic_bytes"]
