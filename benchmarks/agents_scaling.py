@@ -5,6 +5,9 @@ For m in {2, 4, 8, 16, 32} agents at fixed lambda/iterations on the grid
 MDP: final J, per-agent communication rate (eq. 7), and *total* fleet
 transmissions — quantifying the paper's observation that more agents learn
 faster "with almost the same amount of average communication rate".
+
+Seeds are vmapped through the sweep engine; one jitted call per fleet size
+(the agent count changes array shapes, so it cannot be trace-time data).
 """
 
 from __future__ import annotations
@@ -15,36 +18,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithm1 import GatedSGDConfig, run_gated_sgd
-from repro.core.trigger import TriggerConfig
+from repro.core.algorithm1 import ParamSampler
 from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
 
 EPS = 0.5
 N = 150
 SEEDS = 3
+LAM = 5e-3
 
 
 def run() -> list[dict]:
     gw = GridWorld()
     prob = gw.vfa_problem(np.zeros(gw.num_states))
     rho = prob.min_rho(EPS) * 1.0001
-    sampler = gw.make_sampler(jnp.zeros(gw.num_states), 10)
+    w0 = jnp.zeros(gw.num_states)
+    fn = gw.sampler_fn(10)
     rows = []
     for agents in (2, 4, 8, 16, 32):
+        spec = SweepSpec(modes=("practical",), lambdas=(LAM,),
+                         seeds=tuple(range(SEEDS)), rhos=(rho,), eps=EPS,
+                         num_iterations=N, num_agents=agents)
+        sampler = ParamSampler(fn=fn, params=gw.agent_params(w0, agents))
         t0 = time.perf_counter()
-        rates, js = [], []
-        for s in range(SEEDS):
-            cfg = GatedSGDConfig(
-                trigger=TriggerConfig(lam=5e-3, rho=rho, num_iterations=N),
-                eps=EPS, num_agents=agents, mode="practical")
-            tr = run_gated_sgd(jax.random.key(s), jnp.zeros(gw.num_states),
-                               sampler, cfg, problem=prob)
-            rates.append(float(tr.comm_rate))
-            js.append(float(prob.objective(tr.weights[-1])))
+        res = run_sweep(spec, sampler, w0, problem=prob)
+        jax.block_until_ready(res.comm_rate)
+        rate = float(np.mean(np.asarray(res.comm_rate)))
         rows.append(dict(
-            bench="agents_scaling", agents=agents, lam=5e-3,
-            comm_rate=float(np.mean(rates)),
-            total_transmissions=float(np.mean(rates)) * agents * N,
-            J_final=float(np.mean(js)),
+            bench="agents_scaling", agents=agents, lam=LAM,
+            comm_rate=rate,
+            total_transmissions=rate * agents * N,
+            J_final=float(np.mean(np.asarray(res.j_final))),
             us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
     return rows

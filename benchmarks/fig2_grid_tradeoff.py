@@ -1,86 +1,108 @@
 """Paper Fig. 2 (right): communication-learning tradeoff on the grid MDP.
 
 Sweeps lambda for the theoretical trigger (eq. 9), the practical estimate
-(eq. 15) and the random baseline, in BOTH regimes:
+(eq. 15) and the rate-matched random baseline, in BOTH regimes:
 
   * homogeneous  — all agents draw i.i.d. from d (the paper's stated setup);
   * heterogeneous— one informative + one junk agent, where informativeness
     gating has signal to exploit (reproduces Fig 2's ordering; see
     EXPERIMENTS.md §Repro for the homogeneous-regime discussion).
+
+Since the sweep-engine refactor the entire (regime x mode x lambda x seed)
+grid executes as exactly TWO jitted ``run_sweep`` calls: one for the gated
+triggers, one for the random baseline matched to the theoretical trigger's
+measured rates (EXPERIMENTS.md §Engine).  A small per-run slice is also
+timed to report the speedup over the seed repo's sequential loop.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithm1 import GatedSGDConfig, run_gated_sgd
+from repro.core.algorithm1 import GatedSGDConfig, ParamSampler, run_gated_sgd
 from repro.core.trigger import TriggerConfig
-from repro.envs import GridWorld
+from repro.envs import GridWorld, stack_agent_params
+from repro.experiments import SweepSpec, matched_random_probs, run_sweep, tradeoff_rows
 
 EPS = 0.5
 N = 250
 SEEDS = 4
 LAMBDAS = (1e-4, 1e-3, 1e-2, 1e-1, 0.3)
+T = 10
+REGIMES = ("homogeneous", "heterogeneous")
 
 
-def _junk_sampler(num_states):
-    def sampler(rng):
-        _, r2 = jax.random.split(rng)
-        phi_t = jax.nn.one_hot(jnp.zeros(10, jnp.int32), num_states)
-        return phi_t, 1.0 + 5.0 * jax.random.normal(r2, (10,))
-    return sampler
+def _fleets(gw: GridWorld, w0):
+    """Stacked agent-param sets: regime axis x 2 agents."""
+    good = gw.agent_param_row(w0)
+    junk = gw.agent_param_row(
+        w0,
+        visit_logits=30.0 * jax.nn.one_hot(0, gw.num_states),  # stuck at s=0
+        noise_scale=5.0)                                       # junk targets
+    homog = stack_agent_params(good, good)
+    hetero = stack_agent_params(good, junk)
+    return jax.tree.map(lambda a, b: jnp.stack([a, b]), homog, hetero)
 
 
 def run() -> list[dict]:
     gw = GridWorld()
+    w0 = jnp.zeros(gw.num_states)
     prob = gw.vfa_problem(np.zeros(gw.num_states))
     rho = prob.min_rho(EPS) * 1.0001
-    good = gw.make_sampler(jnp.zeros(gw.num_states), 10)
-    junk = _junk_sampler(gw.num_states)
-    rows = []
+    sampler = ParamSampler(fn=gw.sampler_fn(T), params=None)
+    regimes = _fleets(gw, w0)
 
-    for regime, samplers in (("homogeneous", good),
-                             ("heterogeneous", (good, junk))):
-        rate_by_lam = {}
-        for mode in ("theoretical", "practical"):
-            for lam in LAMBDAS:
-                t0 = time.perf_counter()
-                rates, js = [], []
-                for s in range(SEEDS):
-                    cfg = GatedSGDConfig(
-                        trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
-                        eps=EPS, num_agents=2, mode=mode)
-                    tr = run_gated_sgd(jax.random.key(s),
-                                       jnp.zeros(gw.num_states), samplers, cfg,
-                                       problem=prob)
-                    rates.append(float(tr.comm_rate))
-                    js.append(float(prob.objective(tr.weights[-1])))
-                rows.append(dict(bench="fig2", regime=regime, mode=mode,
-                                 lam=lam, comm_rate=float(np.mean(rates)),
-                                 J_final=float(np.mean(js)),
-                                 us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
-                if mode == "theoretical":
-                    rate_by_lam[lam] = float(np.mean(rates))
-        # random baseline matched to the theoretical trigger's rates
-        for lam in LAMBDAS:
-            p = rate_by_lam[lam]
-            rates, js = [], []
-            t0 = time.perf_counter()
-            for s in range(SEEDS):
-                cfg = GatedSGDConfig(
-                    trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
-                    eps=EPS, num_agents=2, mode="random", random_tx_prob=p)
-                tr = run_gated_sgd(jax.random.key(50 + s),
-                                   jnp.zeros(gw.num_states), samplers, cfg,
-                                   problem=prob)
-                rates.append(float(tr.comm_rate))
-                js.append(float(prob.objective(tr.weights[-1])))
-            rows.append(dict(bench="fig2", regime=regime, mode="random",
-                             lam=lam, comm_rate=float(np.mean(rates)),
-                             J_final=float(np.mean(js)),
-                             us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
+    # -- jitted call 1: both gated triggers, both regimes ---------------------
+    spec = SweepSpec(modes=("theoretical", "practical"), lambdas=LAMBDAS,
+                     seeds=tuple(range(SEEDS)), rhos=(rho,), eps=EPS,
+                     num_iterations=N, num_agents=2)
+    t0 = time.perf_counter()
+    res = run_sweep(spec, sampler, w0, problem=prob, param_sets=regimes)
+    jax.block_until_ready(res.comm_rate)
+    t1 = time.perf_counter()
+
+    # -- jitted call 2: random baseline matched to the theoretical rates ------
+    spec_rand = dataclasses.replace(
+        spec, modes=("random",), seeds=tuple(range(50, 50 + SEEDS)),
+        random_tx_prob=matched_random_probs(res, spec))
+    res_rand = run_sweep(spec_rand, sampler, w0, problem=prob,
+                         param_sets=regimes)
+    jax.block_until_ready(res_rand.comm_rate)
+    t2 = time.perf_counter()
+
+    runs_gated = int(np.prod(res.comm_rate.shape))
+    runs_rand = int(np.prod(res_rand.comm_rate.shape))
+    rows = []
+    for result, sp, tspan, nruns in ((res, spec, t1 - t0, runs_gated),
+                                     (res_rand, spec_rand, t2 - t1, runs_rand)):
+        for row in tradeoff_rows(result, sp, bench="fig2"):
+            row["regime"] = REGIMES[row.pop("param_set")]
+            row.pop("rho", None)
+            row["us_per_call"] = tspan * 1e6 / nruns
+            rows.append(row)
+
+    # -- speedup vs the seed repo's sequential per-run loop -------------------
+    # One representative (mode, lam) slice through run_gated_sgd, per run.
+    fleet = ParamSampler(fn=sampler.fn,
+                         params=jax.tree.map(lambda x: x[0], regimes))
+    cfg = GatedSGDConfig(
+        trigger=TriggerConfig(lam=LAMBDAS[2], rho=rho, num_iterations=N),
+        eps=EPS, num_agents=2, mode="practical")
+    t3 = time.perf_counter()
+    for s in range(SEEDS):
+        jax.block_until_ready(
+            run_gated_sgd(jax.random.key(s), w0, fleet, cfg, problem=prob))
+    per_run_us = (time.perf_counter() - t3) * 1e6 / SEEDS
+    engine_us = (t2 - t0) * 1e6 / (runs_gated + runs_rand)
+    rows.append(dict(bench="fig2", mode="engine_speedup",
+                     us_per_call=engine_us,
+                     us_per_run_sequential=per_run_us,
+                     speedup=per_run_us / engine_us,
+                     grid_runs=runs_gated + runs_rand,
+                     wall_s=t2 - t0))
     return rows

@@ -3,6 +3,9 @@
 Three panels: (left) large lambda => infrequent, late communication;
 (middle) small lambda => frequent communication, faster weight convergence;
 (right) 10 agents learn faster than 2 at ~the same communication rate.
+
+All 2-agent panels share one jitted ``run_sweep`` call (lambda is data); the
+10-agent panel is a second call (the fleet size changes array shapes).
 """
 
 from __future__ import annotations
@@ -13,12 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithm1 import GatedSGDConfig, run_gated_sgd
-from repro.core.trigger import TriggerConfig
+from repro.core.algorithm1 import ParamSampler
 from repro.envs import LinearSystem
+from repro.experiments import SweepSpec, run_sweep
 
 N = 1500
 T = 1000
+PANELS_2 = (("left_infrequent", 1e-1), ("middle_frequent", 1e-4),
+            ("right_2agents", 1e-2))
 
 
 def run() -> list[dict]:
@@ -27,31 +32,40 @@ def run() -> list[dict]:
     eps = 0.9 * prob.max_stable_stepsize()
     rho = min(prob.min_rho(eps) * 1.0001, 0.9995)
     wstar = np.asarray(prob.optimum())
-    sampler = ls.make_sampler(jnp.zeros(6), T)
+    w0 = jnp.zeros(6)
+    fn = ls.sampler_fn(T)
     rows = []
 
-    def panel(name, lam, agents):
-        t0 = time.perf_counter()
-        cfg = GatedSGDConfig(
-            trigger=TriggerConfig(lam=lam, rho=rho, num_iterations=N),
-            eps=eps, num_agents=agents, mode="practical")
-        tr = run_gated_sgd(jax.random.key(0), jnp.zeros(6), sampler, cfg,
-                           problem=prob)
-        a = np.asarray(tr.alphas).mean(1)
+    def emit(name, lam, agents, trace, j_final, us):
+        a = np.asarray(trace.alphas).mean(1)          # (N,) mean over agents
         first_tx = int(np.argmax(a > 0)) if a.max() > 0 else N
-        w_err = [float(np.linalg.norm(np.asarray(tr.weights[k]) - wstar))
+        w_err = [float(np.linalg.norm(np.asarray(trace.weights[k]) - wstar))
                  for k in (0, N // 4, N // 2, 3 * N // 4, N)]
         rows.append(dict(
             bench="fig3", panel=name, lam=lam, agents=agents,
-            comm_rate=float(tr.comm_rate), first_tx_iter=first_tx,
+            comm_rate=float(trace.comm_rate), first_tx_iter=first_tx,
             early_rate=float(a[: N // 4].mean()),
             late_rate=float(a[3 * N // 4:].mean()),
-            J_final=float(prob.objective(tr.weights[-1])),
-            w_err_quarterly=w_err,
-            us_per_call=(time.perf_counter() - t0) * 1e6))
+            J_final=float(j_final), w_err_quarterly=w_err,
+            us_per_call=us))
 
-    panel("left_infrequent", lam=1e-1, agents=2)
-    panel("middle_frequent", lam=1e-4, agents=2)
-    panel("right_2agents", lam=1e-2, agents=2)
-    panel("right_10agents", lam=1e-2, agents=10)
+    def sweep(lambdas, agents):
+        spec = SweepSpec(modes=("practical",), lambdas=lambdas, seeds=(0,),
+                         rhos=(rho,), eps=eps, num_iterations=N,
+                         num_agents=agents)
+        sampler = ParamSampler(fn=fn, params=ls.agent_params(w0, agents))
+        t0 = time.perf_counter()
+        res = run_sweep(spec, sampler, w0, problem=prob)
+        jax.block_until_ready(res.comm_rate)
+        return res, (time.perf_counter() - t0) * 1e6 / len(lambdas)
+
+    res2, us2 = sweep(tuple(lam for _, lam in PANELS_2), agents=2)
+    for li, (name, lam) in enumerate(PANELS_2):
+        cell = jax.tree.map(lambda x: x[0, li, 0, 0], res2.trace)
+        emit(name, lam, 2, cell, res2.j_final[0, li, 0, 0], us2)
+
+    res10, us10 = sweep((1e-2,), agents=10)
+    emit("right_10agents", 1e-2, 10,
+         jax.tree.map(lambda x: x[0, 0, 0, 0], res10.trace),
+         res10.j_final[0, 0, 0, 0], us10)
     return rows

@@ -1,0 +1,35 @@
+"""Version-compat shims for jax APIs that moved between 0.4.x and 0.5+.
+
+The launch stack targets current jax (``jax.shard_map``,
+``jax.sharding.AxisType``); CI and some edge deployments pin jax 0.4.37,
+where shard_map still lives in ``jax.experimental.shard_map`` with the
+older ``check_rep``/``auto`` spelling.  Keep every such translation here so
+call sites read as modern jax.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` with graceful fallback to the 0.4.x experimental API.
+
+    ``axis_names`` (new-style: the *manual* axes) maps onto the legacy
+    ``auto=`` frozenset (its complement); ``check_vma`` onto ``check_rep``.
+    """
+    if _NEW_SHARD_MAP is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _NEW_SHARD_MAP(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _legacy
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, auto=auto)

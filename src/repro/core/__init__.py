@@ -4,10 +4,15 @@ federated value-function approximation, plus its SPMD generalization."""
 from repro.core.algorithm1 import (  # noqa: F401
     GatedSGDConfig,
     InnerTrace,
+    ParamSampler,
+    ProblemTerms,
+    gated_sgd_core,
     performance_metric,
     run_gated_sgd,
     run_value_iteration,
+    run_value_iteration_scan,
 )
+from repro.core import gain_dispatch  # noqa: F401
 from repro.core.fed_sgd import (  # noqa: F401
     FedConfig,
     FedStats,

@@ -5,24 +5,35 @@ iterations for a *fixed* ``V_current``; the outer loop (lines 11-12) replaces
 ``V_current`` with the fitted approximation and repeats — projected value
 iteration [Bertsekas Vol. II Ch. 6].
 
-Everything is pure JAX: the inner loop is a single ``lax.scan`` whose body
-samples fresh local batches at every agent, computes stochastic gradients
-(eq. 5), evaluates the configured gain (eq. 13 exact / eq. 15 practical /
-ablations), applies the trigger (eq. 9), and performs the server update
-(eq. 6).  This makes the faithful reproduction jit-compilable end to end and
-reusable as the reference semantics for the large-model fed_sgd transform.
+Everything is pure JAX and, since the batched-sweep refactor (DESIGN.md §2),
+*branchless*: the trigger mode is trace-time data (an integer id selected
+with masks, not a Python ``if``), thresholds and the random-transmit
+probability are arrays, and heterogeneous agents are a single parameterized
+sampler vmapped over stacked per-agent parameters.  One compiled program
+therefore serves every (mode, lambda, rho, seed) combination, which is what
+lets ``repro.experiments.run_sweep`` execute an entire experiment grid as a
+single jitted call.
+
+Layers:
+  * ``gated_sgd_core``   — the branchless inner loop on raw arrays.
+  * ``run_gated_sgd``    — the faithful-reproduction API (config object,
+                           legacy closure samplers still accepted).
+  * ``run_value_iteration`` / ``run_value_iteration_scan`` — the outer loop
+                           (lines 11-12), as a Python loop over closure
+                           factories or as a ``lax.scan`` over a
+                           jax-traceable parameter builder.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import gain as gain_lib
+from repro.core import gain_dispatch
 from repro.core import server as server_lib
 from repro.core import vfa as vfa_lib
 from repro.core.trigger import TriggerConfig, should_transmit
@@ -30,12 +41,38 @@ from repro.core.trigger import TriggerConfig, should_transmit
 Array = jax.Array
 
 # sampler(rng) -> (phi_t, targets_t): one agent's T fresh local samples with
-# Bellman targets already evaluated under the fixed V_current.  A tuple of
-# samplers (one per agent) models HETEROGENEOUS agents — differing local data
-# distributions/noise — which is where informativeness gating earns its keep.
+# Bellman targets already evaluated under the fixed V_current.  The legacy
+# closure form; heterogeneous fleets should use ParamSampler instead.
 Sampler = Callable[[Array], tuple[Array, Array]]
 
-MODES = ("theoretical", "practical", "norm", "random", "always", "never")
+MODES = gain_dispatch.MODES
+MODE_IDS = {name: i for i, name in enumerate(MODES)}
+
+
+class ParamSampler(NamedTuple):
+    """A single sampling *function* plus stacked per-agent parameters.
+
+    ``fn(params_i, rng) -> (phi_t (T, n), targets_t (T,))`` draws one agent's
+    local batch; ``params`` is a pytree whose leaves carry a leading agent
+    axis (m, ...).  Heterogeneous agents (differing local distributions /
+    noise — where informativeness gating earns its keep) are then just
+    different rows of ``params``, and the whole fleet is one ``vmap`` —
+    replacing the per-closure Python loop the seed repo used.  Envs build
+    these via ``Env.sampler_fn`` / ``Env.agent_params`` (repro.envs.base).
+    """
+
+    fn: Callable[[object, Array], tuple[Array, Array]]
+    params: object
+
+    @property
+    def num_agents(self) -> int:
+        leaves = jax.tree.leaves(self.params)
+        if not leaves:
+            raise ValueError(
+                "ParamSampler.params is empty (e.g. None): such samplers "
+                "only carry the fn for run_sweep(param_sets=...) and cannot "
+                "be used where a concrete fleet is required")
+        return int(leaves[0].shape[0])
 
 
 class InnerTrace(NamedTuple):
@@ -47,6 +84,34 @@ class InnerTrace(NamedTuple):
     comm_rate: Array    # scalar: (1/N) sum_k mean_i alpha_k^i   (eq. 7)
 
 
+class ProblemTerms(NamedTuple):
+    """The exact problem reduced to sufficient statistics (jit-friendly).
+
+    J(w) = w^T Phi w - 2 b^T w + c0  with  Phi = E_d phi phi^T,
+    b = E_d[target * phi], c0 = E_d[target^2];  grad J = 2 (Phi w - b).
+    ``VFAProblem`` is a plain dataclass (not a pytree), so the branchless
+    core carries these three arrays instead.
+    """
+
+    phi_matrix: Array   # (n, n)
+    bvec: Array         # (n,)
+    c0: Array           # scalar
+
+    @classmethod
+    def from_problem(cls, problem: vfa_lib.VFAProblem) -> "ProblemTerms":
+        phi = problem.second_moment()
+        b = jnp.einsum("s,si->i", problem.d_weights * problem.targets,
+                       problem.phi_matrix)
+        c0 = jnp.sum(problem.d_weights * problem.targets**2)
+        return cls(phi_matrix=phi, bvec=b, c0=c0)
+
+    def grad(self, w: Array) -> Array:
+        return 2.0 * (self.phi_matrix @ w - self.bvec)
+
+    def objective(self, w: Array) -> Array:
+        return w @ (self.phi_matrix @ w) - 2.0 * (self.bvec @ w) + self.c0
+
+
 @dataclasses.dataclass(frozen=True)
 class GatedSGDConfig:
     trigger: TriggerConfig
@@ -54,81 +119,75 @@ class GatedSGDConfig:
     num_agents: int
     mode: str = "practical"
     random_tx_prob: float = 0.5   # for mode == "random" (paper's Fig 2 baseline)
+    gain_backend: str = "reference"   # 'reference' | 'pallas' (gain_dispatch)
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.gain_backend not in gain_dispatch.BACKENDS:
+            raise ValueError(
+                f"gain_backend must be one of {gain_dispatch.BACKENDS}, "
+                f"got {self.gain_backend!r}")
 
 
-def _agent_gain(
-    mode: str,
-    g: Array,
-    phi_t: Array,
-    eps: float,
-    w: Array,
-    problem: Optional[vfa_lib.VFAProblem],
-    phi_matrix: Optional[Array],
-) -> Array:
-    if mode == "theoretical":
-        return gain_lib.theoretical_gain(g, problem.grad(w), phi_matrix, eps)
-    if mode == "practical":
-        return gain_lib.practical_gain_streaming(g, phi_t, eps)
-    if mode == "norm":
-        return gain_lib.gain_norm_only(g, eps)
-    # random / always / never: gain unused, return the practical one for logging
-    return gain_lib.practical_gain_streaming(g, phi_t, eps)
+# ---------------------------------------------------------------------------
+# Branchless core.
+# ---------------------------------------------------------------------------
+
+SampleAll = Callable[[Array], tuple[Array, Array]]   # (m,) rngs -> (m,T,n),(m,T)
 
 
-def run_gated_sgd(
+def gated_sgd_core(
     rng: Array,
     w0: Array,
-    sampler: Sampler,
-    cfg: GatedSGDConfig,
-    problem: Optional[vfa_lib.VFAProblem] = None,
+    mode_id: Union[Array, int],
+    thresholds: Array,
+    tx_prob: Union[Array, float],
+    sample_all: SampleAll,
+    eps: float,
+    num_agents: int,
+    terms: Optional[ProblemTerms] = None,
+    gain_backend: str = "reference",
 ) -> InnerTrace:
-    """One inner run of Algorithm 1 (lines 5-9) for N iterations, m agents.
+    """Branchless inner loop of Algorithm 1 (lines 5-9).
 
-    ``problem`` (exact J / Phi) is required for mode == "theoretical" only.
+    ``mode_id``, ``thresholds`` (N,) and ``tx_prob`` are *data*: the same
+    compiled program evaluates every trigger mode, so the function can be
+    vmapped over an experiment grid.  Per step it samples all agents'
+    batches, evaluates the full gain family through ``gain_dispatch`` and
+    mask-selects the configured one (eq. 13 / 15 / Remark 4), applies the
+    trigger (eq. 9 — or the random/always/never baselines), and performs the
+    server update (eq. 6).
     """
-    if cfg.mode == "theoretical" and problem is None:
-        raise ValueError("theoretical mode needs the exact VFAProblem")
-    N = cfg.trigger.num_iterations
-    thresholds = cfg.trigger.schedule()  # (N,)
-    phi_matrix = problem.second_moment() if problem is not None else None
-
-    samplers = (sampler if isinstance(sampler, (list, tuple))
-                else (sampler,) * cfg.num_agents)
-    if len(samplers) != cfg.num_agents:
-        raise ValueError("need one sampler per agent")
-    homogeneous = all(s is samplers[0] for s in samplers)
-
-    def one_agent(rng_i, w, smp):
-        phi_t, targets_t = smp(rng_i)
-        g = vfa_lib.stochastic_gradient(w, phi_t, targets_t)
-        gn = _agent_gain(cfg.mode, g, phi_t, cfg.eps, w, problem, phi_matrix)
-        return g, gn
+    N = thresholds.shape[0]
+    phi_matrix = terms.phi_matrix if terms is not None else None
 
     def step(w, inp):
         k, rng_k = inp
-        rngs = jax.random.split(rng_k, cfg.num_agents + 1)
-        if homogeneous:
-            grads, gains = jax.vmap(lambda r: one_agent(r, w, samplers[0]))(rngs[:-1])
-        else:
-            outs = [one_agent(rngs[i], w, samplers[i])
-                    for i in range(cfg.num_agents)]
-            grads = jnp.stack([g for g, _ in outs])
-            gains = jnp.stack([gn for _, gn in outs])
-        if cfg.mode == "always":
-            alphas = jnp.ones(cfg.num_agents)
-        elif cfg.mode == "never":
-            alphas = jnp.zeros(cfg.num_agents)
-        elif cfg.mode == "random":
-            alphas = jax.random.bernoulli(
-                rngs[-1], cfg.random_tx_prob, (cfg.num_agents,)
-            ).astype(jnp.float32)
-        else:
-            alphas = should_transmit(gains, thresholds[k])
-        w_next = server_lib.server_update(w, grads, alphas, cfg.eps)
+        rngs = jax.random.split(rng_k, num_agents + 1)
+        phi_b, targets_b = sample_all(rngs[:-1])
+        grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
+            w, phi_b, targets_b)
+        grad_j = terms.grad(w) if terms is not None else None
+        gains = gain_dispatch.mode_gains(
+            mode_id, grads, phi_b, eps, grad_j, phi_matrix,
+            backend=gain_backend)
+        alpha_gate = should_transmit(gains, thresholds[k])
+        alpha_rand = jax.random.bernoulli(
+            rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
+        alphas = jnp.where(
+            mode_id == gain_dispatch.MODE_ALWAYS, jnp.ones(num_agents),
+            jnp.where(mode_id == gain_dispatch.MODE_NEVER, jnp.zeros(num_agents),
+                      jnp.where(mode_id == gain_dispatch.MODE_RANDOM,
+                                alpha_rand, alpha_gate)))
+        # Barrier so XLA cannot constant-fold alphas when mode_id is static
+        # (always-mode all-ones would otherwise fuse differently than the
+        # traced-mode program, breaking per-run <-> sweep bit-compatibility).
+        # Only needed — and only legal, the primitive has no batching rule —
+        # when mode_id is concrete; traced mode_id keeps alphas runtime.
+        if not isinstance(mode_id, jax.core.Tracer):
+            alphas = jax.lax.optimization_barrier(alphas)
+        w_next = server_lib.server_update(w, grads, alphas, eps)
         return w_next, (w_next, alphas, gains)
 
     rngs = jax.random.split(rng, N)
@@ -137,6 +196,72 @@ def run_gated_sgd(
     weights = jnp.concatenate([w0[None], ws], axis=0)
     comm_rate = jnp.mean(alphas)
     return InnerTrace(weights=weights, alphas=alphas, gains=gains, comm_rate=comm_rate)
+
+
+def make_sample_all(
+    sampler: Union[Sampler, tuple, list, ParamSampler], num_agents: int
+) -> SampleAll:
+    """Adapt any accepted sampler form to the core's batched interface.
+
+    * ``ParamSampler``      -> one vmap over stacked per-agent params.
+    * single closure        -> homogeneous fleet, vmap over rngs.
+    * tuple/list of closures-> legacy heterogeneous form; identical closures
+      collapse to the vmap path, genuinely distinct ones are stacked with a
+      Python loop (kept only for back-compat — prefer ParamSampler).
+    """
+    if isinstance(sampler, ParamSampler):
+        if sampler.num_agents != num_agents:
+            raise ValueError(
+                f"ParamSampler carries {sampler.num_agents} agents, "
+                f"config says {num_agents}")
+        return lambda rngs: jax.vmap(sampler.fn)(sampler.params, rngs)
+    if isinstance(sampler, (tuple, list)):
+        if len(sampler) != num_agents:
+            raise ValueError("need one sampler per agent")
+        if all(s is sampler[0] for s in sampler):
+            return lambda rngs: jax.vmap(sampler[0])(rngs)
+
+        def stacked(rngs):
+            outs = [s(rngs[i]) for i, s in enumerate(sampler)]
+            return (jnp.stack([p for p, _ in outs]),
+                    jnp.stack([t for _, t in outs]))
+        return stacked
+    return lambda rngs: jax.vmap(sampler)(rngs)
+
+
+# ---------------------------------------------------------------------------
+# Faithful-reproduction API.
+# ---------------------------------------------------------------------------
+
+
+def run_gated_sgd(
+    rng: Array,
+    w0: Array,
+    sampler: Union[Sampler, tuple, list, ParamSampler],
+    cfg: GatedSGDConfig,
+    problem: Optional[vfa_lib.VFAProblem] = None,
+) -> InnerTrace:
+    """One inner run of Algorithm 1 (lines 5-9) for N iterations, m agents.
+
+    ``problem`` (exact J / Phi) is required for mode == "theoretical" only.
+    Thin wrapper over ``gated_sgd_core`` — the sweep engine vmaps the same
+    core, so per-run and batched results agree (bit-compatibly on the
+    ``batching="map"`` path; see tests/test_sweep.py).
+    """
+    if cfg.mode == "theoretical" and problem is None:
+        raise ValueError("theoretical mode needs the exact VFAProblem")
+    terms = ProblemTerms.from_problem(problem) if problem is not None else None
+    return gated_sgd_core(
+        rng, w0,
+        mode_id=MODE_IDS[cfg.mode],
+        thresholds=cfg.trigger.schedule(),
+        tx_prob=cfg.random_tx_prob,
+        sample_all=make_sample_all(sampler, cfg.num_agents),
+        eps=cfg.eps,
+        num_agents=cfg.num_agents,
+        terms=terms,
+        gain_backend=cfg.gain_backend,
+    )
 
 
 run_gated_sgd_jit = functools.partial(jax.jit, static_argnames=("sampler", "cfg"))(
@@ -157,6 +282,10 @@ def performance_metric(trace: InnerTrace, lam: float, problem: vfa_lib.VFAProble
 # use V_current(x) = v_weights . phi(x)   (tabular == indicator features).
 MakeSampler = Callable[[Array], Sampler]
 
+# make_params(v_weights) -> stacked per-agent sampler params for the outer
+# state V_current; must be jax-traceable so the outer loop can lax.scan.
+MakeParams = Callable[[Array], object]
+
 
 def run_value_iteration(
     rng: Array,
@@ -166,9 +295,11 @@ def run_value_iteration(
     num_outer: int,
     problem_for_v: Optional[Callable[[Array], vfa_lib.VFAProblem]] = None,
 ) -> tuple[Array, list[InnerTrace]]:
-    """Full Algorithm 1: ``num_outer`` Bellman updates, each fitted by gated SGD.
+    """Full Algorithm 1 with closure factories: ``num_outer`` Bellman updates.
 
     Returns the final weights and every inner trace (for comm accounting).
+    Kept for back-compat with non-traceable sampler factories; the scan form
+    below compiles the whole outer loop into one program.
     """
     traces: list[InnerTrace] = []
     v_weights = w0
@@ -180,3 +311,41 @@ def run_value_iteration(
         v_weights = trace.weights[-1]   # line 11-12: V_current <- V_updated
         traces.append(trace)
     return v_weights, traces
+
+
+def run_value_iteration_scan(
+    rng: Array,
+    w0: Array,
+    sampler_fn: Callable[[object, Array], tuple[Array, Array]],
+    make_params: MakeParams,
+    cfg: GatedSGDConfig,
+    num_outer: int,
+    terms_for_v: Optional[Callable[[Array], ProblemTerms]] = None,
+) -> tuple[Array, InnerTrace]:
+    """Full Algorithm 1 as one ``lax.scan`` over the outer Bellman updates.
+
+    ``make_params(v_weights)`` rebuilds the stacked per-agent sampler
+    parameters from the current V (jax-traceable — e.g.
+    ``env.agent_params``); ``terms_for_v`` optionally rebuilds the exact
+    problem terms (needed for the theoretical trigger).  Returns the final
+    weights and the stacked inner traces (leading axis = outer iteration).
+    """
+    if cfg.mode == "theoretical" and terms_for_v is None:
+        raise ValueError("theoretical mode needs terms_for_v")
+    thresholds = cfg.trigger.schedule()
+    mode_id = MODE_IDS[cfg.mode]
+
+    def outer(carry, rng_o):
+        v_weights = carry
+        params = make_params(v_weights)
+        terms = terms_for_v(v_weights) if terms_for_v is not None else None
+        trace = gated_sgd_core(
+            rng_o, v_weights, mode_id, thresholds, cfg.random_tx_prob,
+            lambda rngs: jax.vmap(sampler_fn)(params, rngs),
+            cfg.eps, cfg.num_agents, terms=terms,
+            gain_backend=cfg.gain_backend)
+        return trace.weights[-1], trace
+
+    rngs = jax.random.split(rng, num_outer)
+    v_final, traces = jax.lax.scan(outer, w0, rngs)
+    return v_final, traces

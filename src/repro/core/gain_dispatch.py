@@ -1,0 +1,130 @@
+"""Single dispatch point for every gain computation (DESIGN.md §3).
+
+The repo grew three gain implementations — the pure-jnp reference
+(``repro.core.gain``), the fused Pallas streaming kernel
+(``repro.kernels.gain``) and the pytree generalization for deep nets
+(``repro.core.fed_sgd.local_gain``).  Algorithm 1 only ever called the
+reference, so the kernel never served the hot path.  This module is the one
+API the rest of the stack goes through:
+
+* ``practical_gain(g, phi_t, eps, backend=...)`` — eq. 15 in the streaming
+  O(T n) form; ``backend="reference"`` is the jnp oracle,
+  ``backend="pallas"`` the tiled kernel (interpret-mode off-TPU).  The two
+  agree to <= 1e-5 (tests/test_sweep.py::test_gain_dispatch_backend_parity).
+* ``theoretical_gain`` / ``norm_gain`` — eq. 13 and the Remark-4 strawman,
+  re-exported so callers never import ``repro.core.gain`` directly.
+* ``mode_gains`` — the branchless (trace-time mode) form used by the
+  batched Algorithm 1 core: evaluates the gain family once per agent and
+  selects by mode id, so an entire (mode x lambda x seed) sweep shares one
+  jitted program.
+* ``tree_gain`` — the pytree/HVP path for SPMD training (fed_sgd).
+
+Backends are static (they change the compiled program); everything else is
+data.  The default backend comes from ``REPRO_GAIN_BACKEND`` (reference).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gain as _ref
+from repro.kernels import ops as _kernel_ops
+
+Array = jax.Array
+
+BACKENDS = ("reference", "pallas")
+
+# Mode ids shared with repro.core.algorithm1 (kept here so the gain selection
+# and the trigger selection use the same enum without a circular import).
+MODES = ("theoretical", "practical", "norm", "random", "always", "never")
+MODE_THEORETICAL, MODE_PRACTICAL, MODE_NORM, MODE_RANDOM, MODE_ALWAYS, MODE_NEVER = range(6)
+
+
+def default_backend() -> str:
+    return os.environ.get("REPRO_GAIN_BACKEND", "reference")
+
+
+def _resolve(backend: Optional[str]) -> str:
+    backend = backend or default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend
+
+
+def practical_gain(g: Array, phi_t: Array, eps: float,
+                   *, backend: Optional[str] = None) -> Array:
+    """Eq. 15 streaming gain, O(T n): -eps ||g||^2 + eps^2 (1/T) sum (phi_t.g)^2.
+
+    ``backend="pallas"`` routes the (T, n) matvec through the tiled VMEM
+    kernel so Algorithm 1's hot spot runs the same code path benchmarked in
+    benchmarks/kernels_bench.py; off-TPU it executes in interpret mode.
+    """
+    if _resolve(backend) == "pallas":
+        # kernels.ops selects interpret mode by platform (compiled on TPU)
+        # and accumulates in f32 regardless of input dtype.
+        return _kernel_ops.practical_gain(phi_t, g, eps=eps)
+    return _ref.practical_gain_streaming(g, phi_t, eps)
+
+
+def theoretical_gain(g: Array, grad_j: Array, phi_matrix: Array, eps: float) -> Array:
+    """Eq. 13 exact gain (needs the true grad J and second moment Phi)."""
+    return _ref.theoretical_gain(g, grad_j, phi_matrix, eps)
+
+
+def norm_gain(g: Array, eps: float) -> Array:
+    """Remark 4 ablation: -eps ||g||^2 (curvature-blind)."""
+    return _ref.gain_norm_only(g, eps)
+
+
+def mode_gains(
+    mode_id: Array | int,
+    grads: Array,
+    phi_t: Array,
+    eps: float,
+    grad_j: Optional[Array],
+    phi_matrix: Optional[Array],
+    *,
+    backend: Optional[str] = None,
+) -> Array:
+    """Per-agent gains for a (possibly traced) trigger-mode id.
+
+    Args:
+      mode_id:    scalar int (static or traced) in ``range(len(MODES))``.
+      grads:      (m, n) per-agent stochastic gradients.
+      phi_t:      (m, T, n) per-agent local feature batches.
+      grad_j:     (n,) exact grad J(w), or None when no model is available.
+      phi_matrix: (n, n) exact second moment, or None.
+
+    Returns (m,) gains: eq. 13 for the theoretical mode, the norm-only
+    ablation for "norm", and eq. 15 for every other mode (random/always/
+    never log the practical estimate, matching the reference semantics).
+    The selection is branchless so ``mode_id`` can vary across a vmapped
+    sweep without retracing.
+    """
+    prac = jax.vmap(lambda gi, pi: practical_gain(gi, pi, eps, backend=backend))(
+        grads, phi_t)
+    norm = jax.vmap(lambda gi: norm_gain(gi, eps))(grads)
+    if grad_j is None or phi_matrix is None:
+        theo = prac  # spec validation guarantees mode_id != theoretical
+    else:
+        theo = jax.vmap(
+            lambda gi: theoretical_gain(gi, grad_j, phi_matrix, eps))(grads)
+    return jnp.where(mode_id == MODE_THEORETICAL, theo,
+                     jnp.where(mode_id == MODE_NORM, norm, prac))
+
+
+def tree_gain(g: Any, cfg: Any,
+              grad_fn: Optional[Callable[[Any], Any]] = None,
+              params: Optional[Any] = None) -> Array:
+    """Pytree gain for deep-net training (HVP eq. 13 / gnorm ablation).
+
+    Thin re-export of ``repro.core.fed_sgd.local_gain`` so SPMD callers and
+    the reference stack share one entry point.  Imported lazily to avoid a
+    core <-> fed_sgd import cycle.
+    """
+    from repro.core import fed_sgd
+    return fed_sgd.local_gain(g, cfg, grad_fn=grad_fn, params=params)

@@ -1,4 +1,12 @@
-"""RL environments for the faithful reproduction (paper §V)."""
+"""RL environments for the faithful reproduction (paper §V) and beyond.
 
+All envs satisfy the ``Env`` protocol (repro.envs.base): exact population
+problem + one parameterized, vmappable sampler whose per-agent parameters
+encode heterogeneity — the contract the batched sweep engine
+(repro.experiments) builds on.
+"""
+
+from repro.envs.base import Env, as_param_sampler, stack_agent_params  # noqa: F401
+from repro.envs.garnet import GarnetMDP, garnet_family  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.envs.linear_system import LinearSystem  # noqa: F401

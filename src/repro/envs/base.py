@@ -1,0 +1,131 @@
+"""Common environment protocol for the batched sweep engine (DESIGN.md §2).
+
+Every env exposes the same three capabilities the experiment stack needs:
+
+* ``vfa_problem(v)``  — the exact population problem (3) for one Bellman
+  update at ``V_current = v`` (used for the theoretical trigger, J, w*).
+* ``sampler_fn(num_samples)`` — ONE jax-pure function
+  ``(agent_params, rng) -> (phi_t (T, n), targets_t (T,))`` shared by every
+  agent.  All heterogeneity lives in the parameters, never in the code, so a
+  fleet is a single ``vmap`` and an experiment grid a single jitted program.
+* ``agent_params(v, num_agents, ...)`` — stacked per-agent parameter pytree
+  (leading axis m).  Envs expose env-specific knobs (visit distribution,
+  target noise, ...) to build heterogeneous fleets; ``stack_agent_params``
+  combines arbitrary per-agent rows.
+
+``as_param_sampler`` bundles the two into the ``ParamSampler`` that
+``run_gated_sgd`` / ``run_sweep`` consume.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vfa as vfa_lib
+from repro.core.algorithm1 import ParamSampler, ProblemTerms
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Env(Protocol):
+    """Structural protocol — GridWorld, GarnetMDP and LinearSystem satisfy it."""
+
+    def vfa_problem(self, v_current) -> vfa_lib.VFAProblem: ...
+
+    def sampler_fn(self, num_samples: int): ...
+
+    def agent_params(self, v_current, num_agents: int): ...
+
+
+def stack_agent_params(*rows) -> object:
+    """Stack per-agent parameter pytrees (each leaf gains a leading m axis).
+
+    Rows must share a treedef; use an env's single-agent param builders to
+    make them, e.g. ``stack_agent_params(good, junk)`` for Fig 2's
+    heterogeneous regime.
+    """
+    return jax.tree.map(lambda *leaves: jax.numpy.stack(leaves), *rows)
+
+
+def as_param_sampler(env: Env, v_current, num_agents: int,
+                     num_samples: int, **agent_kwargs) -> ParamSampler:
+    """The env's default homogeneous fleet as a ParamSampler."""
+    return ParamSampler(
+        fn=env.sampler_fn(num_samples),
+        params=env.agent_params(v_current, num_agents, **agent_kwargs),
+    )
+
+
+class TabularSamplerMixin:
+    """Shared parameterized sampling for finite-state envs (tabular phi).
+
+    Host classes provide ``transition_matrix()``, ``cost_vector()``,
+    ``num_states``, ``num_actions`` and ``gamma``.  Per-agent parameters:
+
+      * ``v``            — (S,) weights of V_current (tabular phi => V table).
+      * ``visit_logits`` — (S,) log-weights of the agent's local state-visit
+                           distribution d_i (zeros == the paper's uniform d).
+      * ``noise_scale``  — additive N(0, scale^2) target noise, modeling a
+                           low-quality / high-noise edge agent.
+
+    Heterogeneity is therefore pure data, so a fleet vmaps and a sweep jits
+    once (DESIGN.md §2).
+    """
+
+    def sampler_fn(self, num_samples: int):
+        """(params, rng) -> (phi_t (T, S), targets_t (T,)), jax-pure."""
+        P = jnp.asarray(self.transition_matrix())      # (S, A, S)
+        c = jnp.asarray(self.cost_vector())            # (S,)
+        S, A, gamma = self.num_states, self.num_actions, self.gamma
+
+        def fn(params, rng):
+            r_x, r_a, r_n, r_t = jax.random.split(rng, 4)
+            x = jax.random.categorical(r_x, params["visit_logits"],
+                                       shape=(num_samples,))
+            a = jax.random.randint(r_a, (num_samples,), 0, A)
+            x_next = jax.random.categorical(r_n, jnp.log(P[x, a] + 1e-30), axis=-1)
+            targets = (c[x] + gamma * params["v"][x_next]
+                       + params["noise_scale"]
+                       * jax.random.normal(r_t, (num_samples,)))
+            return jax.nn.one_hot(x, S), targets
+
+        return fn
+
+    def agent_param_row(self, v_current: Array,
+                        visit_logits: Optional[Array] = None,
+                        noise_scale: float = 0.0) -> dict:
+        """One agent's sampler parameters (un-stacked)."""
+        S = self.num_states
+        return {
+            "v": jnp.asarray(v_current, jnp.float32),
+            "visit_logits": (jnp.zeros((S,), jnp.float32)
+                             if visit_logits is None
+                             else jnp.asarray(visit_logits, jnp.float32)),
+            "noise_scale": jnp.float32(noise_scale),
+        }
+
+    def agent_params(self, v_current: Array, num_agents: int,
+                     visit_logits: Optional[Array] = None,
+                     noise_scale: float = 0.0) -> dict:
+        """Homogeneous fleet: the same row stacked m times."""
+        row = self.agent_param_row(v_current, visit_logits, noise_scale)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_agents,) + x.shape), row)
+
+    def problem_terms(self, v_current: Array) -> ProblemTerms:
+        """Exact ``ProblemTerms`` for V_current, jax-traceable (scan-able VI).
+
+        Tabular phi = e_s under uniform d gives Phi = I/S, b = targets/S.
+        """
+        P_pi = jnp.asarray(self.policy_transition())
+        targets = jnp.asarray(self.cost_vector()) + self.gamma * (P_pi @ v_current)
+        S = self.num_states
+        return ProblemTerms(
+            phi_matrix=jnp.eye(S) / S,
+            bvec=targets / S,
+            c0=jnp.sum(targets**2) / S,
+        )

@@ -1,0 +1,95 @@
+"""Garnet MDPs: a randomized family for heterogeneity stress tests.
+
+GARNET ("Generic Average Reward Non-stationary Environment Testbench",
+Archibald et al. / Bhatnagar et al.) instances are the standard way to sweep
+RL algorithms over *many* MDPs instead of one hand-built example: each
+instance is drawn from (num_states S, num_actions A, branching b) — every
+(s, a) transitions to b uniformly-chosen next states with Dirichlet-like
+weights, and costs are i.i.d. uniform per state.  The federated-evaluation
+papers this repo follows (Khodadadian et al.'s federated SA, the FRL survey)
+report across exactly such randomized families; here a seed grid of Garnet
+instances plus the per-agent visit/noise parameters of
+``TabularSamplerMixin`` gives the sweep engine an unbounded supply of
+heterogeneous scenarios beyond the paper's two §V examples.
+
+Features are tabular indicators (phi(s) = e_s), so Assumption 1 holds under
+any full-support d and the exact problem quantities mirror GridWorld's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import vfa as vfa_lib
+from repro.envs.base import TabularSamplerMixin
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GarnetMDP(TabularSamplerMixin):
+    num_states: int = 20
+    num_actions: int = 4
+    branching: int = 3        # next-state support size per (s, a)
+    seed: int = 0             # instance id within the family
+    gamma: float = 0.95       # discounted => (I - gamma P_pi) invertible
+
+    def _rng(self, stream: int) -> np.random.Generator:
+        # independent streams per quantity so P and c draws never interleave
+        return np.random.default_rng(
+            (self.seed, self.num_states, self.num_actions, self.branching, stream))
+
+    def transition_matrix(self) -> np.ndarray:
+        """P[s, a, s']: ``branching`` random successors with random weights."""
+        rng = self._rng(0)
+        S, A, b = self.num_states, self.num_actions, self.branching
+        P = np.zeros((S, A, S))
+        for s in range(S):
+            for a in range(A):
+                succ = rng.choice(S, size=b, replace=False)
+                # stick-breaking cut points — the classic GARNET construction
+                cuts = np.sort(np.concatenate([[0.0], rng.random(b - 1), [1.0]]))
+                P[s, a, succ] = np.diff(cuts)
+        return P
+
+    def cost_vector(self) -> np.ndarray:
+        """c(s) ~ U(0, 1) i.i.d. per state (state-only costs, like the grid)."""
+        return self._rng(1).random(self.num_states)
+
+    def uniform_policy(self) -> np.ndarray:
+        return np.full((self.num_states, self.num_actions),
+                       1.0 / self.num_actions)
+
+    # -- exact quantities ---------------------------------------------------
+
+    def policy_transition(self, policy: np.ndarray | None = None) -> np.ndarray:
+        policy = self.uniform_policy() if policy is None else policy
+        return np.einsum("sa,sat->st", policy, self.transition_matrix())
+
+    def exact_value(self, policy: np.ndarray | None = None) -> np.ndarray:
+        """V_pi = (I - gamma P_pi)^{-1} c  (gamma < 1 => always invertible)."""
+        P = self.policy_transition(policy)
+        A = np.eye(self.num_states) - self.gamma * P
+        return np.linalg.solve(A, self.cost_vector())
+
+    def bellman_update(self, v_current: np.ndarray,
+                       policy: np.ndarray | None = None) -> np.ndarray:
+        """Exact eq. (1): V_upd = c + gamma P_pi V_cur."""
+        return self.cost_vector() + self.gamma * self.policy_transition(policy) @ v_current
+
+    def vfa_problem(self, v_current: np.ndarray) -> vfa_lib.VFAProblem:
+        """Population problem (3) for one Bellman update, uniform d, tabular phi."""
+        S = self.num_states
+        return vfa_lib.VFAProblem(
+            phi_matrix=jnp.eye(S),
+            d_weights=jnp.full((S,), 1.0 / S),
+            targets=jnp.asarray(self.bellman_update(np.asarray(v_current))),
+            gamma=self.gamma,
+        )
+
+
+def garnet_family(num_instances: int, **kwargs) -> tuple[GarnetMDP, ...]:
+    """``num_instances`` i.i.d. instances sharing (S, A, b) — one per seed."""
+    return tuple(GarnetMDP(seed=s, **kwargs) for s in range(num_instances))

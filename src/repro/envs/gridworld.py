@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import vfa as vfa_lib
+from repro.envs.base import TabularSamplerMixin
 
 Array = jax.Array
 
@@ -28,7 +29,7 @@ ACTIONS = np.array([(-1, 0), (1, 0), (0, -1), (0, 1)])  # up, down, left, right
 
 
 @dataclasses.dataclass(frozen=True)
-class GridWorld:
+class GridWorld(TabularSamplerMixin):
     height: int = 5
     width: int = 5
     goal: tuple[int, int] = (4, 4)

@@ -114,6 +114,38 @@ class LinearSystem:
 
     # -- sampling (jax-pure) ---------------------------------------------------
 
+    def sampler_fn(self, num_samples: int) -> Callable[[dict, Array], tuple[Array, Array]]:
+        """Parameterized form of ``make_sampler`` for the sweep engine.
+
+        Per-agent params: ``v`` (6,) V_current weights and ``noise_scale``
+        (scalar) multiplying the process-noise std — a >1 scale models a
+        noisy edge agent whose samples are less informative (heterogeneity
+        the informativeness trigger can exploit).
+        """
+        A = jnp.asarray(self.A)
+        sig = jnp.sqrt(self.noise_var)
+
+        def fn(params, rng):
+            r_x, r_w = jax.random.split(rng)
+            x = jax.random.uniform(r_x, (num_samples, 2))
+            noise = sig * params["noise_scale"] * jax.random.normal(r_w, (num_samples, 2))
+            x_next = x @ A.T + noise
+            cost = jnp.sum(x**2, axis=-1)
+            targets = cost + self.gamma * poly_features(x_next) @ params["v"]
+            return poly_features(x), targets
+
+        return fn
+
+    def agent_param_row(self, v_weights: Array, noise_scale: float = 1.0) -> dict:
+        return {"v": jnp.asarray(v_weights, jnp.float32),
+                "noise_scale": jnp.float32(noise_scale)}
+
+    def agent_params(self, v_weights: Array, num_agents: int,
+                     noise_scale: float = 1.0) -> dict:
+        row = self.agent_param_row(v_weights, noise_scale)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_agents,) + x.shape), row)
+
     def make_sampler(self, v_weights: Array, num_samples: int) -> Callable[[Array], tuple[Array, Array]]:
         """sampler(rng) -> (phi_t (T,6), targets_t (T,)).
 

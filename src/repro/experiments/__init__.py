@@ -1,0 +1,9 @@
+"""Batched experiment engine: whole grids as single jitted programs."""
+
+from repro.experiments.sweep import (  # noqa: F401
+    SweepResult,
+    SweepSpec,
+    matched_random_probs,
+    run_sweep,
+    tradeoff_rows,
+)

@@ -1,0 +1,234 @@
+"""The batched sweep engine (DESIGN.md §2, EXPERIMENTS.md §Engine).
+
+The paper's headline artifacts — Fig. 2/3 tradeoff curves and the Theorem 1
+validation — are grids over (trigger mode x lambda x rho x seed), which the
+seed repo executed as hundreds of sequential ``run_gated_sgd`` calls,
+re-dispatching (and for every new config, re-tracing) per run.  Because the
+refactored Algorithm 1 core is branchless — mode id, thresholds and the
+random-transmit probability are all *data* — an entire grid is just the same
+compiled program evaluated at many points.  ``run_sweep`` therefore:
+
+  1. flattens the requested grid (optional agent-parameter-set axis x modes
+     x lambdas x rhos x seeds) into per-run arrays,
+  2. executes ONE jitted call — ``vmap`` (default, fastest) or ``lax.map``
+     (sequential; bit-identical to per-run execution, used by the parity
+     tests) over the shared ``gated_sgd_core`` —
+  3. reshapes everything back to the grid and attaches exact-objective
+     summaries.
+
+Seeds map to keys exactly as the per-run convention (``jax.random.key(s)``),
+so a sweep cell and the corresponding single run see identical randomness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vfa as vfa_lib
+from repro.core.algorithm1 import (
+    MODE_IDS,
+    MODES,
+    InnerTrace,
+    ParamSampler,
+    ProblemTerms,
+    gated_sgd_core,
+)
+from repro.core.trigger import TriggerConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One experiment grid: modes x lambdas x rhos x seeds (all trace-time data).
+
+    ``random_tx_prob`` may be a scalar or anything broadcastable to the grid
+    shape — e.g. Fig 2's rate-matched random baseline passes the measured
+    per-(regime, lambda) theoretical rates.  ``batching="map"`` trades the
+    vmap wall-clock win for bit-identical-to-per-run numerics.
+    """
+
+    modes: tuple[str, ...]
+    lambdas: tuple[float, ...]
+    seeds: tuple[int, ...]
+    rhos: tuple[float, ...]
+    eps: float
+    num_iterations: int
+    num_agents: int
+    include_horizon_norm: bool = True
+    random_tx_prob: Union[float, np.ndarray] = 0.5
+    gain_backend: str = "reference"
+    batching: str = "vmap"          # 'vmap' | 'map'
+
+    def __post_init__(self):
+        for m in self.modes:
+            if m not in MODES:
+                raise ValueError(f"unknown mode {m!r}, must be one of {MODES}")
+        if self.batching not in ("vmap", "map"):
+            raise ValueError(f"batching must be 'vmap' or 'map', got {self.batching!r}")
+
+    @property
+    def grid_shape(self) -> tuple[int, int, int, int]:
+        return (len(self.modes), len(self.lambdas), len(self.rhos), len(self.seeds))
+
+    def thresholds(self) -> np.ndarray:
+        """(L, R, N) threshold schedules — lambda and rho are pure data."""
+        out = np.empty(
+            (len(self.lambdas), len(self.rhos), self.num_iterations), np.float32)
+        for i, lam in enumerate(self.lambdas):
+            for j, rho in enumerate(self.rhos):
+                out[i, j] = np.asarray(TriggerConfig(
+                    lam=lam, rho=rho, num_iterations=self.num_iterations,
+                    include_horizon_norm=self.include_horizon_norm).schedule())
+        return out
+
+
+class SweepResult(NamedTuple):
+    """Stacked traces + summaries; leading axes = ([param_set,] M, L, R, S)."""
+
+    trace: InnerTrace          # weights (..., N+1, n), alphas/gains (..., N, m)
+    comm_rate: Array           # (...,) eq. 7 per run
+    j_final: Optional[Array]   # (...,) exact J(w_N), when a problem was given
+
+    @property
+    def final_weights(self) -> Array:
+        return self.trace.weights[..., -1, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sampler_fn", "eps", "num_agents", "gain_backend",
+                     "batching", "share_params"),
+)
+def _sweep_exec(keys, w0, mode_ids, thresholds, tx_probs, agent_params, terms,
+                *, sampler_fn, eps, num_agents, gain_backend, batching,
+                share_params):
+    def one(key, mode_id, thr, txp, params):
+        return gated_sgd_core(
+            key, w0, mode_id, thr, txp,
+            lambda rngs: jax.vmap(sampler_fn)(params, rngs),
+            eps, num_agents, terms=terms, gain_backend=gain_backend)
+
+    if batching == "map":
+        if share_params:
+            return jax.lax.map(
+                lambda xs: one(*xs, agent_params),
+                (keys, mode_ids, thresholds, tx_probs))
+        return jax.lax.map(
+            lambda xs: one(*xs),
+            (keys, mode_ids, thresholds, tx_probs, agent_params))
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, None if share_params else 0))(
+        keys, mode_ids, thresholds, tx_probs, agent_params)
+
+
+def run_sweep(
+    spec: SweepSpec,
+    sampler: ParamSampler,
+    w0: Array,
+    problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
+    *,
+    param_sets: Optional[object] = None,
+) -> SweepResult:
+    """Execute the whole grid as one jitted call.
+
+    Args:
+      sampler:    the fleet (shared sampling fn + stacked per-agent params).
+      problem:    exact problem for the theoretical trigger / J summaries.
+      param_sets: optional pytree of *stacked agent-param sets*, leaves
+                  (P, m, ...) — adds a leading param-set axis to the grid
+                  (e.g. Fig 2's homogeneous vs heterogeneous regimes in one
+                  call).  When given, ``sampler.params`` is ignored.
+
+    Returns a SweepResult whose leaves carry the grid shape
+    ``([P,] M, L, R, S)``.
+    """
+    if problem is None and "theoretical" in spec.modes:
+        raise ValueError("theoretical mode needs the exact problem")
+    terms = (problem if isinstance(problem, ProblemTerms)
+             else ProblemTerms.from_problem(problem) if problem is not None
+             else None)
+
+    M, L, R, S = spec.grid_shape
+    inner = M * L * R * S
+    share_params = param_sets is None
+    if share_params:
+        params, P = sampler.params, 1
+        gs: tuple[int, ...] = (M, L, R, S)
+    else:
+        P = int(jax.tree.leaves(param_sets)[0].shape[0])
+        gs = (P, M, L, R, S)
+        # C-order flatten => param-set index is the slowest axis
+        params = jax.tree.map(
+            lambda x: jnp.repeat(x, inner, axis=0), param_sets)
+    G = P * inner
+
+    grid = np.indices(gs).reshape(len(gs), G)
+    mi, li, ri, si = grid[-4], grid[-3], grid[-2], grid[-1]
+    mode_ids = jnp.asarray([MODE_IDS[m] for m in spec.modes], jnp.int32)[mi]
+    thresholds = jnp.asarray(spec.thresholds())[li, ri]            # (G, N)
+    tx_probs = jnp.asarray(
+        np.broadcast_to(np.asarray(spec.random_tx_prob, np.float32), gs)
+    ).reshape(G)
+    keys = jnp.stack([jax.random.key(int(s)) for s in spec.seeds])[si]
+
+    flat = _sweep_exec(
+        keys, jnp.asarray(w0), mode_ids, thresholds, tx_probs, params, terms,
+        sampler_fn=sampler.fn, eps=spec.eps, num_agents=spec.num_agents,
+        gain_backend=spec.gain_backend, batching=spec.batching,
+        share_params=share_params)
+
+    trace = jax.tree.map(lambda x: x.reshape(gs + x.shape[1:]), flat)
+    j_final = None
+    if terms is not None:
+        j_final = jax.vmap(terms.objective)(
+            flat.weights[:, -1, :]).reshape(gs)
+    return SweepResult(trace=trace, comm_rate=trace.comm_rate, j_final=j_final)
+
+
+def tradeoff_rows(result: SweepResult, spec: SweepSpec, **extra) -> list[dict]:
+    """Fig-2-style tradeoff summary: mean over seeds per grid cell.
+
+    Returns one dict per ([param_set,] mode, lambda, rho) with the mean
+    communication rate, mean final J (if available) and the paper's metric
+    (8) ``lam * comm_rate + J``.  ``extra`` key/values are attached to every
+    row (bench name, regime labels, ...).
+    """
+    comm = np.asarray(result.comm_rate).mean(axis=-1)      # seeds out
+    jf = (np.asarray(result.j_final).mean(axis=-1)
+          if result.j_final is not None else None)
+    has_p = comm.ndim == 4
+    rows = []
+    for idx in np.ndindex(*comm.shape):
+        p = idx[0] if has_p else None
+        m, l, r = idx[-3], idx[-2], idx[-1]
+        row = dict(mode=spec.modes[m], lam=spec.lambdas[l], rho=spec.rhos[r],
+                   comm_rate=float(comm[idx]), **extra)
+        if p is not None:
+            row["param_set"] = p
+        if jf is not None:
+            row["J_final"] = float(jf[idx])
+            row["metric8"] = float(spec.lambdas[l] * comm[idx] + jf[idx])
+        rows.append(row)
+    return rows
+
+
+def matched_random_probs(result: SweepResult, spec: SweepSpec,
+                         mode: str = "theoretical") -> np.ndarray:
+    """Per-(cell) transmit probabilities for the rate-matched random baseline.
+
+    Takes the measured comm rates of ``mode`` in ``result``, averages over
+    seeds, and broadcasts back to a single-mode grid — ready to be passed as
+    ``SweepSpec.random_tx_prob`` for a follow-up ``modes=("random",)`` sweep
+    with the same lambdas/rhos/seeds.
+    """
+    comm = np.asarray(result.comm_rate)
+    m = spec.modes.index(mode)
+    rates = comm[..., m, :, :, :].mean(axis=-1, keepdims=True)   # ([P,] L, R, 1)
+    return rates[..., None, :, :, :]                             # ([P,] 1, L, R, 1)

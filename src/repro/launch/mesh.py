@@ -10,23 +10,31 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType landed after 0.4.x; all our axes are Auto (the
+# default collective-matters semantics), so on older jax we simply omit the
+# kwarg — jax.make_mesh there has no axis_types parameter and every axis is
+# implicitly Auto.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist (tests / CPU smoke runs)."""
     n = jax.device_count()
     data = n // model_axis
-    return jax.make_mesh(
-        (data, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model_axis), ("data", "model"))
 
 
 def federation_axis(mesh) -> str:

@@ -4,6 +4,7 @@ plumbing (the §Roofline numbers are only as good as this parser)."""
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep, see pyproject [dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.launch.hlo_analysis import _SHAPE_RE, _shapes_bytes, analyze

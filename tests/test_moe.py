@@ -57,15 +57,30 @@ def test_moe_tiny_capacity_drops_but_stays_finite(rng):
 
 
 def test_aux_loss_penalizes_imbalance(rng):
-    """A router forced to one expert must yield a larger balance loss."""
+    """A router forced to one expert must yield a larger balance loss.
+
+    Derivation: the Switch loss is aux = E * sum_e me_e * ce_e with
+    me = mean router prob and ce = dispatched-token fraction per expert.
+    Balanced routing gives me ~= ce ~= 1/E, so aux ~= E * E * (1/E)^2 = 1;
+    full collapse onto one expert gives me_0 ~= ce_0 ~= 1, so aux ~= E.
+
+    The router is bias-free (logits = x @ W), so adding +b to column 0
+    shifts expert 0's logit by b * sum_j x_j — with zero-mean x that sum is
+    NEGATIVE for about half the tokens, which routes them *away* from e0:
+    the previous formulation never produced the collapse it asserted on.
+    Strictly positive inputs make the column shift a consistent +50 bias,
+    so every token routes to e0 and aux -> E > aux_balanced.
+    """
     B, L, d, ff, E = 1, 32, 8, 16, 4
     params = moe.init_moe(jax.random.key(2), d, ff, E, "swiglu", jnp.float32)
-    x = jnp.asarray(rng.normal(size=(B, L, d)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(B, L, d))).astype(np.float32))
     _, aux_balanced = moe.apply_moe(params, x, 1, 4.0, "swiglu", 1.0, 0.0)
     skew = params["router"].at[:, 0].add(50.0)   # everything routes to e0
     params_skew = dict(params, router=skew)
     _, aux_skew = moe.apply_moe(params_skew, x, 1, 4.0, "swiglu", 1.0, 0.0)
     assert float(aux_skew) > float(aux_balanced)
+    # collapsed routing must sit near the E upper end of the loss range
+    assert float(aux_skew) > 0.75 * E, float(aux_skew)
 
 
 def test_capacity_rounding():

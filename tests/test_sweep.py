@@ -1,0 +1,262 @@
+"""Sweep-engine contract: the vmapped grid reproduces per-run Algorithm 1
+bit-compatibly, the gain backends agree, and the new env plumbing
+(param samplers, garnet family, scan-able outer loop) behaves."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gain_dispatch
+from repro.core.algorithm1 import (
+    GatedSGDConfig,
+    ParamSampler,
+    run_gated_sgd,
+    run_value_iteration_scan,
+)
+from repro.core.trigger import TriggerConfig
+from repro.envs import (
+    GarnetMDP,
+    GridWorld,
+    LinearSystem,
+    as_param_sampler,
+    stack_agent_params,
+)
+from repro.experiments import SweepSpec, matched_random_probs, run_sweep
+
+EPS = 0.5
+N = 60
+ALL_MODES = ("theoretical", "practical", "norm", "random", "always", "never")
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+
+def _spec(**kw):
+    base = dict(modes=ALL_MODES, lambdas=(1e-3, 1e-1), seeds=(0, 1),
+                rhos=(RHO,), eps=EPS, num_iterations=N, num_agents=2,
+                random_tx_prob=0.4)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+@pytest.mark.parametrize("batching", ["map", "vmap"])
+def test_sweep_bitcompat_with_per_run_all_modes(batching):
+    """Same keys => same comm_rate / alphas / final weights, every mode."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    spec = _spec(batching=batching)
+    res = run_sweep(spec, sampler, W0, problem=PROB)
+    for mi, mode in enumerate(spec.modes):
+        for li, lam in enumerate(spec.lambdas):
+            cfg = GatedSGDConfig(
+                trigger=TriggerConfig(lam=lam, rho=RHO, num_iterations=N),
+                eps=EPS, num_agents=2, mode=mode, random_tx_prob=0.4)
+            for si, s in enumerate(spec.seeds):
+                tr = run_gated_sgd(jax.random.key(s), W0, sampler, cfg,
+                                   problem=PROB)
+                cell = jax.tree.map(lambda x: x[mi, li, 0, si], res.trace)
+                np.testing.assert_array_equal(
+                    np.asarray(cell.weights), np.asarray(tr.weights),
+                    err_msg=f"{mode} lam={lam} seed={s}")
+                np.testing.assert_array_equal(
+                    np.asarray(cell.alphas), np.asarray(tr.alphas))
+                assert float(cell.comm_rate) == float(tr.comm_rate)
+
+
+def test_sweep_j_final_matches_exact_objective():
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    spec = _spec(modes=("practical",), lambdas=(1e-2,), seeds=(3,))
+    res = run_sweep(spec, sampler, W0, problem=PROB)
+    want = float(PROB.objective(res.trace.weights[0, 0, 0, 0, -1]))
+    np.testing.assert_allclose(float(res.j_final[0, 0, 0, 0]), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rho_is_data_one_program_serves_both():
+    """Two rhos differ only through the threshold arrays — one call covers both."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    rhos = (RHO, 0.999)
+    spec = _spec(modes=("theoretical",), lambdas=(1e-1,), rhos=rhos,
+                 seeds=(0, 1, 2))
+    res = run_sweep(spec, sampler, W0, problem=PROB)
+    assert res.comm_rate.shape == (1, 1, 2, 3)
+    # a larger rho flattens the schedule => earlier/more communication; at
+    # minimum the two rho columns must be genuinely different programs' data
+    assert not np.array_equal(np.asarray(res.trace.alphas[0, 0, 0]),
+                              np.asarray(res.trace.alphas[0, 0, 1]))
+
+
+# ---------------------------------------------------------------- gains ----
+
+
+def test_gain_dispatch_backend_parity():
+    """Acceptance: pallas backend matches the reference gain to <= 1e-5."""
+    rng = np.random.default_rng(0)
+    for T, n in ((10, 25), (100, 6), (257, 130)):
+        phi = jnp.asarray(rng.normal(size=(T, n)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        ref = gain_dispatch.practical_gain(g, phi, EPS, backend="reference")
+        pal = gain_dispatch.practical_gain(g, phi, EPS, backend="pallas")
+        np.testing.assert_allclose(float(pal), float(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_sweep_pallas_backend_serves_hot_path():
+    """Algorithm 1's gains routed through the Pallas kernel match reference."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    specs = [
+        _spec(modes=("practical",), lambdas=(1e-2,), seeds=(0,),
+              num_iterations=20, gain_backend=b)
+        for b in ("reference", "pallas")
+    ]
+    ref, pal = (run_sweep(s, sampler, W0, problem=PROB) for s in specs)
+    np.testing.assert_allclose(np.asarray(pal.trace.gains),
+                               np.asarray(ref.trace.gains),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pal.trace.alphas),
+                                  np.asarray(ref.trace.alphas))
+
+
+def test_mode_gains_branchless_selection():
+    rng = np.random.default_rng(1)
+    grads = jnp.asarray(rng.normal(size=(3, 6)).astype(np.float32))
+    phi = jnp.asarray(rng.normal(size=(3, 8, 6)).astype(np.float32))
+    gj = jnp.asarray(rng.normal(size=(6,)).astype(np.float32))
+    pm = jnp.eye(6)
+    theo = gain_dispatch.mode_gains(0, grads, phi, EPS, gj, pm)
+    prac = gain_dispatch.mode_gains(1, grads, phi, EPS, gj, pm)
+    norm = gain_dispatch.mode_gains(2, grads, phi, EPS, gj, pm)
+    rand = gain_dispatch.mode_gains(3, grads, phi, EPS, gj, pm)
+    want_norm = jax.vmap(lambda g: -EPS * (g @ g))(grads)
+    np.testing.assert_allclose(np.asarray(norm), np.asarray(want_norm), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(rand), np.asarray(prac))
+    assert not np.allclose(np.asarray(theo), np.asarray(prac))
+
+
+# ------------------------------------------------------- heterogeneity ----
+
+
+def test_param_sets_axis_heterogeneous_junk_suppressed():
+    """Fig-2 regime axis in one call: the theoretical trigger mutes the junk
+    agent in the heterogeneous param set but not the good agent."""
+    good = GW.agent_param_row(W0)
+    junk = GW.agent_param_row(W0,
+                              visit_logits=30.0 * jax.nn.one_hot(0, GW.num_states),
+                              noise_scale=5.0)
+    regimes = jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                           stack_agent_params(good, good),
+                           stack_agent_params(good, junk))
+    sampler = ParamSampler(fn=GW.sampler_fn(10), params=None)
+    spec = _spec(modes=("theoretical",), lambdas=(1e-2,), seeds=(0, 1, 2),
+                 num_iterations=250)
+    res = run_sweep(spec, sampler, W0, problem=PROB, param_sets=regimes)
+    assert res.comm_rate.shape == (2, 1, 1, 1, 3)
+    # per-agent rates in the heterogeneous regime, averaged over seeds/iters
+    rates = np.asarray(res.trace.alphas[1, 0, 0, 0]).mean(axis=(0, 1))
+    assert rates[1] < 0.05, f"junk agent should be suppressed, rate={rates[1]}"
+    assert rates[0] > 0.1, "informative agent must keep transmitting"
+
+
+def test_matched_random_probs_broadcasts():
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    spec = _spec(modes=("theoretical", "practical"), lambdas=(1e-3, 1e-1),
+                 seeds=(0, 1))
+    res = run_sweep(spec, sampler, W0, problem=PROB)
+    probs = matched_random_probs(res, spec)
+    assert probs.shape == (1, 2, 1, 1)
+    spec_r = dataclasses.replace(spec, modes=("random",), random_tx_prob=probs)
+    res_r = run_sweep(spec_r, sampler, W0, problem=PROB)
+    want = np.asarray(res.comm_rate[0]).mean(axis=-1)    # theoretical rates
+    got = np.asarray(res_r.comm_rate[0]).mean(axis=-1)
+    np.testing.assert_allclose(got, want, atol=0.1)
+
+
+# ------------------------------------------------------------- outer VI ----
+
+
+def test_value_iteration_scan_converges():
+    gw = GridWorld(gamma=0.9)
+    v_true = gw.exact_value()
+    prob0 = gw.vfa_problem(np.zeros(gw.num_states))
+    cfg = GatedSGDConfig(
+        trigger=TriggerConfig(lam=1e-4, rho=prob0.min_rho(EPS) * 1.0001,
+                              num_iterations=200),
+        eps=EPS, num_agents=2, mode="practical")
+    w, traces = run_value_iteration_scan(
+        jax.random.key(0), jnp.zeros(gw.num_states), gw.sampler_fn(20),
+        lambda v: gw.agent_params(v, 2), cfg, num_outer=40,
+        terms_for_v=gw.problem_terms)
+    err0 = float(jnp.max(jnp.abs(jnp.asarray(v_true))))
+    err = float(jnp.max(jnp.abs(w - jnp.asarray(v_true))))
+    assert err < 0.15 * err0, (err, err0)
+    # stacked traces: one inner run per outer step, rates all valid
+    assert traces.comm_rate.shape == (40,)
+    assert bool(jnp.all((traces.comm_rate >= 0) & (traces.comm_rate <= 1)))
+
+
+def test_problem_terms_match_vfa_problem():
+    v = jnp.asarray(np.random.default_rng(2).normal(size=GW.num_states),
+                    jnp.float32)
+    terms = GW.problem_terms(v)
+    prob = GW.vfa_problem(np.asarray(v))
+    w = jnp.asarray(np.random.default_rng(3).normal(size=GW.num_states),
+                    jnp.float32)
+    np.testing.assert_allclose(float(terms.objective(w)),
+                               float(prob.objective(w)), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(terms.grad(w)),
+                               np.asarray(prob.grad(w)), rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------- envs ----
+
+
+def test_linear_system_param_sampler_matches_closure():
+    ls = LinearSystem()
+    v = jnp.asarray(np.random.default_rng(4).normal(size=6), jnp.float32)
+    fn = ls.sampler_fn(64)
+    legacy = ls.make_sampler(v, 64)
+    key = jax.random.key(9)
+    phi_a, t_a = fn(ls.agent_param_row(v), key)
+    phi_b, t_b = legacy(key)
+    np.testing.assert_array_equal(np.asarray(phi_a), np.asarray(phi_b))
+    np.testing.assert_allclose(np.asarray(t_a), np.asarray(t_b), rtol=1e-6)
+
+
+def test_garnet_is_a_valid_mdp_family():
+    g0, g1 = GarnetMDP(seed=0), GarnetMDP(seed=1)
+    P = g0.transition_matrix()
+    np.testing.assert_allclose(P.sum(-1), 1.0, atol=1e-12)
+    assert (np.count_nonzero(P, axis=-1) <= g0.branching).all()
+    assert not np.allclose(P, g1.transition_matrix())     # family varies
+    assert np.isfinite(g0.exact_value()).all()
+    prob = g0.vfa_problem(np.zeros(g0.num_states))
+    assert prob.check_assumption_1()
+    # deterministic per seed
+    np.testing.assert_array_equal(P, GarnetMDP(seed=0).transition_matrix())
+
+
+def test_garnet_sweep_runs_heterogeneous():
+    g = GarnetMDP(num_states=12, seed=3)
+    prob = g.vfa_problem(np.zeros(12))
+    # stay well under the stability limit: near it, the T=8-sample curvature
+    # estimate's bias flips the practical gain positive and nothing transmits
+    eps = 0.5 * prob.max_stable_stepsize()
+    rho = min(prob.min_rho(eps) * 1.0001, 0.999)
+    w0 = jnp.zeros(12)
+    rows = [g.agent_param_row(w0),
+            g.agent_param_row(w0, noise_scale=3.0),
+            g.agent_param_row(w0, visit_logits=jnp.arange(12.0) * 0.5)]
+    sampler = ParamSampler(fn=g.sampler_fn(8), params=stack_agent_params(*rows))
+    spec = SweepSpec(modes=("practical", "never"), lambdas=(1e-3,),
+                     seeds=(0, 1), rhos=(rho,), eps=eps, num_iterations=80,
+                     num_agents=3)
+    res = run_sweep(spec, sampler, w0, problem=prob)
+    j0 = float(prob.objective(w0))
+    # gated SGD learns; the never-transmit ablation cannot move the server
+    assert float(res.j_final[0].mean()) < j0
+    np.testing.assert_allclose(np.asarray(res.trace.weights[1, 0, 0, 0, -1]),
+                               np.asarray(w0))
+    assert float(res.comm_rate[1].max()) == 0.0
