@@ -6,8 +6,12 @@ MDP: final J, per-agent communication rate (eq. 7), and *total* fleet
 transmissions — quantifying the paper's observation that more agents learn
 faster "with almost the same amount of average communication rate".
 
-Seeds are vmapped through the sweep engine; one jitted call per fleet size
-(the agent count changes array shapes, so it cannot be trace-time data).
+Runs on the SUMMARY trace (trace="summary"): the engine streams running
+statistics — final weights, per-agent transmit counts, exact J(w_N) —
+instead of stacking (N+1, n) weight trajectories, so fleet size and
+iteration count stop competing for HBM (DESIGN.md §2).  Seeds are vmapped;
+one jitted call per fleet size (the agent count changes array shapes, so it
+cannot be trace-time data).
 """
 
 from __future__ import annotations
@@ -26,19 +30,22 @@ EPS = 0.5
 N = 150
 SEEDS = 3
 LAM = 5e-3
+FLEETS = (2, 4, 8, 16, 32)
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    n_iter, seeds, fleets = (30, 2, (2, 4)) if smoke else (N, SEEDS, FLEETS)
     gw = GridWorld()
     prob = gw.vfa_problem(np.zeros(gw.num_states))
     rho = prob.min_rho(EPS) * 1.0001
     w0 = jnp.zeros(gw.num_states)
     fn = gw.sampler_fn(10)
     rows = []
-    for agents in (2, 4, 8, 16, 32):
+    for agents in fleets:
         spec = SweepSpec(modes=("practical",), lambdas=(LAM,),
-                         seeds=tuple(range(SEEDS)), rhos=(rho,), eps=EPS,
-                         num_iterations=N, num_agents=agents)
+                         seeds=tuple(range(seeds)), rhos=(rho,), eps=EPS,
+                         num_iterations=n_iter, num_agents=agents,
+                         trace="summary")
         sampler = ParamSampler(fn=fn, params=gw.agent_params(w0, agents))
         t0 = time.perf_counter()
         res = run_sweep(spec, sampler, w0, problem=prob)
@@ -47,7 +54,8 @@ def run() -> list[dict]:
         rows.append(dict(
             bench="agents_scaling", agents=agents, lam=LAM,
             comm_rate=rate,
-            total_transmissions=rate * agents * N,
+            total_transmissions=float(
+                np.asarray(res.trace.tx_counts).sum(axis=-1).mean()),
             J_final=float(np.mean(np.asarray(res.j_final))),
-            us_per_call=(time.perf_counter() - t0) * 1e6 / SEEDS))
+            us_per_call=(time.perf_counter() - t0) * 1e6 / seeds))
     return rows

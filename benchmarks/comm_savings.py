@@ -37,7 +37,8 @@ from repro.core.fed_sgd import FedConfig, FedStats, tree_bytes
 from repro.optim import sgd
 from repro.data.synthetic_lm import SyntheticLMConfig, make_lm_batch
 
-lams = [float(a) for a in sys.argv[1:]]
+num_steps = int(sys.argv[1])
+lams = [float(a) for a in sys.argv[2:]]
 cfg = get_config('mamba2-370m').reduced()
 model = build_model(cfg)
 mesh = make_host_mesh(1)
@@ -56,7 +57,7 @@ for lam in lams:
         jax.tree.map(lambda s: NamedSharding(mesh, s), bundle.pspecs))
     state = opt.init(params); fs = FedStats.init(bundle.num_agents)
     losses = []
-    for step in range(30):
+    for step in range(num_steps):
         batch = make_lm_batch(lmc, jax.random.key(1), step)
         params, state, fs, m = bundle.step(params, state, fs, batch)
         losses.append(float(m['loss']))
@@ -73,13 +74,15 @@ for lam in lams:
 """
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    steps, lambdas = (4, (0.0, 30.0)) if smoke else (30, LAMBDAS)
     env = dict(os.environ,
                PYTHONPATH=os.path.join(REPO, "src"),
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     t0 = time.perf_counter()
     r = subprocess.run(
-        [sys.executable, "-c", _CODE] + [str(lam) for lam in LAMBDAS],
+        [sys.executable, "-c", _CODE, str(steps)]
+        + [str(lam) for lam in lambdas],
         capture_output=True, text=True, cwd=REPO, env=env, timeout=1800)
     # parse whatever completed BEFORE looking at the exit code: a crash at
     # lambda k must not discard the k-1 finished sweep points
@@ -88,9 +91,9 @@ def run() -> list[dict]:
     for rec in recs:
         rec.update(bench="comm_savings",
                    savings_pct=100.0 * (1.0 - rec["comm_rate"]),
-                   us_per_call=rec.pop("lam_wall_s") * 1e6 / 30)
+                   us_per_call=rec.pop("lam_wall_s") * 1e6 / steps)
         rows.append(rec)
-    for lam in LAMBDAS[len(recs):]:
+    for lam in lambdas[len(recs):]:
         rows.append(dict(bench="comm_savings", lam=lam,
                          error=("subprocess failed: " if r.returncode else
                                 "no output: ") + r.stderr[-500:]))

@@ -49,7 +49,9 @@ def _fleets(gw: GridWorld, w0):
     return jax.tree.map(lambda a, b: jnp.stack([a, b]), homog, hetero)
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    n_iter, seeds, lambdas = ((25, 2, (1e-3, 1e-1)) if smoke
+                              else (N, SEEDS, LAMBDAS))
     gw = GridWorld()
     w0 = jnp.zeros(gw.num_states)
     prob = gw.vfa_problem(np.zeros(gw.num_states))
@@ -58,9 +60,9 @@ def run() -> list[dict]:
     regimes = _fleets(gw, w0)
 
     # -- jitted call 1: both gated triggers, both regimes ---------------------
-    spec = SweepSpec(modes=("theoretical", "practical"), lambdas=LAMBDAS,
-                     seeds=tuple(range(SEEDS)), rhos=(rho,), eps=EPS,
-                     num_iterations=N, num_agents=2)
+    spec = SweepSpec(modes=("theoretical", "practical"), lambdas=lambdas,
+                     seeds=tuple(range(seeds)), rhos=(rho,), eps=EPS,
+                     num_iterations=n_iter, num_agents=2)
     t0 = time.perf_counter()
     res = run_sweep(spec, sampler, w0, problem=prob, param_sets=regimes)
     jax.block_until_ready(res.comm_rate)
@@ -68,7 +70,7 @@ def run() -> list[dict]:
 
     # -- jitted call 2: random baseline matched to the theoretical rates ------
     spec_rand = dataclasses.replace(
-        spec, modes=("random",), seeds=tuple(range(50, 50 + SEEDS)),
+        spec, modes=("random",), seeds=tuple(range(50, 50 + seeds)),
         random_tx_prob=matched_random_probs(res, spec))
     res_rand = run_sweep(spec_rand, sampler, w0, problem=prob,
                          param_sets=regimes)
@@ -90,14 +92,17 @@ def run() -> list[dict]:
     # One representative (mode, lam) slice through run_gated_sgd, per run.
     fleet = ParamSampler(fn=sampler.fn,
                          params=jax.tree.map(lambda x: x[0], regimes))
+    # same representative cell across PRs (lam=1e-2 on the full grid) so the
+    # recorded speedup trend stays apples-to-apples; clamp for smoke grids
     cfg = GatedSGDConfig(
-        trigger=TriggerConfig(lam=LAMBDAS[2], rho=rho, num_iterations=N),
+        trigger=TriggerConfig(lam=lambdas[min(2, len(lambdas) - 1)], rho=rho,
+                              num_iterations=n_iter),
         eps=EPS, num_agents=2, mode="practical")
     t3 = time.perf_counter()
-    for s in range(SEEDS):
+    for s in range(seeds):
         jax.block_until_ready(
             run_gated_sgd(jax.random.key(s), w0, fleet, cfg, problem=prob))
-    per_run_us = (time.perf_counter() - t3) * 1e6 / SEEDS
+    per_run_us = (time.perf_counter() - t3) * 1e6 / seeds
     engine_us = (t2 - t0) * 1e6 / (runs_gated + runs_rand)
     rows.append(dict(bench="fig2", mode="engine_speedup",
                      us_per_call=engine_us,

@@ -26,7 +26,9 @@ PANELS_2 = (("left_infrequent", 1e-1), ("middle_frequent", 1e-4),
             ("right_2agents", 1e-2))
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False, N: int = N, T: int = T) -> list[dict]:
+    if smoke:
+        N, T = 100, 64
     ls = LinearSystem()
     prob = ls.vfa_problem(np.zeros(6))
     eps = 0.9 * prob.max_stable_stepsize()

@@ -29,12 +29,12 @@ def _time(fn, *a, reps=3):
     return out, (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rng = np.random.default_rng(0)
     rows = []
 
     # gain kernel: the paper's O(Tn) agent-side computation
-    T, n = 4096, 2048
+    T, n = (256, 256) if smoke else (4096, 2048)
     phi = jnp.asarray(rng.normal(size=(T, n)).astype(np.float32))
     g = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
     got, us = _time(lambda: gain_matvec(phi, g))
@@ -44,7 +44,7 @@ def run() -> list[dict]:
                      gflop_per_call=2 * T * n / 1e9, max_abs_err=err))
 
     # flash attention tile
-    B, L, H, KVH, D = 1, 512, 4, 2, 64
+    B, L, H, KVH, D = (1, 256, 2, 1, 64) if smoke else (1, 512, 4, 2, 64)
     q = jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, L, KVH, D)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(B, L, KVH, D)).astype(np.float32))
@@ -57,7 +57,8 @@ def run() -> list[dict]:
                      max_abs_err=err))
 
     # ssd intra-chunk tile
-    Bc, nc, Q, Hh, P, N = 2, 4, 128, 4, 64, 32
+    Bc, nc, Q, Hh, P, N = ((1, 2, 64, 2, 32, 16) if smoke
+                           else (2, 4, 128, 4, 64, 32))
     dtx = jnp.asarray(rng.normal(size=(Bc, nc, Q, Hh, P)).astype(np.float32))
     cum = jnp.asarray((-np.abs(rng.normal(size=(Bc, nc, Q, Hh))).cumsum(2) * 0.1
                        ).astype(np.float32))

@@ -55,7 +55,8 @@ def diagnose(rec: dict) -> str:
     return "MXU-bound: already at the compute roofline for this shape"
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    del smoke  # aggregates pre-computed dry-run artifacts; already seconds-scale
     rows = []
     for rec in load_records():
         base = dict(bench="roofline", arch=rec["arch"], shape=rec["shape"],

@@ -6,6 +6,11 @@ writes full JSON to experiments/bench/.
 
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only fig2  # one suite
+  PYTHONPATH=src python -m benchmarks.run --smoke      # seconds-scale CI pass
+
+``--smoke`` shrinks every suite's grid to seconds-scale (tiny grids, few
+iterations) so the whole benchmark set runs inside CI; smoke results are
+NOT written to experiments/bench/ (they would overwrite the real numbers).
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ from benchmarks import (
     fig3_continuous,
     kernels_bench,
     roofline,
+    sweep_scaling,
     theorem1_bound,
 )
 from benchmarks.common import save_rows
@@ -30,6 +36,7 @@ SUITES = {
     "fig3": fig3_continuous,
     "theorem1": theorem1_bound,
     "agents_scaling": agents_scaling,
+    "sweep_scaling": sweep_scaling,
     "comm_savings": comm_savings,
     "kernels": kernels_bench,
     "roofline": roofline,
@@ -47,6 +54,8 @@ def _derived(row: dict) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale grids for CI; skips JSON output")
     args = ap.parse_args()
     names = [args.only] if args.only else list(SUITES)
 
@@ -55,16 +64,26 @@ def main() -> None:
     for name in names:
         t0 = time.time()
         try:
-            rows = SUITES[name].run()
+            rows = SUITES[name].run(smoke=args.smoke)
         except Exception as e:  # keep the harness going; report at the end
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
             failures += 1
             continue
-        save_rows(name, rows)
+        if not args.smoke:
+            save_rows(name, rows)
         for row in rows:
+            # subprocess suites report crashes as error rows rather than
+            # raising — surface them and fail the run (the CI smoke gate
+            # must go red when a suite never actually executed)
+            if "error" in row:
+                print(f"{row.get('bench', name)},ERROR,{row['error'][:200]}",
+                      flush=True)
+                failures += 1
+                continue
             label = row.get("bench", name)
             sub = [str(row[k]) for k in ("regime", "mode", "panel", "lam",
-                                         "arch", "shape", "mesh")
+                                         "arch", "shape", "mesh", "suite",
+                                         "devices", "env_instances")
                    if k in row]
             full = label + ("[" + "/".join(sub) + "]" if sub else "")
             print(f"{full},{row.get('us_per_call', 0):.1f},{_derived(row)}",

@@ -1,0 +1,137 @@
+"""Sweep-throughput frontier: grid size x device count, plus env-family scale.
+
+Two suites, both on the device-sharded, memory-streaming engine (ISSUE 2):
+
+* ``device_frontier`` — the same flattened grid executed on 1/2/4/8 host
+  devices (``XLA_FLAGS=--xla_force_host_platform_device_count``, one
+  subprocess per count since the device count locks at first jax init):
+  runs/s with the run axis shard_map'd over ``launch.mesh.make_sweep_mesh``.
+  On this 2-core container the frontier saturates at 2 devices — the JSON
+  records whatever the hardware gives; on a real multi-chip host the same
+  code is the scaling curve.
+* ``env_family`` — >= 64 random garnet MDP instances as the engine's
+  ``env_sets`` grid axis: one jitted call sweeps the whole family
+  (per-instance exact terms included), demonstrating the fleet-of-
+  environments axis at a scale the unsharded full-trace engine could not
+  hold in memory.
+
+Timings separate compile (first call) from steady-state execution.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+_CODE = r"""
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import GridWorld, family_sampler_fn, garnet_env_family
+from repro.experiments import SweepSpec, run_sweep
+from repro.launch.mesh import make_sweep_mesh
+
+cfg = json.loads(sys.argv[1])
+mesh = make_sweep_mesh()
+
+def timed_sweep(run_fn, grid_runs):
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_fn().comm_rate)        # compile + first exec
+    t1 = time.perf_counter()
+    res = run_fn()
+    jax.block_until_ready(res.comm_rate)             # steady state
+    t2 = time.perf_counter()
+    return res, dict(grid_runs=grid_runs,
+                     first_call_s=t1 - t0, exec_s=t2 - t1,
+                     runs_per_s=grid_runs / (t2 - t1),
+                     us_per_call=(t2 - t1) * 1e6 / grid_runs)
+
+if cfg["suite"] == "device_frontier":
+    gw = GridWorld()
+    prob = gw.vfa_problem(np.zeros(gw.num_states))
+    w0 = jnp.zeros(gw.num_states)
+    spec = SweepSpec(
+        modes=("theoretical", "practical", "random", "never"),
+        lambdas=tuple(np.logspace(-4, -1, cfg["lambdas"])),
+        seeds=tuple(range(cfg["seeds"])),
+        rhos=(prob.min_rho(0.5) * 1.0001,), eps=0.5,
+        num_iterations=cfg["iters"], num_agents=cfg["agents"],
+        trace="summary")
+    sampler = ParamSampler(fn=gw.sampler_fn(10),
+                           params=gw.agent_params(w0, cfg["agents"]))
+    runs = int(np.prod(spec.grid_shape))
+    _, t = timed_sweep(lambda: run_sweep(spec, sampler, w0, problem=prob,
+                                         mesh=mesh), runs)
+    t.update(bench="sweep_scaling", suite="device_frontier",
+             devices=jax.device_count(), iters=cfg["iters"],
+             agents=cfg["agents"])
+    print(json.dumps(t), flush=True)
+else:
+    envs, fam = garnet_env_family(cfg["env_instances"], num_states=20)
+    w0 = jnp.zeros(20)
+    spec = SweepSpec(
+        modes=("theoretical", "practical"), lambdas=(1e-3,),
+        seeds=tuple(range(cfg["seeds"])), rhos=(0.999,), eps=0.4,
+        num_iterations=cfg["iters"], num_agents=cfg["agents"],
+        trace="summary")
+    sampler = ParamSampler(fn=family_sampler_fn(10),
+                           params=envs[0].agent_params(w0, cfg["agents"]))
+    runs = cfg["env_instances"] * int(np.prod(spec.grid_shape))
+    res, t = timed_sweep(lambda: run_sweep(spec, sampler, w0, env_sets=fam,
+                                           mesh=mesh), runs)
+    jf = np.asarray(res.j_final)
+    env_ax = res.axes.index("env_set")
+    non_env = tuple(i for i in range(jf.ndim) if i != env_ax)
+    t.update(bench="sweep_scaling", suite="env_family",
+             devices=jax.device_count(),
+             env_instances=cfg["env_instances"],
+             jitted_calls=1, axes=list(res.axes),
+             J_final_mean=float(jf.mean()),
+             J_final_spread=float(np.std(jf.mean(axis=non_env))),
+             comm_rate_mean=float(np.mean(np.asarray(res.comm_rate))))
+    print(json.dumps(t), flush=True)
+"""
+
+
+def _subprocess(devices: int, cfg: dict) -> dict | None:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", _CODE, json.dumps(cfg)],
+                       capture_output=True, text=True, cwd=REPO, env=env,
+                       timeout=1800)
+    for line in r.stdout.splitlines():
+        if line.startswith("{"):
+            return json.loads(line)
+    return dict(bench="sweep_scaling", suite=cfg["suite"], devices=devices,
+                error=("subprocess failed: " if r.returncode else
+                       "no output: ") + r.stderr[-500:])
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        counts, grid = (1, 2), dict(lambdas=2, seeds=2, iters=25, agents=2)
+        family = dict(env_instances=8, seeds=1, iters=20, agents=2)
+    else:
+        counts, grid = DEVICE_COUNTS, dict(lambdas=4, seeds=4, iters=200,
+                                           agents=4)
+        family = dict(env_instances=64, seeds=2, iters=150, agents=4)
+    rows = []
+    t0 = time.perf_counter()
+    for d in counts:
+        rows.append(_subprocess(d, dict(suite="device_frontier", **grid)))
+    rows.append(_subprocess(counts[-1], dict(suite="env_family", **family)))
+    base = next((r.get("runs_per_s") for r in rows
+                 if r.get("devices") == 1 and "runs_per_s" in r), None)
+    for r in rows:
+        if base and r.get("suite") == "device_frontier" and "runs_per_s" in r:
+            r["speedup_vs_1dev"] = r["runs_per_s"] / base
+    rows[0]["sweep_wall_s"] = time.perf_counter() - t0
+    return rows

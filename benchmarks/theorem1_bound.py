@@ -28,7 +28,9 @@ SEEDS = 6
 LAMBDAS = (1e-4, 1e-3, 1e-2, 1e-1)
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    n_iter, seeds, lambdas, draws = ((30, 2, (1e-3, 1e-1), 60) if smoke
+                                     else (N, SEEDS, LAMBDAS, 300))
     gw = GridWorld()
     prob = gw.vfa_problem(np.zeros(gw.num_states))
     w0 = jnp.zeros(gw.num_states)
@@ -39,15 +41,15 @@ def run() -> list[dict]:
 
     # empirical Tr(Phi G) at w0 (Theorem 1 assumes constant covariance) —
     # one vmapped program instead of 300 sequential sampler calls
-    keys = jnp.stack([jax.random.key(10_000 + s) for s in range(300)])
+    keys = jnp.stack([jax.random.key(10_000 + s) for s in range(draws)])
     grads = jax.vmap(
         lambda k: stochastic_gradient(w0, *fn(params1, k)))(keys)
     G = np.cov(np.asarray(grads).T)
     tr_phi_g = float(np.trace(np.asarray(prob.second_moment()) @ G))
 
-    spec = SweepSpec(modes=("theoretical",), lambdas=LAMBDAS,
-                     seeds=tuple(range(SEEDS)), rhos=rhos, eps=EPS,
-                     num_iterations=N, num_agents=2)
+    spec = SweepSpec(modes=("theoretical",), lambdas=lambdas,
+                     seeds=tuple(range(seeds)), rhos=rhos, eps=EPS,
+                     num_iterations=n_iter, num_agents=2)
     sampler = ParamSampler(fn=fn, params=gw.agent_params(w0, 2))
     t0 = time.perf_counter()
     res = run_sweep(spec, sampler, w0, problem=prob)
@@ -57,13 +59,13 @@ def run() -> list[dict]:
     j0 = float(prob.objective(w0))
     jstar = float(prob.objective(prob.optimum()))
     rows = []
-    for li, lam in enumerate(LAMBDAS):
+    for li, lam in enumerate(lambdas):
         for ri, rho in enumerate(rhos):
             # metric (8) per seed, then MC mean over seeds
             vals = (lam * np.asarray(res.comm_rate[0, li, ri])
                     + np.asarray(res.j_final[0, li, ri]))
             lhs = float(np.mean(vals))
-            rhs = theorem1_bound(lam, rho, EPS, N, j0, jstar, tr_phi_g)
+            rhs = theorem1_bound(lam, rho, EPS, n_iter, j0, jstar, tr_phi_g)
             rows.append(dict(bench="theorem1", lam=lam, rho=round(rho, 5),
                              lhs_empirical=lhs, rhs_bound=rhs,
                              holds=bool(lhs <= rhs), slack=rhs - lhs,

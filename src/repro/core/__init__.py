@@ -6,6 +6,8 @@ from repro.core.algorithm1 import (  # noqa: F401
     InnerTrace,
     ParamSampler,
     ProblemTerms,
+    SummaryTrace,
+    TraceSpec,
     gated_sgd_core,
     performance_metric,
     run_gated_sgd,

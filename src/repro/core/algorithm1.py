@@ -84,6 +84,71 @@ class InnerTrace(NamedTuple):
     comm_rate: Array    # scalar: (1/N) sum_k mean_i alpha_k^i   (eq. 7)
 
 
+class TraceSpec(NamedTuple):
+    """What the *streaming* inner loop materializes (DESIGN.md §2).
+
+    The full trace stacks ``(N+1, n)`` weights per run, which caps sweep
+    grids at a single device's HBM once N or the grid is large.  A
+    ``TraceSpec`` instead selects O(1)-memory running summaries (always
+    carried: final weights, comm rate, per-agent transmit counts and gain
+    statistics; ``trace="summary"`` is exactly this default spec) plus,
+    optionally, opt-in per-iteration *scalar* streams:
+
+    * ``j_trajectory`` — exact ``J(w_k)`` per iteration via ``ProblemTerms``
+      ((N,) scalars instead of (N+1, n) weights; emitted only when ``terms``
+      are available — ``None`` otherwise, like ``j_final``).
+    * ``alphas`` / ``gains`` — the (N, m) decision/gain stacks, for callers
+      that need per-iteration communication detail but not weights.
+
+    Hashable (a NamedTuple of bools), so it rides through ``jax.jit``
+    static arguments — the sweep engine passes it via ``SweepSpec.trace``.
+    """
+
+    j_trajectory: bool = False
+    alphas: bool = False
+    gains: bool = False
+
+
+class SummaryTrace(NamedTuple):
+    """Streaming counterpart of ``InnerTrace``: running summaries only.
+
+    Peak live memory is independent of ``num_iterations`` (modulo the
+    optional scalar streams selected by ``TraceSpec``) — the property the
+    sharded sweep engine relies on for big-N grids; verified by
+    tests/test_sweep_sharded.py via ``memory_analysis()``.
+    """
+
+    final_weights: Array          # (n,) w_N
+    comm_rate: Array              # scalar, eq. 7
+    tx_counts: Array              # (m,) per-agent total transmissions
+    gain_mean: Array              # (m,) mean evaluated gain per agent
+    gain_min: Array               # (m,)
+    gain_max: Array               # (m,)
+    j_final: Optional[Array]      # scalar exact J(w_N), when terms given
+    j_trajectory: Optional[Array]  # (N,) exact J(w_k), TraceSpec.j_trajectory
+    alphas: Optional[Array]       # (N, m) when TraceSpec.alphas
+    gains: Optional[Array]        # (N, m) when TraceSpec.gains
+
+
+FULL_TRACE = "full"
+# "summary" is the strictly-O(1) policy (running summaries only); per-
+# iteration scalar streams (J trajectory, alpha/gain stacks) are opt-in
+# via an explicit TraceSpec so nobody pays O(N) buffers unknowingly.
+SUMMARY_TRACE = TraceSpec()
+
+
+def resolve_trace(trace) -> Union[str, TraceSpec]:
+    """Normalize the trace policy: 'full' | 'summary' | TraceSpec."""
+    if trace == "full":
+        return "full"
+    if trace == "summary":
+        return SUMMARY_TRACE
+    if isinstance(trace, TraceSpec):
+        return trace
+    raise ValueError(
+        f"trace must be 'full', 'summary' or a TraceSpec, got {trace!r}")
+
+
 class ProblemTerms(NamedTuple):
     """The exact problem reduced to sufficient statistics (jit-friendly).
 
@@ -148,7 +213,8 @@ def gated_sgd_core(
     num_agents: int,
     terms: Optional[ProblemTerms] = None,
     gain_backend: str = "reference",
-) -> InnerTrace:
+    trace: Union[str, TraceSpec] = "full",
+) -> Union[InnerTrace, SummaryTrace]:
     """Branchless inner loop of Algorithm 1 (lines 5-9).
 
     ``mode_id``, ``thresholds`` (N,) and ``tx_prob`` are *data*: the same
@@ -158,12 +224,23 @@ def gated_sgd_core(
     mask-selects the configured one (eq. 13 / 15 / Remark 4), applies the
     trigger (eq. 9 — or the random/always/never baselines), and performs the
     server update (eq. 6).
+
+    ``trace`` selects what the scan materializes: ``"full"`` (default)
+    stacks the per-iteration ``InnerTrace`` exactly as the bit-compat
+    contract requires; ``"summary"`` / a ``TraceSpec`` streams O(1)-memory
+    running summaries (``SummaryTrace``) so memory is independent of N —
+    the policy the device-sharded sweep engine uses for big grids.
     """
     N = thresholds.shape[0]
     phi_matrix = terms.phi_matrix if terms is not None else None
+    trace = resolve_trace(trace)
 
-    def step(w, inp):
-        k, rng_k = inp
+    def step_body(w, k, rng_k):
+        """One gated-SGD step: (w, k, rng_k) -> (w_next, alphas, gains).
+
+        Shared verbatim by the full and summary scans so both trace
+        policies execute identical per-step arithmetic.
+        """
         rngs = jax.random.split(rng_k, num_agents + 1)
         phi_b, targets_b = sample_all(rngs[:-1])
         grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
@@ -188,14 +265,57 @@ def gated_sgd_core(
         if not isinstance(mode_id, jax.core.Tracer):
             alphas = jax.lax.optimization_barrier(alphas)
         w_next = server_lib.server_update(w, grads, alphas, eps)
-        return w_next, (w_next, alphas, gains)
+        return w_next, alphas, gains
 
     rngs = jax.random.split(rng, N)
-    w_final, (ws, alphas, gains) = jax.lax.scan(step, w0, (jnp.arange(N), rngs))
-    del w_final
-    weights = jnp.concatenate([w0[None], ws], axis=0)
-    comm_rate = jnp.mean(alphas)
-    return InnerTrace(weights=weights, alphas=alphas, gains=gains, comm_rate=comm_rate)
+
+    if trace == "full":
+        def step(w, inp):
+            k, rng_k = inp
+            w_next, alphas, gains = step_body(w, k, rng_k)
+            return w_next, (w_next, alphas, gains)
+
+        w_final, (ws, alphas, gains) = jax.lax.scan(
+            step, w0, (jnp.arange(N), rngs))
+        del w_final
+        weights = jnp.concatenate([w0[None], ws], axis=0)
+        comm_rate = jnp.mean(alphas)
+        return InnerTrace(weights=weights, alphas=alphas, gains=gains,
+                          comm_rate=comm_rate)
+
+    def step_summary(carry, inp):
+        w, tx_counts, gain_sum, gain_min, gain_max = carry
+        k, rng_k = inp
+        w_next, alphas, gains = step_body(w, k, rng_k)
+        carry = (w_next,
+                 tx_counts + alphas,
+                 gain_sum + gains,
+                 jnp.minimum(gain_min, gains),
+                 jnp.maximum(gain_max, gains))
+        ys = (terms.objective(w_next)
+              if trace.j_trajectory and terms is not None else None,
+              alphas if trace.alphas else None,
+              gains if trace.gains else None)
+        return carry, ys
+
+    m = num_agents
+    init = (w0, jnp.zeros((m,)), jnp.zeros((m,)),
+            jnp.full((m,), jnp.inf), jnp.full((m,), -jnp.inf))
+    (w_final, tx_counts, gain_sum, gain_min, gain_max), ys = jax.lax.scan(
+        step_summary, init, (jnp.arange(N), rngs))
+    j_traj, alphas_s, gains_s = ys
+    return SummaryTrace(
+        final_weights=w_final,
+        comm_rate=jnp.sum(tx_counts) / (N * m),
+        tx_counts=tx_counts,
+        gain_mean=gain_sum / N,
+        gain_min=gain_min,
+        gain_max=gain_max,
+        j_final=terms.objective(w_final) if terms is not None else None,
+        j_trajectory=j_traj,
+        alphas=alphas_s,
+        gains=gains_s,
+    )
 
 
 def make_sample_all(
@@ -240,13 +360,16 @@ def run_gated_sgd(
     sampler: Union[Sampler, tuple, list, ParamSampler],
     cfg: GatedSGDConfig,
     problem: Optional[vfa_lib.VFAProblem] = None,
-) -> InnerTrace:
+    trace: Union[str, TraceSpec] = "full",
+) -> Union[InnerTrace, SummaryTrace]:
     """One inner run of Algorithm 1 (lines 5-9) for N iterations, m agents.
 
     ``problem`` (exact J / Phi) is required for mode == "theoretical" only.
     Thin wrapper over ``gated_sgd_core`` — the sweep engine vmaps the same
     core, so per-run and batched results agree (bit-compatibly on the
-    ``batching="map"`` path; see tests/test_sweep.py).
+    ``batching="map"`` path; see tests/test_sweep.py).  The full-trace
+    default is part of that contract; pass ``trace="summary"`` for the
+    O(1)-memory streaming summaries.
     """
     if cfg.mode == "theoretical" and problem is None:
         raise ValueError("theoretical mode needs the exact VFAProblem")
@@ -261,6 +384,7 @@ def run_gated_sgd(
         num_agents=cfg.num_agents,
         terms=terms,
         gain_backend=cfg.gain_backend,
+        trace=trace,
     )
 
 

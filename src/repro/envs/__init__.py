@@ -6,7 +6,15 @@ encode heterogeneity — the contract the batched sweep engine
 (repro.experiments) builds on.
 """
 
-from repro.envs.base import Env, as_param_sampler, stack_agent_params  # noqa: F401
-from repro.envs.garnet import GarnetMDP, garnet_family  # noqa: F401
+from repro.envs.base import (  # noqa: F401
+    Env,
+    EnvFamily,
+    as_param_sampler,
+    family_problem_terms,
+    family_sampler_fn,
+    stack_agent_params,
+    stack_env_family,
+)
+from repro.envs.garnet import GarnetMDP, garnet_env_family, garnet_family  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.envs.linear_system import LinearSystem  # noqa: F401

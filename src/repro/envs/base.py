@@ -19,7 +19,7 @@ Every env exposes the same three capabilities the experiment stack needs:
 
 from __future__ import annotations
 
-from typing import Optional, Protocol, runtime_checkable
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,27 @@ from repro.core import vfa as vfa_lib
 from repro.core.algorithm1 import ParamSampler, ProblemTerms
 
 Array = jax.Array
+
+
+class EnvFamily(NamedTuple):
+    """A stacked family of environments — the sweep engine's env grid axis.
+
+    ``params`` is a pytree whose leaves carry a leading instance axis
+    (E, ...) — for tabular envs ``{"P": (E, S, A, S), "c": (E, S),
+    "gamma": (E,)}`` — consumed by a THREE-argument sampler
+    ``fn(env_params, agent_params, rng)`` (``family_sampler_fn``).
+    ``terms`` optionally stacks the exact ``ProblemTerms`` per instance
+    (leaves (E, ...)), enabling the theoretical trigger and per-env J
+    summaries inside one jitted sweep.  Passed to ``run_sweep(env_sets=...)``
+    it becomes the outermost grid axis.
+    """
+
+    params: object
+    terms: Optional[ProblemTerms] = None
+
+    @property
+    def num_instances(self) -> int:
+        return int(jax.tree.leaves(self.params)[0].shape[0])
 
 
 @runtime_checkable
@@ -60,6 +81,68 @@ def as_param_sampler(env: Env, v_current, num_agents: int,
     )
 
 
+def family_sampler_fn(num_samples: int):
+    """Tabular sampling with the ENV as data: one fn for a whole MDP family.
+
+    ``fn(env_params, agent_params, rng) -> (phi_t (T, S), targets_t (T,))``
+    mirrors ``TabularSamplerMixin.sampler_fn`` step for step, but reads the
+    transition tensor / cost vector / discount from ``env_params`` instead
+    of closing over one instance — so an env family is a grid axis of the
+    sweep engine, not a retrace.  Built once per sample count; all
+    instances must share (S, A).
+    """
+
+    def fn(env_params, params, rng):
+        P, c = env_params["P"], env_params["c"]          # (S, A, S), (S,)
+        S, A = P.shape[0], P.shape[1]
+        r_x, r_a, r_n, r_t = jax.random.split(rng, 4)
+        x = jax.random.categorical(r_x, params["visit_logits"],
+                                   shape=(num_samples,))
+        a = jax.random.randint(r_a, (num_samples,), 0, A)
+        x_next = jax.random.categorical(r_n, jnp.log(P[x, a] + 1e-30), axis=-1)
+        targets = (c[x] + env_params["gamma"] * params["v"][x_next]
+                   + params["noise_scale"]
+                   * jax.random.normal(r_t, (num_samples,)))
+        return jax.nn.one_hot(x, S), targets
+
+    return fn
+
+
+def family_problem_terms(env_params, v_current: Array) -> ProblemTerms:
+    """Exact ``ProblemTerms`` of ONE env-params row at ``V_current`` —
+    jax-traceable, so a family stacks via ``jax.vmap`` (uniform policy,
+    uniform d, tabular phi: Phi = I/S, b = targets/S)."""
+    P_pi = env_params["P"].mean(axis=1)          # uniform policy
+    targets = env_params["c"] + env_params["gamma"] * (P_pi @ v_current)
+    S = env_params["c"].shape[0]
+    return ProblemTerms(
+        phi_matrix=jnp.eye(S) / S,
+        bvec=targets / S,
+        c0=jnp.sum(targets**2) / S,
+    )
+
+
+def stack_env_family(envs, v_current, with_terms: bool = True) -> EnvFamily:
+    """Stack tabular env instances into the sweep engine's env grid axis.
+
+    All instances must share (S, A) so the stacked leaves are rectangular;
+    heterogeneity across the family lives entirely in the transition /
+    cost / discount *values*.  ``with_terms`` also stacks the exact
+    ``ProblemTerms`` at ``v_current`` (theoretical trigger, J summaries).
+    """
+    rows = [e.env_params() for e in envs]
+    params = {
+        "P": jnp.stack([r["P"] for r in rows]),
+        "c": jnp.stack([r["c"] for r in rows]),
+        "gamma": jnp.asarray([r["gamma"] for r in rows], jnp.float32),
+    }
+    terms = None
+    if with_terms:
+        v = jnp.asarray(v_current, jnp.float32)
+        terms = jax.vmap(lambda ep: family_problem_terms(ep, v))(params)
+    return EnvFamily(params=params, terms=terms)
+
+
 class TabularSamplerMixin:
     """Shared parameterized sampling for finite-state envs (tabular phi).
 
@@ -76,22 +159,27 @@ class TabularSamplerMixin:
     once (DESIGN.md §2).
     """
 
+    def env_params(self) -> dict:
+        """This instance as the data pytree ``family_sampler_fn`` consumes."""
+        return {
+            "P": jnp.asarray(self.transition_matrix(), jnp.float32),
+            "c": jnp.asarray(self.cost_vector(), jnp.float32),
+            "gamma": self.gamma,
+        }
+
     def sampler_fn(self, num_samples: int):
-        """(params, rng) -> (phi_t (T, S), targets_t (T,)), jax-pure."""
-        P = jnp.asarray(self.transition_matrix())      # (S, A, S)
-        c = jnp.asarray(self.cost_vector())            # (S,)
-        S, A, gamma = self.num_states, self.num_actions, self.gamma
+        """(params, rng) -> (phi_t (T, S), targets_t (T,)), jax-pure.
+
+        Delegates to ``family_sampler_fn`` with this instance's env params
+        closed over — one arithmetic definition serves both the single-env
+        and the env-family sweep paths (parity by construction, not by
+        keeping two copies in sync).
+        """
+        env = self.env_params()
+        fam = family_sampler_fn(num_samples)
 
         def fn(params, rng):
-            r_x, r_a, r_n, r_t = jax.random.split(rng, 4)
-            x = jax.random.categorical(r_x, params["visit_logits"],
-                                       shape=(num_samples,))
-            a = jax.random.randint(r_a, (num_samples,), 0, A)
-            x_next = jax.random.categorical(r_n, jnp.log(P[x, a] + 1e-30), axis=-1)
-            targets = (c[x] + gamma * params["v"][x_next]
-                       + params["noise_scale"]
-                       * jax.random.normal(r_t, (num_samples,)))
-            return jax.nn.one_hot(x, S), targets
+            return fam(env, params, rng)
 
         return fn
 
@@ -119,13 +207,8 @@ class TabularSamplerMixin:
     def problem_terms(self, v_current: Array) -> ProblemTerms:
         """Exact ``ProblemTerms`` for V_current, jax-traceable (scan-able VI).
 
-        Tabular phi = e_s under uniform d gives Phi = I/S, b = targets/S.
+        Tabular phi = e_s under uniform d gives Phi = I/S, b = targets/S;
+        delegates to ``family_problem_terms`` (one definition for the
+        single-env and env-family paths).
         """
-        P_pi = jnp.asarray(self.policy_transition())
-        targets = jnp.asarray(self.cost_vector()) + self.gamma * (P_pi @ v_current)
-        S = self.num_states
-        return ProblemTerms(
-            phi_matrix=jnp.eye(S) / S,
-            bvec=targets / S,
-            c0=jnp.sum(targets**2) / S,
-        )
+        return family_problem_terms(self.env_params(), v_current)

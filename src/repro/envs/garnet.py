@@ -93,3 +93,19 @@ class GarnetMDP(TabularSamplerMixin):
 def garnet_family(num_instances: int, **kwargs) -> tuple[GarnetMDP, ...]:
     """``num_instances`` i.i.d. instances sharing (S, A, b) — one per seed."""
     return tuple(GarnetMDP(seed=s, **kwargs) for s in range(num_instances))
+
+
+def garnet_env_family(num_instances: int, v_current=None,
+                      with_terms: bool = True, **kwargs):
+    """The family stacked as a sweep-engine env grid axis.
+
+    Returns ``(envs, EnvFamily)``: the instances plus their stacked
+    params / exact terms at ``v_current`` (default w = 0).  Pair with
+    ``repro.envs.base.family_sampler_fn`` and ``run_sweep(env_sets=...)``
+    to sweep hundreds of random MDPs in one jitted call.
+    """
+    from repro.envs.base import stack_env_family
+    envs = garnet_family(num_instances, **kwargs)
+    if v_current is None:
+        v_current = np.zeros(envs[0].num_states, np.float32)
+    return envs, stack_env_family(envs, v_current, with_terms=with_terms)

@@ -1,6 +1,7 @@
 """Batched experiment engine: whole grids as single jitted programs."""
 
 from repro.experiments.sweep import (  # noqa: F401
+    BASE_AXES,
     SweepResult,
     SweepSpec,
     matched_random_probs,

@@ -1,20 +1,30 @@
-"""The batched sweep engine (DESIGN.md §2, EXPERIMENTS.md §Engine).
+"""The device-sharded, memory-streaming sweep engine (DESIGN.md §2).
 
 The paper's headline artifacts — Fig. 2/3 tradeoff curves and the Theorem 1
 validation — are grids over (trigger mode x lambda x rho x seed), which the
-seed repo executed as hundreds of sequential ``run_gated_sgd`` calls,
-re-dispatching (and for every new config, re-tracing) per run.  Because the
-refactored Algorithm 1 core is branchless — mode id, thresholds and the
-random-transmit probability are all *data* — an entire grid is just the same
-compiled program evaluated at many points.  ``run_sweep`` therefore:
+seed repo executed as hundreds of sequential ``run_gated_sgd`` calls.
+Because the refactored Algorithm 1 core is branchless — mode id, thresholds
+and the random-transmit probability are all *data* — an entire grid is just
+the same compiled program evaluated at many points.  ``run_sweep``:
 
-  1. flattens the requested grid (optional agent-parameter-set axis x modes
-     x lambdas x rhos x seeds) into per-run arrays,
-  2. executes ONE jitted call — ``vmap`` (default, fastest) or ``lax.map``
+  1. flattens the requested grid (optional env-family axis x optional
+     agent-parameter-set axis x modes x lambdas x rhos x seeds) into
+     per-run arrays,
+  2. executes ONE jitted call — ``vmap`` (default, fastest), ``lax.map``
      (sequential; bit-identical to per-run execution, used by the parity
-     tests) over the shared ``gated_sgd_core`` —
-  3. reshapes everything back to the grid and attaches exact-objective
-     summaries.
+     tests), or chunked map-over-vmap (``SweepSpec.chunk_size``) for grids
+     larger than memory — over the shared ``gated_sgd_core``,
+  3. optionally shards the flattened run axis over a device mesh
+     (``mesh=``, see ``repro.launch.mesh.make_sweep_mesh``) with padding to
+     a multiple of the device count,
+  4. reshapes everything back to the grid and attaches exact-objective
+     summaries plus a grid-axes descriptor (``SweepResult.axes``).
+
+Memory scaling: ``SweepSpec.trace`` selects the full per-iteration
+``InnerTrace`` (default, the bit-compat contract) or the O(1)-memory
+streaming ``SummaryTrace`` (``"summary"`` / a ``TraceSpec``) whose peak
+live memory is independent of ``num_iterations`` — the policy big-N /
+big-grid sweeps should use.
 
 Seeds map to keys exactly as the per-run convention (``jax.random.key(s)``),
 so a sweep cell and the corresponding single run see identical randomness.
@@ -30,7 +40,9 @@ from typing import NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.core import vfa as vfa_lib
 from repro.core.algorithm1 import (
     MODE_IDS,
@@ -38,11 +50,19 @@ from repro.core.algorithm1 import (
     InnerTrace,
     ParamSampler,
     ProblemTerms,
+    SummaryTrace,
+    TraceSpec,
     gated_sgd_core,
+    resolve_trace,
 )
 from repro.core.trigger import TriggerConfig
 
 Array = jax.Array
+
+# The grid axes every sweep carries, slowest-varying last-4; env-family and
+# agent-param-set axes prepend when requested.  SweepResult.axes reports the
+# actual per-result tuple so downstream row builders never guess from ndim.
+BASE_AXES = ("mode", "lam", "rho", "seed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +72,11 @@ class SweepSpec:
     ``random_tx_prob`` may be a scalar or anything broadcastable to the grid
     shape — e.g. Fig 2's rate-matched random baseline passes the measured
     per-(regime, lambda) theoretical rates.  ``batching="map"`` trades the
-    vmap wall-clock win for bit-identical-to-per-run numerics.
+    vmap wall-clock win for bit-identical-to-per-run numerics;
+    ``chunk_size`` (vmap only) streams the grid through ``lax.map`` in
+    vmapped chunks of that size, bounding live memory for grids larger than
+    a device.  ``trace`` selects full per-iteration traces or O(1)-memory
+    streaming summaries (see ``repro.core.algorithm1.TraceSpec``).
     """
 
     modes: tuple[str, ...]
@@ -66,6 +90,8 @@ class SweepSpec:
     random_tx_prob: Union[float, np.ndarray] = 0.5
     gain_backend: str = "reference"
     batching: str = "vmap"          # 'vmap' | 'map'
+    trace: Union[str, TraceSpec] = "full"   # 'full' | 'summary' | TraceSpec
+    chunk_size: Optional[int] = None
 
     def __post_init__(self):
         for m in self.modes:
@@ -73,6 +99,13 @@ class SweepSpec:
                 raise ValueError(f"unknown mode {m!r}, must be one of {MODES}")
         if self.batching not in ("vmap", "map"):
             raise ValueError(f"batching must be 'vmap' or 'map', got {self.batching!r}")
+        resolve_trace(self.trace)   # validates
+        if self.chunk_size is not None:
+            if self.batching != "vmap":
+                raise ValueError("chunk_size only applies to batching='vmap' "
+                                 "(lax.map is already sequential)")
+            if self.chunk_size < 1:
+                raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
 
     @property
     def grid_shape(self) -> tuple[int, int, int, int]:
@@ -91,41 +124,96 @@ class SweepSpec:
 
 
 class SweepResult(NamedTuple):
-    """Stacked traces + summaries; leading axes = ([param_set,] M, L, R, S)."""
+    """Stacked traces + summaries; ``axes`` names the leading grid axes.
 
-    trace: InnerTrace          # weights (..., N+1, n), alphas/gains (..., N, m)
-    comm_rate: Array           # (...,) eq. 7 per run
-    j_final: Optional[Array]   # (...,) exact J(w_N), when a problem was given
+    ``trace`` is an ``InnerTrace`` (full) or ``SummaryTrace`` (streaming),
+    each leaf carrying the grid shape as its leading axes — e.g.
+    ``axes == ("env_set", "mode", "lam", "rho", "seed")`` for an env-family
+    sweep.  Downstream consumers (``tradeoff_rows``) index by axis *name*,
+    never by ndim, so new leading axes cannot silently mislabel rows.
+    """
+
+    trace: Union[InnerTrace, SummaryTrace]
+    comm_rate: Array           # (*grid,) eq. 7 per run
+    j_final: Optional[Array]   # (*grid,) exact J(w_N), when a problem was given
+    axes: tuple[str, ...] = BASE_AXES
 
     @property
     def final_weights(self) -> Array:
+        if isinstance(self.trace, SummaryTrace):
+            return self.trace.final_weights
         return self.trace.weights[..., -1, :]
+
+
+class _RunInputs(NamedTuple):
+    """Per-run leaves of the flattened grid (leading axis = padded runs).
+
+    Grid-axis selections are carried as *indices* into the replicated
+    param-set / env-family stacks, gathered per run inside the jitted
+    program — the host never materializes a per-run copy of the (possibly
+    large) environment tensors.
+    """
+
+    keys: Array                 # (G,) typed PRNG keys
+    mode_ids: Array             # (G,)
+    thresholds: Array           # (G, N)
+    tx_probs: Array             # (G,)
+    set_idx: Optional[Array]    # (G,) index into the param-set stack, or None
+    env_idx: Optional[Array]    # (G,) index into the env-family stack, or None
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("sampler_fn", "eps", "num_agents", "gain_backend",
-                     "batching", "share_params"),
+                     "batching", "share_params", "per_run_terms", "trace",
+                     "chunk_size", "mesh"),
 )
-def _sweep_exec(keys, w0, mode_ids, thresholds, tx_probs, agent_params, terms,
-                *, sampler_fn, eps, num_agents, gain_backend, batching,
-                share_params):
-    def one(key, mode_id, thr, txp, params):
-        return gated_sgd_core(
-            key, w0, mode_id, thr, txp,
-            lambda rngs: jax.vmap(sampler_fn)(params, rngs),
-            eps, num_agents, terms=terms, gain_backend=gain_backend)
+def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
+                shared_terms, *, sampler_fn, eps, num_agents, gain_backend,
+                batching, share_params, per_run_terms, trace, chunk_size,
+                mesh):
+    def block(per_run, w0, shared_params, param_stack, env_stack, env_terms,
+              shared_terms):
+        """Execute a (shard-local) block of runs; leading axis = runs."""
 
-    if batching == "map":
-        if share_params:
-            return jax.lax.map(
-                lambda xs: one(*xs, agent_params),
-                (keys, mode_ids, thresholds, tx_probs))
-        return jax.lax.map(
-            lambda xs: one(*xs),
-            (keys, mode_ids, thresholds, tx_probs, agent_params))
-    return jax.vmap(one, in_axes=(0, 0, 0, 0, None if share_params else 0))(
-        keys, mode_ids, thresholds, tx_probs, agent_params)
+        def one(run: _RunInputs):
+            params = (shared_params if share_params else
+                      jax.tree.map(lambda x: x[run.set_idx], param_stack))
+            terms = (jax.tree.map(lambda x: x[run.env_idx], env_terms)
+                     if per_run_terms else shared_terms)
+            if env_stack is not None:
+                env = jax.tree.map(lambda x: x[run.env_idx], env_stack)
+                sample_all = lambda rngs: jax.vmap(
+                    sampler_fn, in_axes=(None, 0, 0))(env, params, rngs)
+            else:
+                sample_all = lambda rngs: jax.vmap(sampler_fn)(params, rngs)
+            return gated_sgd_core(
+                run.keys, w0, run.mode_ids, run.thresholds, run.tx_probs,
+                sample_all, eps, num_agents, terms=terms,
+                gain_backend=gain_backend, trace=trace)
+
+        if batching == "map":
+            return jax.lax.map(one, per_run)
+        if chunk_size is not None:
+            K = per_run.thresholds.shape[0]
+            chunked = jax.tree.map(
+                lambda x: x.reshape((K // chunk_size, chunk_size) + x.shape[1:]),
+                per_run)
+            out = jax.lax.map(lambda ch: jax.vmap(one)(ch), chunked)
+            return jax.tree.map(
+                lambda x: x.reshape((K,) + x.shape[2:]), out)
+        return jax.vmap(one)(per_run)
+
+    if mesh is None:
+        return block(per_run, w0, shared_params, param_stack, env_stack,
+                     env_terms, shared_terms)
+    axis = mesh.axis_names[0]
+    sharded = compat.shard_map(
+        block, mesh=mesh,
+        in_specs=(PartitionSpec(axis),) + (PartitionSpec(),) * 6,
+        out_specs=PartitionSpec(axis))
+    return sharded(per_run, w0, shared_params, param_stack, env_stack,
+                   env_terms, shared_terms)
 
 
 def run_sweep(
@@ -135,83 +223,152 @@ def run_sweep(
     problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
     *,
     param_sets: Optional[object] = None,
+    env_sets: Optional[object] = None,
+    mesh=None,
 ) -> SweepResult:
     """Execute the whole grid as one jitted call.
 
     Args:
       sampler:    the fleet (shared sampling fn + stacked per-agent params).
-      problem:    exact problem for the theoretical trigger / J summaries.
+                  With ``env_sets`` the fn takes THREE arguments
+                  ``(env_params, agent_params, rng)`` — see
+                  ``repro.envs.base.family_sampler_fn``.
+      problem:    exact problem for the theoretical trigger / J summaries
+                  (shared across the grid; superseded by per-env terms).
       param_sets: optional pytree of *stacked agent-param sets*, leaves
-                  (P, m, ...) — adds a leading param-set axis to the grid
-                  (e.g. Fig 2's homogeneous vs heterogeneous regimes in one
-                  call).  When given, ``sampler.params`` is ignored.
+                  (P, m, ...) — adds a leading ``"param_set"`` axis to the
+                  grid (e.g. Fig 2's homogeneous vs heterogeneous regimes in
+                  one call).  When given, ``sampler.params`` is ignored.
+      env_sets:   optional env family (``repro.envs.base.EnvFamily`` or any
+                  object with ``.params`` — leaves (E, ...) — and
+                  ``.terms`` — stacked ``ProblemTerms`` or None): adds the
+                  outermost ``"env_set"`` axis, so hundreds of random MDPs
+                  sweep in the same jitted call.
+      mesh:       optional 1-axis device mesh (``launch.mesh.make_sweep_mesh``):
+                  the flattened run axis is sharded over its devices via
+                  ``shard_map``, padded to a multiple of the device count
+                  (and of ``chunk_size``); per-run results are unchanged —
+                  bitwise for ``batching="map"``.
 
     Returns a SweepResult whose leaves carry the grid shape
-    ``([P,] M, L, R, S)``.
+    ``([E,] [P,] M, L, R, S)`` and whose ``axes`` names those axes.
     """
-    if problem is None and "theoretical" in spec.modes:
-        raise ValueError("theoretical mode needs the exact problem")
     terms = (problem if isinstance(problem, ProblemTerms)
              else ProblemTerms.from_problem(problem) if problem is not None
              else None)
+    env_terms = getattr(env_sets, "terms", None) if env_sets is not None else None
+    if "theoretical" in spec.modes and terms is None and env_terms is None:
+        raise ValueError("theoretical mode needs the exact problem "
+                         "(problem= or env_sets with terms)")
 
     M, L, R, S = spec.grid_shape
-    inner = M * L * R * S
     share_params = param_sets is None
-    if share_params:
-        params, P = sampler.params, 1
-        gs: tuple[int, ...] = (M, L, R, S)
-    else:
+    gs: tuple[int, ...] = ()
+    axes: tuple[str, ...] = ()
+    if env_sets is not None:
+        E = int(jax.tree.leaves(env_sets.params)[0].shape[0])
+        gs += (E,)
+        axes += ("env_set",)
+    if not share_params:
         P = int(jax.tree.leaves(param_sets)[0].shape[0])
-        gs = (P, M, L, R, S)
-        # C-order flatten => param-set index is the slowest axis
-        params = jax.tree.map(
-            lambda x: jnp.repeat(x, inner, axis=0), param_sets)
-    G = P * inner
+        gs += (P,)
+        axes += ("param_set",)
+    gs += (M, L, R, S)
+    axes += BASE_AXES
+    G = math.prod(gs)
 
     grid = np.indices(gs).reshape(len(gs), G)
     mi, li, ri, si = grid[-4], grid[-3], grid[-2], grid[-1]
+    ei = grid[0] if env_sets is not None else None
+    pi = grid[1 if env_sets is not None else 0] if not share_params else None
+
+    # Pad the flattened run axis so it divides evenly over devices and
+    # chunks; padding runs recompute existing cells and are dropped below.
+    D = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+    C = spec.chunk_size or 1
+    Gp = D * C * math.ceil(G / (D * C))
+    pad = np.arange(Gp) % G
+    mi, li, ri, si = mi[pad], li[pad], ri[pad], si[pad]
+
     mode_ids = jnp.asarray([MODE_IDS[m] for m in spec.modes], jnp.int32)[mi]
-    thresholds = jnp.asarray(spec.thresholds())[li, ri]            # (G, N)
+    thresholds = jnp.asarray(spec.thresholds())[li, ri]            # (Gp, N)
     tx_probs = jnp.asarray(
         np.broadcast_to(np.asarray(spec.random_tx_prob, np.float32), gs)
-    ).reshape(G)
+        .reshape(G)[pad])
     keys = jnp.stack([jax.random.key(int(s)) for s in spec.seeds])[si]
 
+    shared_params = param_stack = None
+    if share_params:
+        shared_params = sampler.params
+    else:
+        param_stack = jax.tree.map(jnp.asarray, param_sets)
+    env_stack = None
+    if env_sets is not None:
+        env_stack = jax.tree.map(jnp.asarray, env_sets.params)
+        if env_terms is not None:
+            env_terms = jax.tree.map(jnp.asarray, env_terms)
+    per_run_terms = env_terms is not None
+
+    per_run = _RunInputs(
+        keys=keys, mode_ids=mode_ids, thresholds=thresholds,
+        tx_probs=tx_probs,
+        set_idx=None if share_params else jnp.asarray(pi[pad], jnp.int32),
+        env_idx=(jnp.asarray(ei[pad], jnp.int32)
+                 if env_sets is not None else None))
+
     flat = _sweep_exec(
-        keys, jnp.asarray(w0), mode_ids, thresholds, tx_probs, params, terms,
+        per_run, jnp.asarray(w0), shared_params, param_stack, env_stack,
+        env_terms if per_run_terms else None,
+        None if per_run_terms else terms,
         sampler_fn=sampler.fn, eps=spec.eps, num_agents=spec.num_agents,
         gain_backend=spec.gain_backend, batching=spec.batching,
-        share_params=share_params)
+        share_params=share_params, per_run_terms=per_run_terms,
+        trace=resolve_trace(spec.trace), chunk_size=spec.chunk_size,
+        mesh=mesh)
 
-    trace = jax.tree.map(lambda x: x.reshape(gs + x.shape[1:]), flat)
-    j_final = None
-    if terms is not None:
+    flat = jax.tree.map(lambda x: x[:G], flat)
+    result = jax.tree.map(lambda x: x.reshape(gs + x.shape[1:]), flat)
+
+    if isinstance(flat, SummaryTrace):
+        j_final = result.j_final          # streamed inside the scan
+    elif per_run_terms:
+        def _j(i, w):
+            t = jax.tree.map(lambda x: x[i], env_terms)
+            return t.objective(w)
+        j_final = jax.vmap(_j)(jnp.asarray(ei, jnp.int32),
+                               flat.weights[:, -1, :]).reshape(gs)
+    elif terms is not None:
         j_final = jax.vmap(terms.objective)(
             flat.weights[:, -1, :]).reshape(gs)
-    return SweepResult(trace=trace, comm_rate=trace.comm_rate, j_final=j_final)
+    else:
+        j_final = None
+    return SweepResult(trace=result, comm_rate=result.comm_rate,
+                       j_final=j_final, axes=axes)
 
 
 def tradeoff_rows(result: SweepResult, spec: SweepSpec, **extra) -> list[dict]:
     """Fig-2-style tradeoff summary: mean over seeds per grid cell.
 
-    Returns one dict per ([param_set,] mode, lambda, rho) with the mean
-    communication rate, mean final J (if available) and the paper's metric
-    (8) ``lam * comm_rate + J``.  ``extra`` key/values are attached to every
-    row (bench name, regime labels, ...).
+    Returns one dict per ([env_set,] [param_set,] mode, lambda, rho) with
+    the mean communication rate, mean final J (if available) and the
+    paper's metric (8) ``lam * comm_rate + J``.  Leading grid axes are read
+    from ``result.axes`` — never inferred from array rank — so an env-set
+    or device axis cannot mislabel rows.  ``extra`` key/values are attached
+    to every row (bench name, regime labels, ...).
     """
+    if result.axes[-4:] != BASE_AXES:
+        raise ValueError(f"unexpected trailing axes {result.axes!r}")
+    lead = result.axes[:-4]
     comm = np.asarray(result.comm_rate).mean(axis=-1)      # seeds out
     jf = (np.asarray(result.j_final).mean(axis=-1)
           if result.j_final is not None else None)
-    has_p = comm.ndim == 4
     rows = []
     for idx in np.ndindex(*comm.shape):
-        p = idx[0] if has_p else None
         m, l, r = idx[-3], idx[-2], idx[-1]
         row = dict(mode=spec.modes[m], lam=spec.lambdas[l], rho=spec.rhos[r],
                    comm_rate=float(comm[idx]), **extra)
-        if p is not None:
-            row["param_set"] = p
+        for name, i in zip(lead, idx):
+            row[name] = int(i)
         if jf is not None:
             row["J_final"] = float(jf[idx])
             row["metric8"] = float(spec.lambdas[l] * comm[idx] + jf[idx])
@@ -226,9 +383,12 @@ def matched_random_probs(result: SweepResult, spec: SweepSpec,
     Takes the measured comm rates of ``mode`` in ``result``, averages over
     seeds, and broadcasts back to a single-mode grid — ready to be passed as
     ``SweepSpec.random_tx_prob`` for a follow-up ``modes=("random",)`` sweep
-    with the same lambdas/rhos/seeds.
+    with the same lambdas/rhos/seeds (leading env/param-set axes ride along
+    unchanged).
     """
+    if result.axes[-4:] != BASE_AXES:
+        raise ValueError(f"unexpected trailing axes {result.axes!r}")
     comm = np.asarray(result.comm_rate)
     m = spec.modes.index(mode)
-    rates = comm[..., m, :, :, :].mean(axis=-1, keepdims=True)   # ([P,] L, R, 1)
-    return rates[..., None, :, :, :]                             # ([P,] 1, L, R, 1)
+    rates = comm[..., m, :, :, :].mean(axis=-1, keepdims=True)   # (..., L, R, 1)
+    return rates[..., None, :, :, :]                             # (..., 1, L, R, 1)

@@ -37,6 +37,28 @@ def make_host_mesh(model_axis: int = 1):
     return _make_mesh((data, model_axis), ("data", "model"))
 
 
+SWEEP_AXIS = "grid"
+
+
+def make_sweep_mesh(num_devices: int | None = None):
+    """1-D mesh over the flattened sweep-run axis (DESIGN.md §2).
+
+    The sweep engine shards its flattened grid axis over this mesh's
+    ``"grid"`` axis via ``shard_map`` — pure batch parallelism, no
+    collectives.  ``num_devices`` restricts to a prefix of the available
+    devices (the device-scaling benchmark sweeps it); default is all.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if num_devices is not None:
+        if num_devices > len(devs):
+            raise ValueError(
+                f"asked for {num_devices} devices, only {len(devs)} present")
+        devs = devs[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devs), (SWEEP_AXIS,))
+
+
 def federation_axis(mesh) -> str:
     """The paper's agent axis: cross-pod when present, else data (DESIGN §4)."""
     return "pod" if "pod" in mesh.axis_names else "data"

@@ -174,6 +174,31 @@ def test_matched_random_probs_broadcasts():
     np.testing.assert_allclose(got, want, atol=0.1)
 
 
+def test_matched_random_rate_roundtrip_with_param_sets():
+    """A rate-matched modes=("random",) sweep reproduces the theoretical
+    trigger's measured comm rates within tolerance — per param set, so the
+    broadcasting path through the extra leading grid axis is exercised."""
+    good = GW.agent_param_row(W0)
+    noisy = GW.agent_param_row(W0, noise_scale=2.0)
+    regimes = jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                           stack_agent_params(good, good),
+                           stack_agent_params(good, noisy))
+    sampler = ParamSampler(fn=GW.sampler_fn(10), params=None)
+    spec = _spec(modes=("theoretical",), lambdas=(3e-2, 1e-1), seeds=(0, 1, 2, 3),
+                 num_iterations=120)
+    res = run_sweep(spec, sampler, W0, problem=PROB, param_sets=regimes)
+    assert res.axes == ("param_set", "mode", "lam", "rho", "seed")
+    probs = matched_random_probs(res, spec)
+    assert probs.shape == (2, 1, 2, 1, 1)       # (P, 1, L, R, 1)
+    spec_r = dataclasses.replace(
+        spec, modes=("random",), seeds=(10, 11, 12, 13), random_tx_prob=probs)
+    res_r = run_sweep(spec_r, sampler, W0, problem=PROB, param_sets=regimes)
+    want = np.asarray(res.comm_rate).mean(axis=-1)       # (P, 1, L, R)
+    got = np.asarray(res_r.comm_rate).mean(axis=-1)
+    # Bernoulli(p) over N*m draws concentrates around the matched rate
+    np.testing.assert_allclose(got, want, atol=0.08)
+
+
 # ------------------------------------------------------------- outer VI ----
 
 

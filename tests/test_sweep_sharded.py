@@ -1,0 +1,255 @@
+"""Device-sharded, memory-streaming sweep engine contract (ISSUE 2):
+
+* the same SweepSpec on 1 device and on a multi-device mesh produces
+  identical results (bitwise for batching="map", <=1e-6 for vmap),
+  including when the grid does not divide the device count (padding);
+* summary-trace mode matches the full-trace J(w_k) trajectory, and its
+  peak live memory is independent of num_iterations (memory_analysis);
+* env families are a grid axis: a stacked garnet sweep reproduces the
+  corresponding per-env sweeps;
+* chunked map-over-vmap batching matches plain vmap.
+
+Multi-device cases need XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the CI multidevice job sets it); they skip on a single-device container.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import (
+    ParamSampler,
+    ProblemTerms,
+    SummaryTrace,
+    TraceSpec,
+    gated_sgd_core,
+)
+from repro.envs import GridWorld, family_sampler_fn, garnet_env_family
+from repro.experiments import SweepSpec, run_sweep, tradeoff_rows
+from repro.launch.mesh import make_sweep_mesh
+
+EPS = 0.5
+N = 40
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count)")
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical", "random"),
+                lambdas=(1e-3, 1e-1), seeds=(0, 1, 2), rhos=(RHO,), eps=EPS,
+                num_iterations=N, num_agents=2, random_tx_prob=0.4)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+# ------------------------------------------------------------- sharding ----
+
+
+@multidevice
+def test_sharded_map_is_bitwise_identical():
+    """Acceptance: 1-device vs mesh, batching='map' — bitwise parity."""
+    spec = _spec(batching="map")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep(spec, _sampler(), W0, problem=PROB, mesh=make_sweep_mesh())
+    np.testing.assert_array_equal(np.asarray(got.comm_rate),
+                                  np.asarray(ref.comm_rate))
+    np.testing.assert_array_equal(np.asarray(got.trace.weights),
+                                  np.asarray(ref.trace.weights))
+    np.testing.assert_array_equal(np.asarray(got.j_final),
+                                  np.asarray(ref.j_final))
+
+
+@multidevice
+def test_sharded_vmap_matches_within_tolerance():
+    spec = _spec(batching="vmap")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep(spec, _sampler(), W0, problem=PROB, mesh=make_sweep_mesh())
+    np.testing.assert_allclose(np.asarray(got.comm_rate),
+                               np.asarray(ref.comm_rate), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.j_final),
+                               np.asarray(ref.j_final), rtol=1e-6, atol=1e-6)
+
+
+@multidevice
+def test_sharded_padding_grid_not_multiple_of_devices():
+    """G = 3 modes x 1 lam x 1 rho x 3 seeds = 9 runs: pads to the device
+    count and drops the tail without corrupting any real cell."""
+    spec = _spec(lambdas=(1e-2,), batching="map")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep(spec, _sampler(), W0, problem=PROB, mesh=make_sweep_mesh())
+    assert got.comm_rate.shape == ref.comm_rate.shape == (3, 1, 1, 3)
+    np.testing.assert_array_equal(np.asarray(got.trace.weights),
+                                  np.asarray(ref.trace.weights))
+
+
+@multidevice
+def test_sharded_summary_and_mesh_subset():
+    """Summary trace under shard_map, on a strict subset of the devices."""
+    spec = _spec(trace="summary")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    mesh = make_sweep_mesh(num_devices=2)
+    got = run_sweep(spec, _sampler(), W0, problem=PROB, mesh=mesh)
+    assert isinstance(got.trace, SummaryTrace)
+    np.testing.assert_allclose(np.asarray(got.j_final),
+                               np.asarray(ref.j_final), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.trace.tx_counts),
+                               np.asarray(ref.trace.tx_counts), atol=0)
+
+
+# ------------------------------------------------------ summary streaming ----
+
+
+def test_summary_matches_full_trace():
+    """Final weights bitwise; J(w_k) trajectory (opt-in stream) within 1e-6
+    of the full trace's post-hoc objective; tx counts equal the stacked
+    alpha sums."""
+    spec_f = _spec(batching="map")
+    spec_s = dataclasses.replace(spec_f, trace=TraceSpec(j_trajectory=True))
+    full = run_sweep(spec_f, _sampler(), W0, problem=PROB)
+    summ = run_sweep(spec_s, _sampler(), W0, problem=PROB)
+    np.testing.assert_array_equal(
+        np.asarray(summ.trace.final_weights),
+        np.asarray(full.trace.weights[..., -1, :]))
+    terms = ProblemTerms.from_problem(PROB)
+    want_traj = jax.vmap(terms.objective)(
+        full.trace.weights.reshape(-1, GW.num_states)).reshape(
+            full.trace.weights.shape[:-1])[..., 1:]
+    np.testing.assert_allclose(np.asarray(summ.trace.j_trajectory),
+                               np.asarray(want_traj), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(summ.trace.tx_counts),
+                                  np.asarray(full.trace.alphas).sum(axis=-2))
+    np.testing.assert_allclose(np.asarray(summ.comm_rate),
+                               np.asarray(full.comm_rate), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(summ.j_final),
+                               np.asarray(full.j_final), rtol=1e-5, atol=1e-6)
+
+
+def test_summary_tracespec_optional_streams():
+    spec = _spec(modes=("practical",), seeds=(0,),
+                 trace=TraceSpec(alphas=True, gains=True))
+    res = run_sweep(spec, _sampler(), W0, problem=PROB)
+    assert res.trace.alphas.shape == (1, 2, 1, 1, N, 2)
+    assert res.trace.gains.shape == (1, 2, 1, 1, N, 2)
+    assert res.trace.j_trajectory is None
+    full = run_sweep(dataclasses.replace(spec, trace="full"),
+                     _sampler(), W0, problem=PROB)
+    np.testing.assert_array_equal(np.asarray(res.trace.alphas),
+                                  np.asarray(full.trace.alphas))
+
+
+def test_summary_memory_independent_of_num_iterations():
+    """Acceptance: peak live memory of the summary path does not scale with
+    N (full-trace output is linear in N), via compiled memory_analysis."""
+    terms = ProblemTerms.from_problem(PROB)
+    fn = GW.sampler_fn(10)
+    params = GW.agent_params(W0, 4)
+
+    def lowered(trace, n_iter):
+        @jax.jit
+        def f(key, w0, thr):
+            return gated_sgd_core(
+                key, w0, 1, thr, 0.5,
+                lambda rngs: jax.vmap(fn)(params, rngs),
+                EPS, 4, terms=terms, trace=trace)
+        return f.lower(jax.random.key(0), W0,
+                       jnp.zeros((n_iter,))).compile().memory_analysis()
+
+    n1, n2 = 128, 2048
+    m_full_1, m_full_2 = lowered("full", n1), lowered("full", n2)
+    m_sum_1, m_sum_2 = lowered("summary", n1), lowered("summary", n2)
+    # result buffers: summary is constant, full is linear in N
+    assert m_sum_1.output_size_in_bytes == m_sum_2.output_size_in_bytes
+    assert m_full_2.output_size_in_bytes > 8 * m_full_1.output_size_in_bytes
+    # peak live (temp + out): summary grows only by the O(N) key/threshold
+    # scalars, and stays far below the full trace at large N
+    total = lambda m: m.temp_size_in_bytes + m.output_size_in_bytes
+    assert total(m_sum_2) < 3 * total(m_sum_1)
+    assert total(m_full_2) > 5 * total(m_sum_2)
+
+
+# ------------------------------------------------------------ env families ----
+
+
+def test_env_family_axis_matches_per_env_sweeps():
+    """A stacked garnet family sweep reproduces each instance's standalone
+    sweep — envs are a grid axis, not separate programs."""
+    envs, fam = garnet_env_family(4, num_states=12)
+    w0 = jnp.zeros(12)
+    spec = SweepSpec(modes=("theoretical", "practical"), lambdas=(1e-3,),
+                     seeds=(0, 1), rhos=(0.999,), eps=0.4,
+                     num_iterations=30, num_agents=3, trace="summary")
+    sampler = ParamSampler(fn=family_sampler_fn(8),
+                           params=envs[0].agent_params(w0, 3))
+    res = run_sweep(spec, sampler, w0, env_sets=fam)
+    assert res.axes == ("env_set", "mode", "lam", "rho", "seed")
+    assert res.j_final.shape == (4, 2, 1, 1, 2)
+    for e_idx in (0, 3):
+        env = envs[e_idx]
+        single = run_sweep(
+            spec,
+            ParamSampler(fn=env.sampler_fn(8), params=env.agent_params(w0, 3)),
+            w0, problem=env.vfa_problem(np.zeros(12)))
+        np.testing.assert_allclose(np.asarray(res.j_final[e_idx]),
+                                   np.asarray(single.j_final),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.comm_rate[e_idx]),
+                                   np.asarray(single.comm_rate), atol=1e-7)
+
+
+def test_env_family_terms_match_vfa_problem():
+    envs, fam = garnet_env_family(3, num_states=10)
+    for i, env in enumerate(envs):
+        t = jax.tree.map(lambda x: x[i], fam.terms)
+        prob = env.vfa_problem(np.zeros(10))
+        w = jnp.asarray(np.random.default_rng(i).normal(size=10), jnp.float32)
+        np.testing.assert_allclose(float(t.objective(w)),
+                                   float(prob.objective(w)), rtol=1e-4)
+
+
+def test_tradeoff_rows_uses_axes_descriptor_not_ndim():
+    """Satellite: env-set axis must label rows as env_set, never param_set."""
+    envs, fam = garnet_env_family(2, num_states=10)
+    w0 = jnp.zeros(10)
+    spec = SweepSpec(modes=("practical",), lambdas=(1e-3,), seeds=(0,),
+                     rhos=(0.999,), eps=0.4, num_iterations=10, num_agents=2,
+                     trace="summary")
+    sampler = ParamSampler(fn=family_sampler_fn(8),
+                           params=envs[0].agent_params(w0, 2))
+    res = run_sweep(spec, sampler, w0, env_sets=fam)
+    rows = tradeoff_rows(res, spec, bench="x")
+    assert len(rows) == 2
+    assert all("env_set" in r and "param_set" not in r for r in rows)
+    assert sorted(r["env_set"] for r in rows) == [0, 1]
+
+
+# --------------------------------------------------------------- chunking ----
+
+
+def test_chunked_batching_matches_vmap():
+    spec = _spec(batching="vmap")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep(dataclasses.replace(spec, chunk_size=4),
+                    _sampler(), W0, problem=PROB)
+    np.testing.assert_allclose(np.asarray(got.j_final),
+                               np.asarray(ref.j_final), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.comm_rate),
+                               np.asarray(ref.comm_rate), atol=1e-7)
+
+
+def test_chunk_size_requires_vmap():
+    with pytest.raises(ValueError):
+        _spec(batching="map", chunk_size=2)
