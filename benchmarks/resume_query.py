@@ -1,0 +1,148 @@
+"""Resume-overhead + query-latency suites for the checkpointed runtime.
+
+Three benches on one grid (ISSUE 3 acceptance):
+
+* ``resume_overhead``    — the resumable runtime (per-chunk dispatch +
+  async checkpoint writes) vs the plain chunked ``run_sweep``, warm
+  compile caches, fresh store dir: the overhead must stay <10% of sweep
+  wall-clock.
+* ``resume_kill_resume`` — kill after half the chunks (truncate the
+  store dir), resume, verify the result is bitwise identical to the
+  uninterrupted run and report how much wall-clock the restart saved.
+* ``query_latency``      — ``best_lambda`` + ``pareto_front`` +
+  ``tradeoff_at`` answered from a cold ``SweepStore`` (fresh load from
+  disk every rep, no device work).
+
+``REPRO_STORE_DIR`` (the CI resume-kill job sets it) keeps the store
+directory around as a job artifact so the query-service tests can run
+against a store a real sweep produced; without it everything lands in a
+temp dir and is cleaned up.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments import query as query_lib
+from repro.experiments.runtime import (
+    inputs_digest,
+    run_sweep_resumable,
+    store_result,
+)
+from repro.experiments.store import SweepStore
+
+
+def _setup(smoke: bool):
+    gw = GridWorld()
+    prob = gw.vfa_problem(np.zeros(gw.num_states))
+    w0 = jnp.zeros(gw.num_states)
+    rho = prob.min_rho(0.5) * 1.0001
+    if smoke:
+        lambdas, seeds, iters, chunk = (1e-3, 1e-1), (0, 1), 25, 4
+    else:
+        lambdas = tuple(np.logspace(-4, -1, 4))
+        seeds, iters, chunk = tuple(range(4)), 300, 8
+    spec = SweepSpec(
+        modes=("theoretical", "practical", "random", "never"),
+        lambdas=lambdas, seeds=seeds, rhos=(rho,), eps=0.5,
+        num_iterations=iters, num_agents=2, random_tx_prob=0.4,
+        trace="summary", chunk_size=chunk)
+    sampler = ParamSampler(fn=gw.sampler_fn(10),
+                           params=gw.agent_params(w0, 2))
+    return spec, sampler, w0, prob
+
+
+def _chunk_files(d):
+    return sorted(f for f in os.listdir(d) if f.startswith("chunk_"))
+
+
+def run(smoke: bool = False) -> list[dict]:
+    spec, sampler, w0, prob = _setup(smoke)
+    runs = int(np.prod(spec.grid_shape))
+    root = os.environ.get("REPRO_STORE_DIR")
+    keep = root is not None
+    if root is None:
+        root = tempfile.mkdtemp(prefix="resume_query_bench_")
+    chunks = os.path.join(root, "chunks")
+    shutil.rmtree(chunks, ignore_errors=True)   # always measure fresh
+    store_root = os.path.join(root, "store")
+    rows = []
+
+    # -- resume_overhead: plain chunked engine vs checkpointed runtime ----
+    ref = run_sweep(spec, sampler, w0, problem=prob)      # compile
+    t0 = time.perf_counter()
+    ref = run_sweep(spec, sampler, w0, problem=prob)
+    jax.block_until_ready(ref.comm_rate)
+    base_s = time.perf_counter() - t0
+    warm = os.path.join(root, "chunks_warmup")            # compile chunk prog
+    run_sweep_resumable(spec, sampler, w0, problem=prob, store_dir=warm)
+    shutil.rmtree(warm)
+    t0 = time.perf_counter()
+    res = run_sweep_resumable(spec, sampler, w0, problem=prob,
+                              store_dir=chunks)
+    jax.block_until_ready(res.comm_rate)
+    resum_s = time.perf_counter() - t0
+    overhead_pct = 100.0 * (resum_s - base_s) / base_s
+    n_chunks = len(_chunk_files(chunks))
+    rows.append(dict(
+        bench="resume_overhead", us_per_call=resum_s * 1e6 / runs,
+        grid_runs=runs, chunks=n_chunks, base_exec_s=base_s,
+        resumable_exec_s=resum_s, overhead_pct=round(overhead_pct, 2)))
+
+    # -- resume_kill_resume: crash after half the chunks, restart ---------
+    for f in _chunk_files(chunks)[n_chunks // 2:]:
+        os.remove(os.path.join(chunks, f))
+    restored = []
+    t0 = time.perf_counter()
+    res2 = run_sweep_resumable(
+        spec, sampler, w0, problem=prob, store_dir=chunks,
+        on_chunk=lambda i, n, r: restored.append(r))
+    jax.block_until_ready(res2.comm_rate)
+    resume_s = time.perf_counter() - t0
+    if not np.array_equal(np.asarray(res2.trace.final_weights),
+                          np.asarray(ref.trace.final_weights)):
+        raise AssertionError("resumed sweep is not bitwise identical")
+    rows.append(dict(
+        bench="resume_kill_resume", us_per_call=resume_s * 1e6 / runs,
+        resume_wall_s=resume_s, full_wall_s=resum_s,
+        restored_chunks=sum(restored),
+        recomputed_chunks=len(restored) - sum(restored),
+        bitwise_identical=True,
+        savings_pct=round(100.0 * (1 - resume_s / max(resum_s, 1e-9)), 1)))
+
+    # -- query_latency: cold store, zero device work ----------------------
+    store = SweepStore(store_root)
+    h = store_result(store, spec, res, inputs_digest_=inputs_digest(
+        sampler, w0, problem=prob))
+    budget = 0.5
+
+    def cold_queries():
+        s = SweepStore(store_root)               # cold: re-open + re-read
+        entry = s.get(h)
+        curve = query_lib.tradeoff_curve(entry)
+        best = query_lib.best_lambda(curve, budget)
+        front = query_lib.pareto_front(curve)
+        mid = float(np.sqrt(curve.lambdas[0] * curve.lambdas[-1]))
+        at = query_lib.tradeoff_at(curve, mid)
+        return best, front, at
+
+    (best, front, _), us = timed(cold_queries, reps=5 if smoke else 25)
+    rows.append(dict(
+        bench="query_latency", us_per_call=us, query="load+best_lambda+pareto+tradeoff_at",
+        store_entries=len(store.hashes()), best_lam=best["lam"],
+        best_feasible=best["feasible"], pareto_points=len(front)))
+
+    if not keep:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows

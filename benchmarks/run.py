@@ -25,6 +25,7 @@ from benchmarks import (
     fig2_grid_tradeoff,
     fig3_continuous,
     kernels_bench,
+    resume_query,
     roofline,
     sweep_scaling,
     theorem1_bound,
@@ -38,14 +39,15 @@ SUITES = {
     "agents_scaling": agents_scaling,
     "sweep_scaling": sweep_scaling,
     "comm_savings": comm_savings,
+    "resume_query": resume_query,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
 
 
 def _derived(row: dict) -> str:
-    for key in ("J_final", "rhs_bound", "savings_pct", "gflop_per_call",
-                "dominant"):
+    for key in ("J_final", "rhs_bound", "overhead_pct", "savings_pct",
+                "gflop_per_call", "dominant"):
         if key in row:
             return f"{key}={row[key]}"
     return ""

@@ -1,0 +1,78 @@
+"""Resumable sweeps + the trigger-threshold query service, end to end.
+
+The deployment question the paper answers is "which λ?": what trigger
+threshold hits my communication budget and what value-function error
+does it cost.  This example
+
+  1. runs a λ frontier grid through the *resumable* runtime (kill it at
+     any point and re-run this script — it picks up at the last finished
+     chunk, bitwise identical),
+  2. lands the summaries in an append-only SweepStore,
+  3. extends the grid with extra λ points, computing only the new cells,
+  4. answers budget queries from the store with zero device work
+     (the same answers `python -m repro.experiments.serve_sweeps STORE`
+     serves over HTTP).
+
+  PYTHONPATH=src python examples/sweep_queries.py
+"""
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec
+from repro.experiments import query
+from repro.experiments.runtime import run_sweep_extend, run_sweep_resumable
+from repro.experiments.store import SweepStore, spec_hash
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "stores", "quickstart")
+
+# 1. the experiment: a λ frontier on the windy grid (paper §V / Fig. 2)
+gw = GridWorld()
+prob = gw.vfa_problem(np.zeros(gw.num_states))
+w0 = jnp.zeros(gw.num_states)
+spec = SweepSpec(
+    modes=("theoretical", "practical"),
+    lambdas=tuple(np.logspace(-4, -1, 6)),
+    seeds=(0, 1, 2), rhos=(prob.min_rho(0.5) * 1.0001,), eps=0.5,
+    num_iterations=200, num_agents=2,
+    trace="summary",          # O(1)-memory streaming summaries
+    chunk_size=6,             # checkpoint granularity: 6 runs per segment
+)
+sampler = ParamSampler(fn=gw.sampler_fn(10), params=gw.agent_params(w0, 2))
+
+store = SweepStore(os.path.join(ROOT, "store"))
+res = run_sweep_resumable(
+    spec, sampler, w0, problem=prob,
+    store_dir=os.path.join(ROOT, "chunks"),       # kill + re-run => resume
+    summary_store=store,
+    on_chunk=lambda i, n, restored: print(
+        f"  chunk {i + 1}/{n} {'restored' if restored else 'computed'}"))
+print(f"sweep {spec_hash(spec)[:12]}… in store "
+      f"({int(np.prod(spec.grid_shape))} runs)")
+
+# 2. extend the frontier: only the two new λ columns are computed
+wider = dataclasses.replace(spec, lambdas=spec.lambdas + (3e-1, 1.0))
+run_sweep_extend(store, wider, sampler, w0, problem=prob)
+print(f"extended to {len(wider.lambdas)} λ points "
+      f"(store entries: {len(store.hashes())})")
+
+# 3. deployment-time questions, answered from disk — no device, no jax
+#    needed on the serving host (see repro.experiments.serve_sweeps)
+entry = store.get(wider)
+curve = query.tradeoff_curve(entry, mode="theoretical")
+for budget in (0.8, 0.5, 0.2):
+    best = query.best_lambda(curve, budget)
+    tag = "" if best["feasible"] else "  (budget unmet — closest)"
+    print(f"comm budget {budget:4.0%} -> λ = {best['lam']:.3e}  "
+          f"comm = {best['comm_rate']:5.1%}  J = {best['J']:.3e}{tag}")
+print("pareto front (comm, J):",
+      [(round(r["comm_rate"], 3), round(r["J"], 4))
+       for r in query.pareto_front(curve)])
+print(f"\nserve it:  PYTHONPATH=src python -m repro.experiments.serve_sweeps "
+      f"{os.path.normpath(os.path.join(ROOT, 'store'))}")

@@ -1,3 +1,3 @@
 """Pytree checkpointing (npz-based; orbax is not available here)."""
 
-from repro.checkpoint.store import restore, save  # noqa: F401
+from repro.checkpoint.store import load_metadata, restore, save  # noqa: F401

@@ -1,10 +1,15 @@
 """Flat-key npz checkpointing for arbitrary pytrees of arrays.
 
-Keys encode the tree path (``/``-joined); dtypes and shapes round-trip
+Keys encode the tree path (``/``-joined, with ``/`` and ``%`` inside a
+path component percent-escaped so ``{"a": {"b": 1}}`` and ``{"a/b": 1}``
+cannot collide); NamedTuple nodes contribute their *field names*, dicts
+their keys, sequences their indices.  Dtypes and shapes round-trip
 exactly (bf16 is stored via a uint16 view + dtype sidecar).  Atomic via
-write-to-temp + rename.  Sharded arrays are gathered by the caller (the
-train driver saves from fully-addressable hosts; on this CPU container
-everything is single-process anyway).
+write-to-temp + rename.  ``restore`` is strict: a checkpoint whose key
+set, shapes or dtypes disagree with the ``like`` template raises rather
+than silently dropping or coercing anything.  Sharded arrays are
+gathered by the caller (the train driver saves from fully-addressable
+hosts; on this CPU container everything is single-process anyway).
 """
 
 from __future__ import annotations
@@ -20,12 +25,36 @@ import numpy as np
 
 PyTree = Any
 
+_RESERVED = ("__dtypes__", "__meta__")
+
+
+def _escape(part: str) -> str:
+    """Make a path component separator-free (injective, so no collisions)."""
+    return part.replace("%", "%25").replace("/", "%2F")
+
+
+def _key_part(entry) -> str:
+    # GetAttrKey carries .name (NamedTuple/dataclass fields), DictKey and
+    # FlattenedIndexKey carry .key, SequenceKey carries .idx.
+    for attr in ("name", "key", "idx"):
+        if hasattr(entry, attr):
+            return _escape(str(getattr(entry, attr)))
+    return _escape(str(entry))
+
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = "/".join(_key_part(p) for p in path)
+        if key in out:
+            raise ValueError(
+                f"duplicate flat key {key!r}: two tree paths escape to the "
+                "same npz key (e.g. dict keys 1 and '1'); rename the "
+                "colliding keys")
+        if key in _RESERVED:
+            raise ValueError(f"tree key {key!r} collides with the reserved "
+                             f"npz sidecar names {_RESERVED}")
         out[key] = np.asarray(leaf)
     return out
 
@@ -44,21 +73,45 @@ def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
     os.replace(tmp, path)
 
 
+def load_metadata(path: str) -> dict:
+    """Read just the metadata sidecar (cheap: no array decompression)."""
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__meta__"]))
+
+
 def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    """Restore into the structure of ``like``.
+
+    Strict: raises with the offending keys when the checkpoint and the
+    ``like`` template disagree on the key set, on any shape, or on any
+    dtype (bf16 round-trips through its uint16 storage view).
+    """
     with np.load(path, allow_pickle=False) as z:
         dtypes = json.loads(str(z["__dtypes__"]))
         meta = json.loads(str(z["__meta__"]))
         flat_like = _flatten(like)
+        stored = set(z.files) - set(_RESERVED)
+        missing = sorted(set(flat_like) - stored)
+        extra = sorted(stored - set(flat_like))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint {path} does not match the `like` template: "
+                f"missing from checkpoint {missing}, "
+                f"unexpected in checkpoint {extra}")
         restored = {}
         for k, ref in flat_like.items():
+            if dtypes[k] != str(ref.dtype):
+                raise ValueError(
+                    f"dtype mismatch for {k!r}: checkpoint stores "
+                    f"{dtypes[k]}, `like` expects {ref.dtype}")
             arr = z[k]
             if dtypes[k] == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
             if arr.shape != ref.shape:
-                raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {ref.shape}")
+                raise ValueError(f"shape mismatch for {k!r}: checkpoint has "
+                                 f"{arr.shape}, `like` expects {ref.shape}")
             restored[k] = arr
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
-    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    keys = ["/".join(_key_part(p) for p in path)
             for path, _ in leaves_with_path]
     return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(restored[k]) for k in keys]), meta

@@ -1,10 +1,47 @@
-"""Batched experiment engine: whole grids as single jitted programs."""
+"""Batched experiment engine: whole grids as single jitted programs,
+resumable checkpointed execution, and the device-free sweep-summary
+store + query service.
 
-from repro.experiments.sweep import (  # noqa: F401
-    BASE_AXES,
-    SweepResult,
-    SweepSpec,
-    matched_random_probs,
-    run_sweep,
-    tradeoff_rows,
-)
+Exports resolve lazily (PEP 562): the jax-heavy engine modules
+(``sweep``, ``runtime``) only import when first touched, so the serving
+half — ``repro.experiments.store`` / ``query`` / ``serve_sweeps`` —
+stays importable without jax ever entering the process
+(tests/test_sweep_store.py asserts this in a subprocess).
+"""
+
+_EXPORTS = {
+    # sweep engine (jax)
+    "BASE_AXES": "repro.experiments.sweep",
+    "SweepPlan": "repro.experiments.sweep",
+    "SweepResult": "repro.experiments.sweep",
+    "SweepSpec": "repro.experiments.sweep",
+    "finalize_sweep": "repro.experiments.sweep",
+    "matched_random_probs": "repro.experiments.sweep",
+    "plan_sweep": "repro.experiments.sweep",
+    "run_sweep": "repro.experiments.sweep",
+    "tradeoff_rows": "repro.experiments.sweep",
+    # resumable runtime (jax)
+    "run_sweep_extend": "repro.experiments.runtime",
+    "run_sweep_resumable": "repro.experiments.runtime",
+    "store_result": "repro.experiments.runtime",
+    # summary store + queries (numpy only)
+    "SweepStore": "repro.experiments.store",
+    "StoredSweep": "repro.experiments.store",
+    "family_hash": "repro.experiments.store",
+    "spec_hash": "repro.experiments.store",
+    "best_lambda": "repro.experiments.query",
+    "pareto_front": "repro.experiments.query",
+    "tradeoff_at": "repro.experiments.query",
+    "tradeoff_curve": "repro.experiments.query",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,197 @@
+"""Trigger-threshold queries over cached sweep summaries (DESIGN.md §8).
+
+The deployment question the paper answers is *"which λ?"* — what trigger
+threshold hits a given communication budget, and what value-function
+error it costs (Fig. 2/3, Theorem 1).  Once a sweep's summaries sit in a
+``SweepStore``, those questions are table lookups plus interpolation:
+
+* ``tradeoff_curve``  — reduce one store entry to (λ, comm rate, J) for a
+  chosen trigger mode / ρ (mean over seeds and unselected leading axes).
+* ``tradeoff_at``     — the (comm, J) tradeoff at an arbitrary λ, log-λ
+  linearly interpolated between cached grid points.
+* ``best_lambda``     — the λ meeting a communication budget with the
+  best J: cached grid points plus the interpolated budget-crossing λ.
+* ``pareto_front``    — the nondominated (comm, J) frontier over λ.
+
+Everything here is plain numpy on arrays already on disk — no jax
+import, no device, no recompute; ``serve_sweeps`` exposes it over HTTP.
+Comm rates are per eq. 7 (mean transmit fraction); J is the exact final
+objective the sweep engine attaches (``SweepResult.j_final``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.experiments.store import StoredSweep
+
+
+@dataclasses.dataclass(frozen=True)
+class TradeoffCurve:
+    """One mode's λ → (comm rate, J) table, λ ascending."""
+
+    mode: str
+    rho: float
+    lambdas: np.ndarray          # (L,)
+    comm: np.ndarray             # (L,) mean comm rate (eq. 7)
+    j: Optional[np.ndarray]      # (L,) mean final J, when the sweep had it
+    spec_hash: str
+
+    def as_rows(self) -> list[dict]:
+        rows = []
+        for i, lam in enumerate(self.lambdas):
+            row = dict(lam=float(lam), comm_rate=float(self.comm[i]),
+                       mode=self.mode, rho=self.rho)
+            if self.j is not None:
+                row["J"] = float(self.j[i])
+            rows.append(row)
+        return rows
+
+
+def _reduce(arr: np.ndarray, axes: tuple[str, ...], mode_idx: int,
+            rho_idx: int, select: Optional[dict]) -> np.ndarray:
+    """Collapse a grid array to (L,): fix mode/rho (and any ``select``ed
+    leading axis), mean over seeds and the unselected leading axes."""
+    if arr.ndim != len(axes):
+        raise ValueError(f"array rank {arr.ndim} != axes {axes}")
+    if select:
+        unknown = sorted(set(select) - set(axes))
+        if unknown:
+            raise KeyError(f"select names unknown axes {unknown} "
+                           f"(entry has {axes})")
+        reserved = sorted(set(select) & {"mode", "rho", "lam", "seed"})
+        if reserved:
+            raise KeyError(
+                f"select cannot name the base axes {reserved}: use mode= / "
+                "rho_index= (lam is the curve axis, seeds are averaged)")
+    out = arr
+    for ax in reversed(range(len(axes))):
+        name = axes[ax]
+        if name == "lam":
+            continue
+        if name == "mode":
+            out = np.take(out, mode_idx, axis=ax)
+        elif name == "rho":
+            out = np.take(out, rho_idx, axis=ax)
+        elif select and name in select:
+            out = np.take(out, int(select[name]), axis=ax)
+        else:                                   # seed + unselected leading
+            out = out.mean(axis=ax)
+    return out
+
+
+def tradeoff_curve(entry: StoredSweep, mode: Optional[str] = None,
+                   rho_index: int = 0,
+                   select: Optional[dict] = None) -> TradeoffCurve:
+    """Reduce a store entry to one mode's λ-tradeoff curve.
+
+    ``mode`` defaults to ``"theoretical"`` when present (the paper's
+    exact trigger), else the entry's first mode.  ``select`` fixes
+    leading grid axes by index (e.g. ``{"env_set": 3}``); unselected
+    leading axes and seeds are averaged.
+    """
+    modes = entry.modes
+    if mode is None:
+        mode = "theoretical" if "theoretical" in modes else modes[0]
+    if mode not in modes:
+        raise KeyError(f"mode {mode!r} not in entry (has {modes})")
+    mi = modes.index(mode)
+    rhos = [float(r) for r in entry.spec["rhos"]]
+    if not 0 <= rho_index < len(rhos):
+        raise IndexError(f"rho_index {rho_index} out of range ({len(rhos)})")
+    comm = _reduce(entry.arrays["trace/comm_rate"], entry.axes, mi,
+                   rho_index, select)
+    j_arr = entry.arrays.get("trace/j_final", entry.arrays.get("j_final"))
+    j = (None if j_arr is None
+         else _reduce(j_arr, entry.axes, mi, rho_index, select))
+    lams = np.asarray(entry.lambdas, np.float64)
+    order = np.argsort(lams)
+    return TradeoffCurve(
+        mode=mode, rho=rhos[rho_index], lambdas=lams[order],
+        comm=np.asarray(comm, np.float64)[order],
+        j=None if j is None else np.asarray(j, np.float64)[order],
+        spec_hash=entry.spec_hash)
+
+
+def _interp_log_lam(curve: TradeoffCurve, lam: float,
+                    values: np.ndarray) -> float:
+    """Linear interpolation in log λ (λ grids span decades)."""
+    return float(np.interp(np.log(lam), np.log(curve.lambdas), values))
+
+
+def tradeoff_at(curve: TradeoffCurve, lam: float) -> dict:
+    """(comm, J) at λ, interpolated between cached grid points."""
+    if lam <= 0:
+        raise ValueError(f"λ must be positive, got {lam}")
+    lo, hi = float(curve.lambdas[0]), float(curve.lambdas[-1])
+    if not lo <= lam <= hi:
+        raise ValueError(
+            f"λ={lam} outside the cached grid [{lo}, {hi}] — extend the "
+            "sweep (run_sweep_extend) instead of extrapolating")
+    # atol=0: purely relative, so tiny-magnitude λ grids never mislabel an
+    # interpolated answer as a cached grid point; rtol at float32 precision
+    # (curve data is float32, budget crossings land within ~1e-7 of a grid λ)
+    on_grid = bool(np.any(np.isclose(curve.lambdas, lam, rtol=1e-6, atol=0)))
+    out = dict(lam=float(lam), mode=curve.mode, rho=curve.rho,
+               comm_rate=_interp_log_lam(curve, lam, curve.comm),
+               interpolated=not on_grid)
+    if curve.j is not None:
+        out["J"] = _interp_log_lam(curve, lam, curve.j)
+    return out
+
+
+def best_lambda(curve: TradeoffCurve, comm_budget: float) -> dict:
+    """The λ that meets ``comm_budget`` with the best (lowest) J.
+
+    Candidates are the cached grid points with comm ≤ budget plus the
+    interpolated λ where the comm curve crosses the budget (comm rate
+    decreases as λ grows — eq. 9's threshold gates more aggressively).
+    When even the largest cached λ communicates above budget the result
+    carries ``feasible=False`` with that closest point.
+    """
+    if not 0 <= comm_budget <= 1:
+        raise ValueError(f"comm budget must be in [0, 1], got {comm_budget}")
+    feasible = curve.comm <= comm_budget
+    if not feasible.any():
+        i = int(np.argmin(curve.comm))
+        out = tradeoff_at(curve, float(curve.lambdas[i]))
+        out.update(feasible=False, comm_budget=comm_budget)
+        return out
+    candidates = [tradeoff_at(curve, float(curve.lambdas[i]))
+                  for i in np.flatnonzero(feasible)]
+    # The budget-crossing interpolation needs comm monotone non-increasing
+    # in λ (np.interp silently returns garbage on non-monotone xp); seed
+    # noise can break that, in which case the cached grid points alone
+    # give the (conservative) answer.
+    if not feasible.all() and bool(np.all(np.diff(curve.comm) <= 0)):
+        lam_star = float(np.exp(np.interp(
+            comm_budget, curve.comm[::-1], np.log(curve.lambdas)[::-1])))
+        cross = tradeoff_at(curve, lam_star)
+        if cross["comm_rate"] <= comm_budget * (1 + 1e-9):
+            candidates.append(cross)
+    key = ((lambda c: c["J"]) if curve.j is not None
+           else (lambda c: -c["comm_rate"]))   # no J: most communicative
+    best = min(candidates, key=key)
+    best.update(feasible=True, comm_budget=comm_budget)
+    return best
+
+
+def pareto_front(curve: TradeoffCurve) -> list[dict]:
+    """Nondominated (comm rate, J) grid points, comm ascending.
+
+    A point is kept iff no cached λ achieves both ≤ comm and ≤ J.  With
+    no J in the entry the front degenerates to the full curve.
+    """
+    rows = curve.as_rows()
+    if curve.j is None:
+        return sorted(rows, key=lambda r: r["comm_rate"])
+    rows.sort(key=lambda r: (r["comm_rate"], r["J"]))
+    front, best_j = [], np.inf
+    for r in rows:
+        if r["J"] < best_j:
+            front.append(r)
+            best_j = r["J"]
+    return front

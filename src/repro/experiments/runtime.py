@@ -1,0 +1,397 @@
+"""Resumable, checkpointed sweep runtime (DESIGN.md §8).
+
+``run_sweep`` is fire-and-forget: a week-long frontier grid that dies at
+hour 60 restarts from zero.  ``run_sweep_resumable`` executes the *same
+plan* (``repro.experiments.sweep.plan_sweep``) in chunk-granular
+segments — ``SweepSpec.chunk_size`` runs per device per segment, the
+same map-over-vmap unit the engine already chunks by — and checkpoints
+each completed segment's result pytree through ``repro.checkpoint.store``
+(atomic npz: write-to-temp + rename), tagged with a content hash of the
+spec, the input arrays and the chunk layout.  A killed sweep re-invoked
+with the same ``store_dir`` loads the finished segments and computes only
+the rest; because vmapped segment execution is bitwise identical to the
+single-call path on this backend, the resumed result equals the
+uninterrupted ``run_sweep`` result bit for bit
+(tests/test_runtime_resume.py asserts it for full and summary traces).
+
+Checkpoint writes are asynchronous: segment k+1 is dispatched to the
+device before segment k's arrays are fetched and written, so the host
+I/O overlaps device execution (a single writer thread preserves write
+order; jax's async dispatch does the rest).
+
+Finished sweeps land in the append-only ``SweepStore``
+(``repro.experiments.store``), whose entries the device-free query
+service (``repro.experiments.query`` / ``serve_sweeps``) answers
+trigger-threshold questions from.  ``run_sweep_extend`` closes the loop:
+asked for a λ grid that is partially cached, it computes only the
+missing λ columns, merges them with the store's family entries, and
+persists the union.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store as ckpt
+from repro.core.algorithm1 import InnerTrace, ProblemTerms, SummaryTrace
+from repro.core import vfa as vfa_lib
+from repro.experiments import store as store_lib
+from repro.experiments.sweep import (
+    SweepPlan,
+    SweepResult,
+    SweepSpec,
+    exec_plan_segment,
+    finalize_sweep,
+    plan_sweep,
+    segment_shapes,
+)
+
+_CHUNK_RE = re.compile(r"chunk_(\d{6})\.npz$")
+_MANIFEST = "manifest.json"
+_FORMAT_VERSION = 1
+
+
+def _chunk_path(store_dir: str, index: int) -> str:
+    return os.path.join(store_dir, f"chunk_{index:06d}.npz")
+
+
+def _tree_digest(h, tree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+
+
+def inputs_digest(sampler, w0, problem=None, param_sets=None,
+                  env_sets=None) -> str:
+    """Content digest of everything *outside* the spec that shapes results.
+
+    The spec hash alone cannot tell two sweeps apart when they differ in
+    ``w0``, the fleet's stacked sampler params, the exact problem, or the
+    env family — this digest rides in every chunk checkpoint and store
+    entry so a resume (or a merge) against the wrong inputs raises instead
+    of silently mixing runs.  The sampler *function* is assumed pure and
+    identified by the arrays it consumes (the repo-wide convention).
+    """
+    h = hashlib.sha256()
+    terms = (problem if isinstance(problem, ProblemTerms)
+             else ProblemTerms.from_problem(problem) if problem is not None
+             else None)
+    _tree_digest(h, jnp.asarray(w0))
+    # with param_sets the engine ignores sampler.params entirely, so two
+    # samplers differing only there must digest identically
+    _tree_digest(h, None if param_sets is not None
+                 else getattr(sampler, "params", None))
+    _tree_digest(h, terms)
+    _tree_digest(h, param_sets)
+    if env_sets is not None:
+        _tree_digest(h, env_sets.params)
+        _tree_digest(h, getattr(env_sets, "terms", None))
+    else:
+        _tree_digest(h, None)
+    return h.hexdigest()
+
+
+def _exec_hash(spec_hash_: str, in_digest: str, plan: SweepPlan) -> str:
+    """Identity of one chunked execution: results + chunk layout.
+
+    ``chunk_size`` is excluded from the *spec* hash (results are bitwise
+    independent of it) but segment boundaries must match for chunk files
+    to be reusable, so the layout is hashed separately here.
+    """
+    blob = json.dumps({
+        "version": _FORMAT_VERSION,
+        "spec_hash": spec_hash_,
+        "inputs_digest": in_digest,
+        "segment_runs": plan.segment_runs,
+        "padded_runs": plan.padded_runs,
+        "num_devices": plan.num_devices,
+        "batching": plan.spec.batching,
+        # bitwise identity only holds within one XLA build/backend: a
+        # resume after a jax upgrade must refuse the old chunks loudly
+        # rather than assemble a result no single version would produce
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _segment_template(plan: SweepPlan):
+    """Zero-filled host pytree matching one segment's output (via
+    ``eval_shape`` — no device computation)."""
+    shapes = segment_shapes(plan)
+    return jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), shapes)
+
+
+def _write_manifest(store_dir: str, meta: dict) -> None:
+    path = os.path.join(store_dir, _MANIFEST)
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("exec_hash") != meta["exec_hash"]:
+            raise ValueError(
+                f"{store_dir} already holds chunks of a different sweep "
+                f"(exec_hash {prev.get('exec_hash')!r} != "
+                f"{meta['exec_hash']!r}); use a fresh store_dir per sweep")
+        return
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def completed_chunks(store_dir: str, exec_hash: str) -> dict[int, str]:
+    """Map of segment index -> path for valid finished chunk checkpoints."""
+    out: dict[int, str] = {}
+    if not os.path.isdir(store_dir):
+        return out
+    for name in os.listdir(store_dir):
+        m = _CHUNK_RE.match(name)
+        if not m:
+            continue
+        path = os.path.join(store_dir, name)
+        try:
+            meta = ckpt.load_metadata(path)
+        except Exception:
+            continue                      # torn/foreign file: recompute
+        if meta.get("exec_hash") == exec_hash:
+            out[int(m.group(1))] = path
+    return out
+
+
+def run_sweep_resumable(
+    spec: SweepSpec,
+    sampler,
+    w0,
+    problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
+    *,
+    store_dir: str,
+    param_sets=None,
+    env_sets=None,
+    mesh=None,
+    summary_store: Optional[Union[str, store_lib.SweepStore]] = None,
+    on_chunk=None,
+) -> SweepResult:
+    """``run_sweep``, executed in checkpointed segments so it can resume.
+
+    Args (beyond ``run_sweep``'s):
+      store_dir:     directory for the chunk checkpoints + manifest.  One
+                     sweep per directory; re-invoking with the same inputs
+                     resumes from the finished chunks, bitwise identical
+                     to an uninterrupted run.
+      summary_store: optional ``SweepStore`` (or its root path): on
+                     completion the finished ``SweepResult`` is appended
+                     there, keyed by the spec hash, ready for the query
+                     service.
+      on_chunk:      optional ``fn(index, total, restored: bool)`` called
+                     when a segment is restored from its checkpoint
+                     (restored=True), or when a computed segment has been
+                     dispatched and queued for checkpointing — NOT a
+                     durability signal: a chunk is only guaranteed on
+                     disk once this function returns.
+
+    Segment granularity is ``spec.chunk_size`` runs per device
+    (``SweepPlan.segment_runs``); with ``chunk_size=None`` the whole grid
+    is one segment — it still checkpoints, but cannot resume mid-grid.
+    """
+    plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
+                      env_sets=env_sets, mesh=mesh)
+    sh = store_lib.spec_hash(spec)
+    in_digest = inputs_digest(sampler, w0, problem=problem,
+                              param_sets=param_sets, env_sets=env_sets)
+    exec_hash = _exec_hash(sh, in_digest, plan)
+    segments = plan.segments()
+
+    os.makedirs(store_dir, exist_ok=True)
+    _write_manifest(store_dir, {
+        "version": _FORMAT_VERSION,
+        "spec": store_lib.spec_payload(spec),
+        "spec_hash": sh,
+        "inputs_digest": in_digest,
+        "exec_hash": exec_hash,
+        "axes": list(plan.axes),
+        "grid_shape": list(plan.gs),
+        "num_segments": len(segments),
+        "segment_runs": plan.segment_runs,
+        "padded_runs": plan.padded_runs,
+    })
+    done = completed_chunks(store_dir, exec_hash)
+    template = _segment_template(plan) if done else None
+
+    def _save_chunk(path: str, index: int, out) -> None:
+        # Runs on the writer thread: np.asarray blocks until the device
+        # finishes this segment, while the main thread has already
+        # dispatched the next one — checkpoint I/O overlaps execution.
+        host = jax.tree.map(np.asarray, out)
+        ckpt.save(path, host, metadata={
+            "exec_hash": exec_hash, "spec_hash": sh,
+            "inputs_digest": in_digest, "segment_index": index,
+            "segment": list(segments[index]),
+            "grid_coords": {"start": segments[index][0],
+                            "stop": segments[index][1],
+                            "axes": list(plan.axes),
+                            "grid_shape": list(plan.gs)},
+        })
+
+    outs: list = [None] * len(segments)
+    with concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="sweep-ckpt") as pool:
+        pending = []
+        for i, (a, b) in enumerate(segments):
+            if i in done:
+                restored, meta = ckpt.restore(done[i], template)
+                if tuple(meta["segment"]) != (a, b):
+                    raise ValueError(
+                        f"chunk {done[i]} covers runs {meta['segment']}, "
+                        f"expected [{a}, {b}) — stale store_dir?")
+                outs[i] = restored
+                if on_chunk is not None:
+                    on_chunk(i, len(segments), True)
+                continue
+            out = exec_plan_segment(plan, a, b)       # async dispatch
+            outs[i] = out
+            pending.append(pool.submit(_save_chunk, _chunk_path(store_dir, i),
+                                       i, out))
+            if on_chunk is not None:
+                on_chunk(i, len(segments), False)
+        for f in pending:
+            f.result()                                 # re-raise I/O errors
+
+    flat = (outs[0] if len(outs) == 1 else
+            jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs))
+    result = finalize_sweep(plan, flat)
+
+    if summary_store is not None:
+        if not isinstance(summary_store, store_lib.SweepStore):
+            summary_store = store_lib.SweepStore(summary_store)
+        store_result(summary_store, spec, result, inputs_digest_=in_digest)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# SweepResult <-> SweepStore conversion (the jax-side half; the store and
+# the query service stay numpy-only).
+# ---------------------------------------------------------------------------
+
+
+def result_arrays(result: SweepResult) -> dict[str, np.ndarray]:
+    """Flatten a ``SweepResult`` to the store's flat numpy dict."""
+    out = {f"trace/{k}": np.asarray(v)
+           for k, v in result.trace._asdict().items() if v is not None}
+    if result.j_final is not None and not isinstance(result.trace,
+                                                     SummaryTrace):
+        out["j_final"] = np.asarray(result.j_final)
+    return out
+
+
+def arrays_to_result(entry: store_lib.StoredSweep) -> SweepResult:
+    """Rebuild the jax-side ``SweepResult`` from a store entry."""
+    kind = entry.extra.get("trace_kind", "summary")
+    cls = InnerTrace if kind == "full" else SummaryTrace
+    vals = {name: None for name in cls._fields}
+    for k, v in entry.arrays.items():
+        if k.startswith("trace/"):
+            vals[k[len("trace/"):]] = jnp.asarray(v)
+    trace = cls(**vals)
+    if kind == "full":
+        j_final = (jnp.asarray(entry.arrays["j_final"])
+                   if "j_final" in entry.arrays else None)
+    else:
+        j_final = trace.j_final
+    return SweepResult(trace=trace, comm_rate=trace.comm_rate,
+                       j_final=j_final, axes=tuple(entry.axes))
+
+
+def store_result(store: store_lib.SweepStore, spec: SweepSpec,
+                 result: SweepResult, *,
+                 inputs_digest_: Optional[str] = None,
+                 extra: Optional[dict] = None) -> str:
+    """Append a finished sweep to the summary store; returns its hash."""
+    kind = "full" if isinstance(result.trace, InnerTrace) else "summary"
+    meta = {"trace_kind": kind}
+    if inputs_digest_ is not None:
+        meta["inputs_digest"] = inputs_digest_
+    meta.update(extra or {})
+    return store.put(spec, result_arrays(result), result.axes, extra=meta)
+
+
+def _select_lambdas(entry: store_lib.StoredSweep,
+                    lambdas: tuple[float, ...]) -> store_lib.StoredSweep:
+    """Restrict an entry to the requested λ values (requested order)."""
+    lam_axis = entry.axes.index("lam")
+    have = entry.lambdas
+    idx = []
+    for lam in lambdas:
+        if float(lam) not in have:
+            raise KeyError(f"λ={lam} not in entry (has {have})")
+        idx.append(have.index(float(lam)))
+    arrays = {k: np.take(v, idx, axis=lam_axis)
+              for k, v in entry.arrays.items()}
+    spec = dict(entry.spec)
+    spec[store_lib.MERGE_FIELD] = [float(l) for l in lambdas]
+    return store_lib.StoredSweep(
+        spec=spec, spec_hash=store_lib.spec_hash(spec),
+        family_hash=entry.family_hash, axes=entry.axes, arrays=arrays,
+        extra=dict(entry.extra))
+
+
+def run_sweep_extend(
+    store: Union[str, store_lib.SweepStore],
+    spec: SweepSpec,
+    sampler,
+    w0,
+    problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
+    *,
+    param_sets=None,
+    env_sets=None,
+    mesh=None,
+    store_dir: Optional[str] = None,
+) -> SweepResult:
+    """Grid extension: compute only the λ cells the store does not have.
+
+    Looks up the spec's experiment family (same everything-but-λ, same
+    input digest) in ``store``, runs a sub-sweep over just the missing λ
+    values (resumable when ``store_dir`` is given), appends it, and
+    returns the ``SweepResult`` for exactly the requested λ grid.  The
+    family's union is merged in memory (never persisted as its own
+    entry); the *requested* grid is persisted so ``store.get(spec)``
+    answers directly — deliberate duplication of cached columns, traded
+    for hash-addressable results (skip it by querying the family via
+    ``store.merged`` instead).  A fully-cached request touches no device.
+    """
+    if not isinstance(store, store_lib.SweepStore):
+        store = store_lib.SweepStore(store)
+    in_digest = inputs_digest(sampler, w0, problem=problem,
+                              param_sets=param_sets, env_sets=env_sets)
+    missing = store.missing_lambdas(spec, inputs_digest=in_digest)
+    if missing:
+        sub = dataclasses.replace(spec, lambdas=tuple(missing))
+        if store_dir is not None:
+            result = run_sweep_resumable(
+                sub, sampler, w0, problem, store_dir=store_dir,
+                param_sets=param_sets, env_sets=env_sets, mesh=mesh)
+        else:
+            from repro.experiments.sweep import run_sweep
+            result = run_sweep(sub, sampler, w0, problem,
+                               param_sets=param_sets, env_sets=env_sets,
+                               mesh=mesh)
+        store_result(store, sub, result, inputs_digest_=in_digest)
+    merged = store.merged(spec, inputs_digest=in_digest)
+    entry = _select_lambdas(merged, tuple(float(l) for l in spec.lambdas))
+    # make the exact requested spec addressable by hash in the store
+    if not store.has(entry.spec_hash):
+        store.put(entry.spec, entry.arrays, entry.axes, extra=entry.extra)
+    return arrays_to_result(entry)

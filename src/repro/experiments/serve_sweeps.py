@@ -1,0 +1,151 @@
+"""Trigger-threshold query service over a ``SweepStore`` (DESIGN.md §8).
+
+    PYTHONPATH=src python -m repro.experiments.serve_sweeps STORE_ROOT \
+        [--port 8321]
+
+serves JSON over stdlib HTTP (no jax, no device — queries are numpy over
+arrays already on disk):
+
+    GET /sweeps                      store entries (spec payload + axes)
+    GET /query/best_lambda?budget=0.2[&hash=..&mode=..&rho_index=0]
+    GET /query/tradeoff?lam=3e-3[&hash=..&mode=..]
+    GET /query/pareto[?hash=..&mode=..]
+    GET /query/curve[?hash=..&mode=..]
+
+``hash`` selects a store entry (defaults to the only entry, or to the
+merged union of a single experiment family); ``mode`` defaults to the
+paper's theoretical trigger when present.  Every response carries
+``jax_loaded`` so deployments can assert the serving path never touched
+the accelerator stack (tests/test_sweep_store.py does).
+
+One-shot mode for scripts/CI (prints the JSON and exits):
+
+    python -m repro.experiments.serve_sweeps STORE --once \
+        'best_lambda?budget=0.2&mode=theoretical'
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.experiments import query as query_lib
+from repro.experiments.store import SweepStore
+
+
+# Resolved entries cached per (store root, entry list): the store is
+# append-only, so a cache entry is valid exactly while the hash list is
+# unchanged — steady-state queries then skip all array I/O and merging.
+_entry_cache: dict[tuple, object] = {}
+
+
+def _resolve_entry(store: SweepStore, params: dict):
+    h = params.get("hash")
+    hashes = store.hashes()
+    key = (store.root, h, tuple(hashes))
+    if key in _entry_cache:
+        return _entry_cache[key]
+    if h:
+        entry = store.get(h)
+    elif len(hashes) == 1:
+        entry = store.get(hashes[0])
+    else:
+        # family membership comes from meta.json alone — no array I/O
+        # until the actual member entries are merged
+        families = {m["family_hash"] for m in store.entries()}
+        if len(families) != 1:
+            raise KeyError(
+                f"store has {len(hashes)} entries across {len(families)} "
+                "families — pass ?hash=<spec_hash> (see /sweeps)")
+        entry = store.merged(families.pop())
+    _entry_cache.clear()                    # keep at most one resolution
+    _entry_cache[key] = entry
+    return entry
+
+
+def _curve(store: SweepStore, params: dict) -> query_lib.TradeoffCurve:
+    entry = _resolve_entry(store, params)
+    select = {k[4:]: int(v) for k, v in params.items()
+              if k.startswith("sel_")}
+    return query_lib.tradeoff_curve(
+        entry, mode=params.get("mode"),
+        rho_index=int(params.get("rho_index", 0)),
+        select=select or None)
+
+
+def handle_query(store: SweepStore, name: str, params: dict) -> dict:
+    """Dispatch one query; shared by the HTTP handler and ``--once``."""
+    if name in ("", "sweeps"):
+        return {"query": "sweeps", "entries": store.entries(),
+                "jax_loaded": "jax" in sys.modules}
+    curve = _curve(store, params)
+    if name == "best_lambda":
+        result = query_lib.best_lambda(curve, float(params["budget"]))
+    elif name == "tradeoff":
+        result = query_lib.tradeoff_at(curve, float(params["lam"]))
+    elif name == "pareto":
+        result = {"front": query_lib.pareto_front(curve)}
+    elif name == "curve":
+        result = {"rows": curve.as_rows()}
+    else:
+        raise KeyError(f"unknown query {name!r} (best_lambda | tradeoff | "
+                       "pareto | curve | sweeps)")
+    return {"query": name, "spec_hash": curve.spec_hash, "mode": curve.mode,
+            "result": result, "jax_loaded": "jax" in sys.modules}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    store: SweepStore = None   # set by serve()
+
+    def do_GET(self):  # noqa: N802 (stdlib API)
+        parsed = urllib.parse.urlparse(self.path)
+        params = {k: v[-1] for k, v in
+                  urllib.parse.parse_qs(parsed.query).items()}
+        path = parsed.path.strip("/")
+        name = path[len("query/"):] if path.startswith("query/") else path
+        try:
+            body = handle_query(self.store, name, params)
+            code = 200
+        except (KeyError, ValueError, IndexError) as e:
+            body, code = {"error": str(e)}, 400
+        blob = json.dumps(body).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(blob)))
+        self.end_headers()
+        self.wfile.write(blob)
+
+    def log_message(self, fmt, *args):
+        print(f"[serve_sweeps] {fmt % args}", file=sys.stderr)
+
+
+def serve(store_root: str, port: int = 8321) -> None:
+    handler = type("Handler", (_Handler,), {"store": SweepStore(store_root)})
+    httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
+    print(f"[serve_sweeps] serving {store_root} on "
+          f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
+    httpd.serve_forever()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("store", help="SweepStore root directory")
+    ap.add_argument("--port", type=int, default=8321,
+                    help="bind port (0 picks a free one)")
+    ap.add_argument("--once", default=None, metavar="QUERY",
+                    help="answer 'name?k=v&…' once to stdout and exit")
+    args = ap.parse_args(argv)
+    if args.once is not None:
+        name, _, qs = args.once.partition("?")
+        params = {k: v[-1] for k, v in urllib.parse.parse_qs(qs).items()}
+        print(json.dumps(handle_query(SweepStore(args.store), name, params),
+                         indent=1, sort_keys=True))
+        return
+    serve(args.store, args.port)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,358 @@
+"""Append-only sweep-summary store + canonical spec hashing (DESIGN.md §8).
+
+The deployment-time deliverable of the paper is a *table*: which trigger
+threshold λ buys how much communication for how much value-function error.
+``SweepStore`` persists finished sweep summaries keyed by a content hash
+of the ``SweepSpec``, so that table outlives the job that computed it:
+
+* **spec hash** — sha256 of the canonical JSON of the spec's dataclass
+  fields (sorted keys; arrays digested by shape/dtype/bytes).  Execution
+  knobs that cannot change results (``chunk_size``) are excluded, so a
+  chunked and an unchunked run of the same grid share one store entry.
+* **family hash** — the spec hash with the λ grid removed: entries with
+  equal family hashes (and equal input digests) are the *same experiment
+  at different thresholds* and can be merged along the λ axis, which is
+  what makes grid extension (“add three more λ points”) compute only the
+  missing cells (``repro.experiments.runtime.run_sweep_extend``).
+
+Entries are directories ``<root>/<spec_hash>/`` holding ``arrays.npz``
+(flat numpy result arrays) plus ``meta.json`` (canonical spec payload,
+``SweepResult.axes`` descriptor, array manifest); ``meta.json`` is
+written last, so a torn write never yields a readable entry.  The store
+is append-only: re-putting an existing hash verifies byte-identity and
+raises on any mismatch.
+
+This module never imports jax — it is the half of the system the query
+service (``repro.experiments.query`` / ``serve_sweeps``) runs on, and
+those answer threshold queries from a cold store with zero device
+computation (tests/test_sweep_store.py asserts jax is never even
+imported).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Iterable, Optional, Union
+
+import numpy as np
+
+# Fields that select *how* a sweep executes but provably cannot change its
+# results (map-over-vmap chunking is bitwise on this backend — asserted by
+# tests/test_sweep_sharded.py and tests/test_runtime_resume.py), excluded
+# from the spec hash so equivalent runs share one store entry.
+EXEC_ONLY_FIELDS = ("chunk_size",)
+
+# The grid axis the store can extend/merge along.  λ is the deliverable —
+# "what threshold hits this budget" — so it is the one axis worth growing
+# incrementally; modes/rhos/seeds stay part of the experiment identity.
+MERGE_FIELD = "lambdas"
+
+_META = "meta.json"
+_ARRAYS = "arrays.npz"
+
+
+def _canon(v):
+    """Canonical JSON-able form of one spec field value."""
+    if v is None or isinstance(v, (str, bool)):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    if hasattr(v, "_asdict"):                       # NamedTuple (TraceSpec)
+        return {k: _canon(x) for k, x in v._asdict().items()}
+    if isinstance(v, (list, tuple)):
+        return [_canon(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _canon(x) for k, x in sorted(v.items())}
+    a = np.asarray(v)
+    if a.dtype == object:
+        raise TypeError(f"cannot canonicalize object-dtype field value {v!r}")
+    if a.ndim == 0:
+        return _canon(a.item())
+    return {"__array__": {
+        "shape": list(a.shape), "dtype": str(a.dtype),
+        "sha256": hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()}}
+
+
+def spec_payload(spec) -> dict:
+    """Canonical dict of a ``SweepSpec`` (or an already-built payload).
+
+    Key order never matters — the payload is sorted and hashed with
+    ``sort_keys`` — so the hash is stable under dataclass field reordering
+    (the hypothesis property tests in tests/test_sweep_store.py).
+    """
+    if dataclasses.is_dataclass(spec) and not isinstance(spec, type):
+        items = {f.name: getattr(spec, f.name)
+                 for f in dataclasses.fields(spec)}
+    elif isinstance(spec, dict):
+        items = dict(spec)
+    else:
+        raise TypeError(f"spec must be a dataclass or dict, got {type(spec)}")
+    for k in EXEC_ONLY_FIELDS:
+        items.pop(k, None)
+    # trace="summary" is shorthand for the default TraceSpec — identical
+    # results, so identical hash.  Mirrors repro.core.algorithm1
+    # .SUMMARY_TRACE (jax-free here); pinned by tests/test_sweep_store.py.
+    if items.get("trace") == "summary":
+        items["trace"] = {"j_trajectory": False, "alphas": False,
+                          "gains": False}
+    return {str(k): _canon(v) for k, v in sorted(items.items())}
+
+
+def _digest(payload: dict) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def spec_hash(spec) -> str:
+    """Content hash identifying one sweep's results."""
+    return _digest(spec_payload(spec))
+
+
+def family_payload(spec) -> dict:
+    p = dict(spec_payload(spec))
+    p.pop(MERGE_FIELD, None)
+    return p
+
+
+def family_hash(spec) -> str:
+    """Content hash identifying the experiment *up to* its λ grid."""
+    return _digest(family_payload(spec))
+
+
+def arrays_digest(arrays: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class StoredSweep:
+    """One store entry, loaded to plain numpy (no jax anywhere)."""
+
+    spec: dict                       # canonical payload (spec_payload form)
+    spec_hash: str
+    family_hash: str
+    axes: tuple[str, ...]
+    arrays: dict[str, np.ndarray]    # flat result arrays ("trace/...", "j_final")
+    extra: dict
+
+    @property
+    def lambdas(self) -> list[float]:
+        return [float(x) for x in self.spec[MERGE_FIELD]]
+
+    @property
+    def modes(self) -> list[str]:
+        return list(self.spec["modes"])
+
+
+class SweepStore:
+    """Append-only directory of finished sweep summaries keyed by spec hash."""
+
+    def __init__(self, root: Union[str, os.PathLike]):
+        self.root = os.fspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # ------------------------------------------------------------ layout --
+
+    def _dir(self, h: str) -> str:
+        return os.path.join(self.root, h)
+
+    def hashes(self) -> list[str]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if os.path.isfile(os.path.join(self.root, name, _META)):
+                out.append(name)
+        return out
+
+    def entries(self) -> list[dict]:
+        """All entry metadata (cheap: no arrays loaded)."""
+        out = []
+        for h in self.hashes():
+            with open(os.path.join(self._dir(h), _META)) as f:
+                out.append(json.load(f))
+        return out
+
+    def _resolve(self, spec_or_hash) -> str:
+        if isinstance(spec_or_hash, str):
+            return spec_or_hash
+        return spec_hash(spec_or_hash)
+
+    def has(self, spec_or_hash) -> bool:
+        return os.path.isfile(
+            os.path.join(self._dir(self._resolve(spec_or_hash)), _META))
+
+    # -------------------------------------------------------------- I/O --
+
+    def put(self, spec, arrays: dict[str, np.ndarray],
+            axes: Iterable[str], extra: Optional[dict] = None) -> str:
+        """Append one finished sweep; returns its spec hash.
+
+        Idempotent for byte-identical re-puts; raises if the hash exists
+        with different bytes (append-only: results are never overwritten).
+        """
+        payload = spec_payload(spec)
+        h = _digest(payload)
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        for k, a in arrays.items():
+            if a.dtype == object or a.dtype.kind == "V":
+                raise TypeError(f"array {k!r} has non-native dtype {a.dtype}; "
+                                "view it as a native dtype before storing")
+        if self.has(h):
+            prev = self.get(h)
+            if (sorted(prev.arrays) != sorted(arrays)
+                    or arrays_digest(prev.arrays) != arrays_digest(arrays)):
+                raise ValueError(
+                    f"store entry {h} already exists with different results "
+                    "— the store is append-only and a spec hash must map to "
+                    "one set of bytes")
+            return h
+        d = self._dir(h)
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, os.path.join(d, _ARRAYS))
+        meta = {
+            "spec": payload,
+            "spec_hash": h,
+            "family_hash": _digest(family_payload(payload)),
+            "axes": list(axes),
+            "arrays": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for k, a in arrays.items()},
+            "extra": dict(extra or {}),
+        }
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(d, _META))   # commit marker, written last
+        return h
+
+    def get(self, spec_or_hash) -> StoredSweep:
+        h = self._resolve(spec_or_hash)
+        d = self._dir(h)
+        if not os.path.isfile(os.path.join(d, _META)):
+            raise KeyError(f"no store entry {h} under {self.root}")
+        with open(os.path.join(d, _META)) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(d, _ARRAYS), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        return StoredSweep(spec=meta["spec"], spec_hash=meta["spec_hash"],
+                           family_hash=meta["family_hash"],
+                           axes=tuple(meta["axes"]), arrays=arrays,
+                           extra=meta.get("extra", {}))
+
+    # ------------------------------------------------- merge / extension --
+
+    def family(self, spec_or_family_hash,
+               inputs_digest: Optional[str] = None) -> list[StoredSweep]:
+        """All entries of one experiment family (optionally one input set)."""
+        if isinstance(spec_or_family_hash, str):
+            fh = spec_or_family_hash
+        else:
+            fh = family_hash(spec_or_family_hash)
+        # filter on meta.json alone; arrays load only for actual members
+        return [self.get(m["spec_hash"])
+                for m in self._family_metas(fh, inputs_digest)]
+
+    def _family_metas(self, fh: str,
+                      inputs_digest: Optional[str]) -> list[dict]:
+        out = []
+        for meta in self.entries():
+            if meta["family_hash"] != fh:
+                continue
+            if (inputs_digest is not None
+                    and meta.get("extra", {}).get("inputs_digest")
+                    != inputs_digest):
+                continue
+            out.append(meta)
+        return out
+
+    def covered_lambdas(self, spec,
+                        inputs_digest: Optional[str] = None) -> list[float]:
+        lams: set[float] = set()
+        for meta in self._family_metas(family_hash(spec), inputs_digest):
+            lams.update(float(l) for l in meta["spec"][MERGE_FIELD])
+        return sorted(lams)
+
+    def missing_lambdas(self, spec,
+                        inputs_digest: Optional[str] = None) -> tuple[float, ...]:
+        """The λ values of ``spec`` not yet covered by its family's entries."""
+        covered = set(self.covered_lambdas(spec, inputs_digest=inputs_digest))
+        want = spec_payload(spec)[MERGE_FIELD]
+        return tuple(float(l) for l in want if float(l) not in covered)
+
+    def merge(self, entries: list[StoredSweep]) -> StoredSweep:
+        """Merge same-family entries along the λ axis.
+
+        Disjoint λ sub-grids concatenate (sorted ascending); overlapping λ
+        cells must be byte-identical across entries or the merge raises —
+        two runs claiming the same cell with different bytes means the
+        inputs differed and the family hash failed to capture it.
+        """
+        if not entries:
+            raise ValueError("nothing to merge")
+        base = entries[0]
+        lam_axis = base.axes.index("lam")
+        keyset = sorted(base.arrays)
+        for e in entries[1:]:
+            if e.family_hash != base.family_hash:
+                raise ValueError(
+                    f"cannot merge across families: {e.spec_hash} vs "
+                    f"{base.spec_hash}")
+            if e.axes != base.axes:
+                raise ValueError(f"axes mismatch: {e.axes} vs {base.axes}")
+            if sorted(e.arrays) != keyset:
+                raise ValueError(
+                    f"array keys mismatch: {sorted(e.arrays)} vs {keyset}")
+            if e.extra.get("inputs_digest") != base.extra.get("inputs_digest"):
+                raise ValueError(
+                    "cannot merge entries computed from different sweep "
+                    "inputs (w0/sampler/problem digests differ)")
+        cells: dict[float, tuple[StoredSweep, int]] = {}
+        for e in entries:
+            for i, lam in enumerate(e.lambdas):
+                if lam in cells:
+                    prev_e, prev_i = cells[lam]
+                    for k in keyset:
+                        a = np.take(prev_e.arrays[k], prev_i, axis=lam_axis)
+                        b = np.take(e.arrays[k], i, axis=lam_axis)
+                        if (a.shape != b.shape or a.dtype != b.dtype
+                                or a.tobytes() != b.tobytes()):
+                            raise ValueError(
+                                f"overlapping λ={lam} cell differs between "
+                                f"{prev_e.spec_hash} and {e.spec_hash} "
+                                f"(array {k!r}) — refusing to merge")
+                else:
+                    cells[lam] = (e, i)
+        lams = sorted(cells)
+        arrays = {
+            k: np.stack([np.take(cells[l][0].arrays[k], cells[l][1],
+                                 axis=lam_axis) for l in lams], axis=lam_axis)
+            for k in keyset}
+        spec = dict(base.spec)
+        spec[MERGE_FIELD] = [_canon(l) for l in lams]
+        return StoredSweep(spec=spec, spec_hash=_digest(spec),
+                           family_hash=base.family_hash, axes=base.axes,
+                           arrays=arrays, extra=dict(base.extra))
+
+    def merged(self, spec_or_family_hash,
+               inputs_digest: Optional[str] = None,
+               put: bool = False) -> StoredSweep:
+        """The family's union λ grid as one entry (optionally persisted)."""
+        entries = self.family(spec_or_family_hash,
+                              inputs_digest=inputs_digest)
+        m = self.merge(entries)
+        if put:
+            self.put(m.spec, m.arrays, m.axes, extra=m.extra)
+        return m

@@ -216,6 +216,216 @@ def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
                    env_terms, shared_terms)
 
 
+class SweepPlan(NamedTuple):
+    """The fully-materialized execution plan of one grid (DESIGN.md §8).
+
+    ``plan_sweep`` turns (spec, sampler, stacks) into per-run input arrays
+    plus the replicated parameter/env stacks; ``exec_plan`` runs the whole
+    padded run axis in one jitted call (what ``run_sweep`` does), while
+    ``exec_plan_segment`` runs a half-open ``[start, stop)`` slice of it —
+    the chunk-boundary hook the resumable runtime
+    (``repro.experiments.runtime``) checkpoints between.  Both paths feed
+    ``finalize_sweep``, which trims the padding, restores the grid shape
+    and attaches the exact-objective summaries, so a segmented execution is
+    assembled by exactly the same code as an uninterrupted one.
+    """
+
+    spec: SweepSpec
+    per_run: _RunInputs          # padded to ``padded_runs`` rows
+    w0: Array
+    shared_params: object        # sampler params when no param_sets axis
+    param_stack: object          # stacked param sets, or None
+    env_stack: object            # stacked env-family params, or None
+    env_terms: object            # stacked per-env ProblemTerms, or None
+    shared_terms: object         # grid-shared ProblemTerms, or None
+    sampler_fn: object
+    mesh: object
+    gs: tuple[int, ...]          # grid shape ([E,] [P,] M, L, R, S)
+    axes: tuple[str, ...]
+    num_runs: int                # G: real grid cells
+    padded_runs: int             # Gp: multiple of device count x chunk size
+    env_indices: Optional[np.ndarray]   # (G,) env index per run, unpadded
+
+    @property
+    def num_devices(self) -> int:
+        return (int(np.prod(self.mesh.devices.shape))
+                if self.mesh is not None else 1)
+
+    @property
+    def segment_runs(self) -> int:
+        """Runs per checkpointable segment: chunk_size per device (the
+        whole padded axis when the spec does not chunk)."""
+        if self.spec.chunk_size is None:
+            return self.padded_runs
+        return self.spec.chunk_size * self.num_devices
+
+    def segments(self) -> list[tuple[int, int]]:
+        """Half-open ``[start, stop)`` run ranges; padding guarantees the
+        padded axis divides evenly into segments."""
+        s = self.segment_runs
+        return [(a, a + s) for a in range(0, self.padded_runs, s)]
+
+
+def plan_sweep(
+    spec: SweepSpec,
+    sampler: ParamSampler,
+    w0: Array,
+    problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
+    *,
+    param_sets: Optional[object] = None,
+    env_sets: Optional[object] = None,
+    mesh=None,
+) -> SweepPlan:
+    """Flatten the requested grid into a ``SweepPlan`` (see ``run_sweep``
+    for the argument semantics)."""
+    terms = (problem if isinstance(problem, ProblemTerms)
+             else ProblemTerms.from_problem(problem) if problem is not None
+             else None)
+    env_terms = getattr(env_sets, "terms", None) if env_sets is not None else None
+    if "theoretical" in spec.modes and terms is None and env_terms is None:
+        raise ValueError("theoretical mode needs the exact problem "
+                         "(problem= or env_sets with terms)")
+
+    M, L, R, S = spec.grid_shape
+    share_params = param_sets is None
+    gs: tuple[int, ...] = ()
+    axes: tuple[str, ...] = ()
+    if env_sets is not None:
+        E = int(jax.tree.leaves(env_sets.params)[0].shape[0])
+        gs += (E,)
+        axes += ("env_set",)
+    if not share_params:
+        P = int(jax.tree.leaves(param_sets)[0].shape[0])
+        gs += (P,)
+        axes += ("param_set",)
+    gs += (M, L, R, S)
+    axes += BASE_AXES
+    G = math.prod(gs)
+
+    grid = np.indices(gs).reshape(len(gs), G)
+    mi, li, ri, si = grid[-4], grid[-3], grid[-2], grid[-1]
+    ei = grid[0] if env_sets is not None else None
+    pi = grid[1 if env_sets is not None else 0] if not share_params else None
+
+    # Pad the flattened run axis so it divides evenly over devices and
+    # chunks; padding runs recompute existing cells and are dropped by
+    # ``finalize_sweep``.
+    D = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+    C = spec.chunk_size or 1
+    Gp = D * C * math.ceil(G / (D * C))
+    pad = np.arange(Gp) % G
+    mi, li, ri, si = mi[pad], li[pad], ri[pad], si[pad]
+
+    mode_ids = jnp.asarray([MODE_IDS[m] for m in spec.modes], jnp.int32)[mi]
+    thresholds = jnp.asarray(spec.thresholds())[li, ri]            # (Gp, N)
+    tx_probs = jnp.asarray(
+        np.broadcast_to(np.asarray(spec.random_tx_prob, np.float32), gs)
+        .reshape(G)[pad])
+    keys = jnp.stack([jax.random.key(int(s)) for s in spec.seeds])[si]
+
+    shared_params = param_stack = None
+    if share_params:
+        shared_params = sampler.params
+    else:
+        param_stack = jax.tree.map(jnp.asarray, param_sets)
+    env_stack = None
+    if env_sets is not None:
+        env_stack = jax.tree.map(jnp.asarray, env_sets.params)
+        if env_terms is not None:
+            env_terms = jax.tree.map(jnp.asarray, env_terms)
+
+    per_run = _RunInputs(
+        keys=keys, mode_ids=mode_ids, thresholds=thresholds,
+        tx_probs=tx_probs,
+        set_idx=None if share_params else jnp.asarray(pi[pad], jnp.int32),
+        env_idx=(jnp.asarray(ei[pad], jnp.int32)
+                 if env_sets is not None else None))
+
+    return SweepPlan(
+        spec=spec, per_run=per_run, w0=jnp.asarray(w0),
+        shared_params=shared_params, param_stack=param_stack,
+        env_stack=env_stack,
+        env_terms=env_terms if env_terms is not None else None,
+        shared_terms=None if env_terms is not None else terms,
+        sampler_fn=sampler.fn, mesh=mesh, gs=gs, axes=axes,
+        num_runs=G, padded_runs=Gp, env_indices=ei)
+
+
+def _exec_args(plan: SweepPlan, per_run: _RunInputs,
+               chunk_size: Optional[int]):
+    spec = plan.spec
+    args = (per_run, plan.w0, plan.shared_params, plan.param_stack,
+            plan.env_stack, plan.env_terms, plan.shared_terms)
+    kwargs = dict(
+        sampler_fn=plan.sampler_fn, eps=spec.eps,
+        num_agents=spec.num_agents, gain_backend=spec.gain_backend,
+        batching=spec.batching, share_params=plan.param_stack is None,
+        per_run_terms=plan.env_terms is not None,
+        trace=resolve_trace(spec.trace), chunk_size=chunk_size,
+        mesh=plan.mesh)
+    return args, kwargs
+
+
+def _exec(plan: SweepPlan, per_run: _RunInputs, chunk_size: Optional[int]):
+    args, kwargs = _exec_args(plan, per_run, chunk_size)
+    return _sweep_exec(*args, **kwargs)
+
+
+def exec_plan(plan: SweepPlan):
+    """The whole padded run axis as one jitted call (``run_sweep``'s path)."""
+    return _exec(plan, plan.per_run, plan.spec.chunk_size)
+
+
+def exec_plan_segment(plan: SweepPlan, start: int, stop: int):
+    """One checkpointable segment ``[start, stop)`` of the padded run axis.
+
+    Dispatched as its own (cached-compile) call so the resumable runtime
+    can checkpoint between segments; vmapped-segment results are bitwise
+    identical to the corresponding rows of ``exec_plan`` on this backend
+    (asserted end-to-end by tests/test_runtime_resume.py).
+    """
+    if not (0 <= start < stop <= plan.padded_runs):
+        raise ValueError(f"segment [{start}, {stop}) outside "
+                         f"[0, {plan.padded_runs})")
+    sliced = jax.tree.map(lambda x: x[start:stop], plan.per_run)
+    return _exec(plan, sliced, None)
+
+
+def segment_shapes(plan: SweepPlan):
+    """Shape/dtype pytree of one segment's output — traced, never executed.
+
+    The resumable runtime builds its checkpoint-restore template from this
+    (``jax.eval_shape`` on the jitted executor), so resuming touches no
+    device before the first genuinely-missing segment runs.
+    """
+    sliced = jax.tree.map(lambda x: x[:plan.segment_runs], plan.per_run)
+    args, kwargs = _exec_args(plan, sliced, None)
+    return _sweep_exec.eval_shape(*args, **kwargs)
+
+
+def finalize_sweep(plan: SweepPlan, flat) -> SweepResult:
+    """Trim padding, restore the grid shape, attach exact-J summaries."""
+    gs, G = plan.gs, plan.num_runs
+    flat = jax.tree.map(lambda x: x[:G], flat)
+    result = jax.tree.map(lambda x: x.reshape(gs + x.shape[1:]), flat)
+
+    if isinstance(flat, SummaryTrace):
+        j_final = result.j_final          # streamed inside the scan
+    elif plan.env_terms is not None:
+        def _j(i, w):
+            t = jax.tree.map(lambda x: x[i], plan.env_terms)
+            return t.objective(w)
+        j_final = jax.vmap(_j)(jnp.asarray(plan.env_indices, jnp.int32),
+                               flat.weights[:, -1, :]).reshape(gs)
+    elif plan.shared_terms is not None:
+        j_final = jax.vmap(plan.shared_terms.objective)(
+            flat.weights[:, -1, :]).reshape(gs)
+    else:
+        j_final = None
+    return SweepResult(trace=result, comm_rate=result.comm_rate,
+                       j_final=j_final, axes=plan.axes)
+
+
 def run_sweep(
     spec: SweepSpec,
     sampler: ParamSampler,
@@ -252,98 +462,15 @@ def run_sweep(
 
     Returns a SweepResult whose leaves carry the grid shape
     ``([E,] [P,] M, L, R, S)`` and whose ``axes`` names those axes.
+
+    Checkpointable execution of the same grid: ``repro.experiments.runtime
+    .run_sweep_resumable`` runs the identical plan segment by segment,
+    persisting each completed segment, and reassembles the bit-identical
+    ``SweepResult`` after a crash.
     """
-    terms = (problem if isinstance(problem, ProblemTerms)
-             else ProblemTerms.from_problem(problem) if problem is not None
-             else None)
-    env_terms = getattr(env_sets, "terms", None) if env_sets is not None else None
-    if "theoretical" in spec.modes and terms is None and env_terms is None:
-        raise ValueError("theoretical mode needs the exact problem "
-                         "(problem= or env_sets with terms)")
-
-    M, L, R, S = spec.grid_shape
-    share_params = param_sets is None
-    gs: tuple[int, ...] = ()
-    axes: tuple[str, ...] = ()
-    if env_sets is not None:
-        E = int(jax.tree.leaves(env_sets.params)[0].shape[0])
-        gs += (E,)
-        axes += ("env_set",)
-    if not share_params:
-        P = int(jax.tree.leaves(param_sets)[0].shape[0])
-        gs += (P,)
-        axes += ("param_set",)
-    gs += (M, L, R, S)
-    axes += BASE_AXES
-    G = math.prod(gs)
-
-    grid = np.indices(gs).reshape(len(gs), G)
-    mi, li, ri, si = grid[-4], grid[-3], grid[-2], grid[-1]
-    ei = grid[0] if env_sets is not None else None
-    pi = grid[1 if env_sets is not None else 0] if not share_params else None
-
-    # Pad the flattened run axis so it divides evenly over devices and
-    # chunks; padding runs recompute existing cells and are dropped below.
-    D = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
-    C = spec.chunk_size or 1
-    Gp = D * C * math.ceil(G / (D * C))
-    pad = np.arange(Gp) % G
-    mi, li, ri, si = mi[pad], li[pad], ri[pad], si[pad]
-
-    mode_ids = jnp.asarray([MODE_IDS[m] for m in spec.modes], jnp.int32)[mi]
-    thresholds = jnp.asarray(spec.thresholds())[li, ri]            # (Gp, N)
-    tx_probs = jnp.asarray(
-        np.broadcast_to(np.asarray(spec.random_tx_prob, np.float32), gs)
-        .reshape(G)[pad])
-    keys = jnp.stack([jax.random.key(int(s)) for s in spec.seeds])[si]
-
-    shared_params = param_stack = None
-    if share_params:
-        shared_params = sampler.params
-    else:
-        param_stack = jax.tree.map(jnp.asarray, param_sets)
-    env_stack = None
-    if env_sets is not None:
-        env_stack = jax.tree.map(jnp.asarray, env_sets.params)
-        if env_terms is not None:
-            env_terms = jax.tree.map(jnp.asarray, env_terms)
-    per_run_terms = env_terms is not None
-
-    per_run = _RunInputs(
-        keys=keys, mode_ids=mode_ids, thresholds=thresholds,
-        tx_probs=tx_probs,
-        set_idx=None if share_params else jnp.asarray(pi[pad], jnp.int32),
-        env_idx=(jnp.asarray(ei[pad], jnp.int32)
-                 if env_sets is not None else None))
-
-    flat = _sweep_exec(
-        per_run, jnp.asarray(w0), shared_params, param_stack, env_stack,
-        env_terms if per_run_terms else None,
-        None if per_run_terms else terms,
-        sampler_fn=sampler.fn, eps=spec.eps, num_agents=spec.num_agents,
-        gain_backend=spec.gain_backend, batching=spec.batching,
-        share_params=share_params, per_run_terms=per_run_terms,
-        trace=resolve_trace(spec.trace), chunk_size=spec.chunk_size,
-        mesh=mesh)
-
-    flat = jax.tree.map(lambda x: x[:G], flat)
-    result = jax.tree.map(lambda x: x.reshape(gs + x.shape[1:]), flat)
-
-    if isinstance(flat, SummaryTrace):
-        j_final = result.j_final          # streamed inside the scan
-    elif per_run_terms:
-        def _j(i, w):
-            t = jax.tree.map(lambda x: x[i], env_terms)
-            return t.objective(w)
-        j_final = jax.vmap(_j)(jnp.asarray(ei, jnp.int32),
-                               flat.weights[:, -1, :]).reshape(gs)
-    elif terms is not None:
-        j_final = jax.vmap(terms.objective)(
-            flat.weights[:, -1, :]).reshape(gs)
-    else:
-        j_final = None
-    return SweepResult(trace=result, comm_rate=result.comm_rate,
-                       j_final=j_final, axes=axes)
+    plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
+                      env_sets=env_sets, mesh=mesh)
+    return finalize_sweep(plan, exec_plan(plan))
 
 
 def tradeoff_rows(result: SweepResult, spec: SweepSpec, **extra) -> list[dict]:

@@ -1,0 +1,128 @@
+"""Checkpoint-store contract: flat keys cannot collide, restore is strict.
+
+Regression battery for the ISSUE 3 satellites: the seed ``_flatten``
+joined path parts with ``/`` without escaping, so ``{"a": {"b": 1}}``
+and ``{"a/b": 1}`` silently collided; ``restore`` ignored npz keys
+missing from ``like`` and never compared dtypes."""
+
+import json
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import _flatten, load_metadata, restore, save
+
+
+class Pair(NamedTuple):
+    foo: jax.Array
+    bar: jax.Array
+    opt: Optional[jax.Array] = None
+
+
+# ------------------------------------------------------------ flat keys ----
+
+
+def test_nested_vs_slash_keys_do_not_collide():
+    """{"a": {"b": x}} and {"a/b": y} must occupy distinct npz keys."""
+    tree = {"a": {"b": jnp.zeros(2)}, "a/b": jnp.ones(3)}
+    flat = _flatten(tree)
+    assert sorted(flat) == ["a%2Fb", "a/b"]
+    np.testing.assert_array_equal(flat["a/b"], np.zeros(2))
+    np.testing.assert_array_equal(flat["a%2Fb"], np.ones(3))
+
+
+def test_slash_key_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(3.0)}, "a/b": jnp.arange(4.0) + 10,
+            "w%x": jnp.ones(2)}
+    path = str(tmp_path / "c.npz")
+    save(path, tree)
+    got, _ = restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]["b"]), np.arange(3.0))
+    np.testing.assert_array_equal(np.asarray(got["a/b"]), np.arange(4.0) + 10)
+    np.testing.assert_array_equal(np.asarray(got["w%x"]), np.ones(2))
+
+
+def test_namedtuple_fields_become_key_names(tmp_path):
+    """Pytree-of-NamedTuple: field names (not indices) key the npz, and
+    None fields ride through untouched."""
+    tree = {"t": Pair(foo=jnp.zeros((2, 2)), bar=jnp.ones(3))}
+    flat = _flatten(tree)
+    assert sorted(flat) == ["t/bar", "t/foo"]
+    path = str(tmp_path / "nt.npz")
+    save(path, tree)
+    got, _ = restore(path, tree)
+    assert isinstance(got["t"], Pair)
+    assert got["t"].opt is None
+    np.testing.assert_array_equal(np.asarray(got["t"].bar), np.ones(3))
+
+
+def test_reserved_sidecar_keys_raise():
+    with pytest.raises(ValueError, match="reserved"):
+        _flatten({"__meta__": jnp.zeros(1)})
+
+
+# --------------------------------------------------------- strict restore ----
+
+
+def test_restore_raises_on_missing_key(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match=r"missing from checkpoint \['b'\]"):
+        restore(path, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+def test_restore_raises_on_extra_key(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match=r"unexpected in checkpoint \['b'\]"):
+        restore(path, {"a": jnp.zeros(2)})
+
+
+def test_restore_raises_on_dtype_mismatch(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros(4, jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch for 'a'"):
+        restore(path, {"a": jnp.zeros(4, jnp.int32)})
+
+
+def test_restore_raises_on_shape_mismatch(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(path, {"a": jnp.zeros((3, 2))})
+
+
+def test_bf16_roundtrip_and_uint16_view_is_not_coercible(tmp_path):
+    """bf16 stores as a uint16 view + dtype sidecar; restoring into a bf16
+    template round-trips bitwise, restoring into uint16 raises (the
+    sidecar, not the storage view, is the truth)."""
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(5,)), dtype=jnp.bfloat16)
+    path = str(tmp_path / "bf16.npz")
+    save(path, {"w": vals})
+    got, _ = restore(path, {"w": jnp.zeros(5, jnp.bfloat16)})
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(vals).view(np.uint16),
+                                  np.asarray(got["w"]).view(np.uint16))
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore(path, {"w": jnp.zeros(5, jnp.uint16)})
+
+
+def test_metadata_roundtrip_and_cheap_read(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros(1)}, metadata={"step": 3, "tag": "x"})
+    assert load_metadata(path) == {"step": 3, "tag": "x"}
+    _, meta = restore(path, {"a": jnp.zeros(1)})
+    assert meta == {"step": 3, "tag": "x"}
+
+
+def test_atomic_write_never_leaves_partial_file(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save(path, {"a": jnp.zeros(8)})
+    leftovers = [p for p in tmp_path.iterdir() if p.suffix == ".tmp"]
+    assert not leftovers
+    with np.load(path) as z:
+        assert json.loads(str(z["__dtypes__"])) == {"a": "float32"}

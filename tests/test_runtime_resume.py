@@ -1,0 +1,212 @@
+"""Resumable-runtime contract (ISSUE 3 acceptance):
+
+* a fresh ``run_sweep_resumable`` is bitwise identical to ``run_sweep``;
+* a sweep killed after k chunks (simulated by truncating the store dir)
+  and resumed is bitwise identical to the uninterrupted result — for
+  both ``trace="summary"`` and full-trace modes;
+* chunk checkpoints carry the spec hash / input digest / grid coords,
+  and a store dir cannot silently serve a different sweep;
+* finished sweeps land in the ``SweepStore`` keyed by spec hash."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import load_metadata
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments.runtime import (
+    completed_chunks,
+    inputs_digest,
+    run_sweep_resumable,
+)
+from repro.experiments.store import SweepStore, spec_hash
+
+EPS = 0.5
+N = 30
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical", "random"),
+                lambdas=(1e-3, 1e-1), seeds=(0, 1), rhos=(RHO,), eps=EPS,
+                num_iterations=N, num_agents=2, random_tx_prob=0.4,
+                chunk_size=4, trace="summary")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+def _chunk_files(store_dir):
+    return sorted(f for f in os.listdir(store_dir) if f.startswith("chunk_"))
+
+
+def _truncate_after(store_dir, k):
+    """Simulate a crash after k completed chunks: later chunks vanish."""
+    for f in _chunk_files(store_dir)[k:]:
+        os.remove(os.path.join(store_dir, f))
+
+
+def _assert_bitwise(got, ref):
+    assert got.axes == ref.axes
+    np.testing.assert_array_equal(np.asarray(got.comm_rate),
+                                  np.asarray(ref.comm_rate))
+    np.testing.assert_array_equal(np.asarray(got.j_final),
+                                  np.asarray(ref.j_final))
+    for name in type(ref.trace)._fields:
+        a, b = getattr(got.trace, name), getattr(ref.trace, name)
+        if b is None:
+            assert a is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"trace.{name}")
+
+
+# -------------------------------------------------------------- parity ----
+
+
+def test_fresh_resumable_bitwise_matches_run_sweep_summary(tmp_path):
+    spec = _spec()
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                              store_dir=str(tmp_path / "s"))
+    _assert_bitwise(got, ref)
+    # chunking is an execution knob, not a result knob: the unchunked
+    # engine agrees bitwise too (what lets the store share one hash)
+    ref_unchunked = run_sweep(dataclasses.replace(spec, chunk_size=None),
+                              _sampler(), W0, problem=PROB)
+    _assert_bitwise(got, ref_unchunked)
+
+
+@pytest.mark.parametrize("trace", ["summary", "full"])
+def test_crash_resume_bitwise_identical(tmp_path, trace):
+    """Kill after 1 of 3 chunks, resume: bitwise equal to uninterrupted."""
+    spec = _spec(trace=trace)
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    assert len(_chunk_files(d)) == 3        # 12 runs / chunk_size 4
+    _truncate_after(d, 1)
+    events = []
+    got = run_sweep_resumable(
+        spec, _sampler(), W0, problem=PROB, store_dir=d,
+        on_chunk=lambda i, n, restored: events.append((i, restored)))
+    assert events == [(0, True), (1, False), (2, False)]
+    _assert_bitwise(got, ref)
+
+
+def test_resume_loads_all_chunks_without_recompute(tmp_path):
+    spec = _spec()
+    d = str(tmp_path / "s")
+    ref = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    events = []
+    got = run_sweep_resumable(
+        spec, _sampler(), W0, problem=PROB, store_dir=d,
+        on_chunk=lambda i, n, restored: events.append(restored))
+    assert events == [True, True, True]
+    _assert_bitwise(got, ref)
+
+
+def test_single_segment_without_chunk_size(tmp_path):
+    spec = _spec(chunk_size=None)
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    assert len(_chunk_files(d)) == 1
+    _assert_bitwise(got, ref)
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count)")
+def test_crash_resume_bitwise_on_device_mesh(tmp_path):
+    """Segments shard over the mesh (chunk_size runs per device); kill and
+    resume stays bitwise identical to the uninterrupted sharded sweep."""
+    from repro.launch.mesh import make_sweep_mesh
+    spec = _spec(seeds=(0, 1, 2), chunk_size=2)
+    mesh = make_sweep_mesh()
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB, mesh=mesh)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, mesh=mesh,
+                        store_dir=d)
+    _truncate_after(d, 1)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, mesh=mesh,
+                              store_dir=d)
+    _assert_bitwise(got, ref)
+
+
+# ------------------------------------------------------- chunk metadata ----
+
+
+def test_chunk_checkpoints_carry_identity_and_grid_coords(tmp_path):
+    spec = _spec()
+    d = str(tmp_path / "s")
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    sh = spec_hash(spec)
+    dig = inputs_digest(_sampler(), W0, problem=PROB)
+    for i, f in enumerate(_chunk_files(d)):
+        meta = load_metadata(os.path.join(d, f))
+        assert meta["spec_hash"] == sh
+        assert meta["inputs_digest"] == dig
+        assert meta["segment_index"] == i
+        assert meta["segment"] == [i * 4, (i + 1) * 4]
+        assert meta["grid_coords"]["axes"] == ["mode", "lam", "rho", "seed"]
+        assert meta["grid_coords"]["grid_shape"] == [3, 2, 1, 2]
+    assert len(completed_chunks(d, meta["exec_hash"])) == 3
+    assert completed_chunks(d, "not-the-hash") == {}
+
+
+def test_store_dir_rejects_different_sweep(tmp_path):
+    d = str(tmp_path / "s")
+    run_sweep_resumable(_spec(), _sampler(), W0, problem=PROB, store_dir=d)
+    with pytest.raises(ValueError, match="different sweep"):
+        run_sweep_resumable(_spec(lambdas=(1e-2,)), _sampler(), W0,
+                            problem=PROB, store_dir=d)
+
+
+def test_inputs_digest_distinguishes_w0_and_problem():
+    s = _sampler()
+    base = inputs_digest(s, W0, problem=PROB)
+    assert inputs_digest(s, W0 + 1.0, problem=PROB) != base
+    assert inputs_digest(s, W0, problem=None) != base
+    assert inputs_digest(s, W0, problem=PROB) == base
+    # with a param_sets axis the engine ignores sampler.params — samplers
+    # differing only there must digest identically (else cached family
+    # entries are never reused)
+    import jax
+    regimes = jax.tree.map(lambda x: x[None], GW.agent_params(W0, 2))
+    bare = ParamSampler(fn=s.fn, params=None)
+    assert (inputs_digest(s, W0, problem=PROB, param_sets=regimes)
+            == inputs_digest(bare, W0, problem=PROB, param_sets=regimes))
+
+
+# ------------------------------------------------------- store writeback ----
+
+
+def test_finished_sweep_lands_in_summary_store(tmp_path):
+    spec = _spec()
+    root = str(tmp_path / "store")
+    res = run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                              store_dir=str(tmp_path / "s"),
+                              summary_store=root)
+    store = SweepStore(root)
+    assert store.has(spec)
+    entry = store.get(spec)
+    assert entry.axes == ("mode", "lam", "rho", "seed")
+    assert entry.extra["trace_kind"] == "summary"
+    np.testing.assert_array_equal(entry.arrays["trace/comm_rate"],
+                                  np.asarray(res.comm_rate))
+    np.testing.assert_array_equal(entry.arrays["trace/j_final"],
+                                  np.asarray(res.j_final))

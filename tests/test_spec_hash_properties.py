@@ -1,0 +1,78 @@
+"""Property tests for sweep-spec content hashing (hypothesis-guarded,
+matching the PR 1 convention — the container without the optional dev
+dep skips this file, CI runs it).
+
+The hash is the SweepStore's key: it must be stable under field
+reordering (canonical sorted payload), sensitive to every
+result-shaping value, and its family variant must quotient out exactly
+the λ grid."""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep, see pyproject [dev]
+from hypothesis import given, settings, strategies as st
+
+import numpy as np
+
+from repro.experiments.store import (
+    family_hash,
+    spec_hash,
+    spec_payload,
+)
+
+BASE = dict(modes=["theoretical", "practical"], lambdas=[1e-3, 1e-1],
+            seeds=[0, 1], rhos=[0.92], eps=0.5, num_iterations=40,
+            num_agents=2, include_horizon_norm=True, random_tx_prob=0.5,
+            gain_backend="reference", batching="vmap", trace="full")
+
+
+@given(perm=st.permutations(list(BASE.items())))
+@settings(max_examples=50, deadline=None)
+def test_hash_stable_under_field_reordering(perm):
+    """Insertion order of the spec's fields never changes the hash."""
+    shuffled = dict(perm)
+    assert spec_hash(shuffled) == spec_hash(BASE)
+    assert family_hash(shuffled) == family_hash(BASE)
+    assert list(spec_payload(shuffled)) == sorted(spec_payload(shuffled))
+
+
+@given(lams=st.lists(
+    st.floats(min_value=1e-6, max_value=1.0, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=6, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_family_hash_quotients_out_exactly_the_lambda_grid(lams):
+    spec = dict(BASE, lambdas=lams)
+    assert family_hash(spec) == family_hash(BASE)
+    if sorted(map(float, lams)) != sorted(map(float, BASE["lambdas"])):
+        assert spec_hash(spec) != spec_hash(BASE)
+
+
+@given(eps=st.floats(min_value=1e-3, max_value=2.0, allow_nan=False),
+       n=st.integers(min_value=1, max_value=500))
+@settings(max_examples=50, deadline=None)
+def test_hash_sensitive_to_result_shaping_fields(eps, n):
+    spec = dict(BASE, eps=eps, num_iterations=n)
+    same = (eps == BASE["eps"] and n == BASE["num_iterations"])
+    assert (spec_hash(spec) == spec_hash(BASE)) == same
+    assert (family_hash(spec) == family_hash(BASE)) == same
+
+
+@given(chunk=st.one_of(st.none(), st.integers(min_value=1, max_value=64)))
+@settings(max_examples=20, deadline=None)
+def test_hash_ignores_execution_only_chunking(chunk):
+    spec = dict(BASE, chunk_size=chunk)
+    assert spec_hash(spec) == spec_hash(BASE)
+
+
+@given(scale=st.floats(min_value=0.1, max_value=0.9, allow_nan=False),
+       shape=st.sampled_from([(2,), (2, 2, 1, 2), (1, 4)]))
+@settings(max_examples=25, deadline=None)
+def test_array_valued_tx_prob_hashed_by_content(scale, shape):
+    a = np.full(shape, scale, np.float32)
+    spec = dict(BASE, random_tx_prob=a)
+    again = dict(BASE, random_tx_prob=a.copy())
+    other = dict(BASE, random_tx_prob=a + np.float32(0.05))
+    assert spec_hash(spec) == spec_hash(again)
+    assert spec_hash(spec) != spec_hash(other)
+    assert spec_hash(spec) != spec_hash(BASE)

@@ -1,0 +1,469 @@
+"""SweepStore + query-service contract (ISSUE 3):
+
+* append-only entries keyed by spec hash, axes descriptor persisted;
+* disjoint λ sub-grids merge into one result bitwise equal to the
+  directly-computed union grid; overlapping cells must be byte-identical
+  or the merge raises;
+* grid extension computes only the missing λ cells;
+* ``best_lambda`` / ``pareto_front`` / ``tradeoff_at`` answer from a
+  cold store with zero device computation — the subprocess tests assert
+  jax is never even imported on the serving path."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import threading
+import urllib.error
+import urllib.request
+from http.server import ThreadingHTTPServer
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import ParamSampler, TraceSpec
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments import query
+from repro.experiments import serve_sweeps
+from repro.experiments.runtime import (
+    inputs_digest,
+    result_arrays,
+    run_sweep_extend,
+    store_result,
+)
+from repro.experiments.store import (
+    StoredSweep,
+    SweepStore,
+    family_hash,
+    spec_hash,
+    spec_payload,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EPS = 0.5
+N = 25
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+LAMS_A = (1e-3, 1e-1)
+LAMS_B = (1e-2,)
+LAMS_ALL = (1e-3, 1e-2, 1e-1)
+
+
+def _spec(lambdas=LAMS_ALL, **kw):
+    base = dict(modes=("theoretical", "practical"), lambdas=lambdas,
+                seeds=(0, 1), rhos=(RHO,), eps=EPS, num_iterations=N,
+                num_agents=2, random_tx_prob=0.4, trace="summary")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+@pytest.fixture(scope="module")
+def sweeps():
+    """The three λ grids (two disjoint subsets + their union), computed
+    once per module; every store test reuses these results."""
+    sampler = _sampler()
+    digest = inputs_digest(sampler, W0, problem=PROB)
+    res = {lams: run_sweep(_spec(lambdas=lams), sampler, W0, problem=PROB)
+           for lams in (LAMS_A, LAMS_B, LAMS_ALL)}
+    return sampler, digest, res
+
+
+@pytest.fixture()
+def store(tmp_path, sweeps):
+    _, digest, res = sweeps
+    s = SweepStore(tmp_path / "store")
+    for lams in (LAMS_A, LAMS_B):
+        store_result(s, _spec(lambdas=lams), res[lams], inputs_digest_=digest)
+    return s
+
+
+@pytest.fixture(scope="module")
+def disk_store(tmp_path_factory, sweeps):
+    """A real on-disk store for the subprocess (jax-free) tests."""
+    _, digest, res = sweeps
+    root = str(tmp_path_factory.mktemp("served_store"))
+    s = SweepStore(root)
+    store_result(s, _spec(lambdas=LAMS_ALL), res[LAMS_ALL],
+                 inputs_digest_=digest)
+    return root
+
+
+# -------------------------------------------------------------- basics ----
+
+
+def test_put_get_roundtrip_persists_axes_and_spec(store, sweeps):
+    _, _, res = sweeps
+    entry = store.get(_spec(lambdas=LAMS_A))
+    assert entry.axes == ("mode", "lam", "rho", "seed")
+    assert entry.lambdas == sorted(LAMS_A)
+    assert entry.modes == ["theoretical", "practical"]
+    assert entry.extra["trace_kind"] == "summary"
+    np.testing.assert_array_equal(entry.arrays["trace/comm_rate"],
+                                  np.asarray(res[LAMS_A].comm_rate))
+
+
+def test_store_is_append_only(store, sweeps):
+    _, digest, res = sweeps
+    # identical re-put: idempotent
+    h = store_result(store, _spec(lambdas=LAMS_A), res[LAMS_A],
+                     inputs_digest_=digest)
+    assert store.has(h)
+    # same spec, different bytes: refused
+    entry = store.get(h)
+    bad = {k: v.copy() for k, v in entry.arrays.items()}
+    bad["trace/comm_rate"] = bad["trace/comm_rate"] + 1.0
+    with pytest.raises(ValueError, match="append-only"):
+        store.put(entry.spec, bad, entry.axes, extra=entry.extra)
+
+
+# --------------------------------------------------------------- merge ----
+
+
+def test_disjoint_merge_bitwise_equals_direct_union(store, sweeps):
+    """Two disjoint λ sub-grids merge into exactly the directly-computed
+    union sweep — same axes, same bytes, same spec hash."""
+    _, _, res = sweeps
+    merged = store.merge([store.get(_spec(lambdas=LAMS_A)),
+                          store.get(_spec(lambdas=LAMS_B))])
+    assert merged.axes == ("mode", "lam", "rho", "seed")
+    assert merged.lambdas == list(LAMS_ALL)
+    assert merged.spec_hash == spec_hash(_spec(lambdas=LAMS_ALL))
+    want = result_arrays(res[LAMS_ALL])
+    assert sorted(merged.arrays) == sorted(want)
+    for k in want:
+        np.testing.assert_array_equal(merged.arrays[k], want[k],
+                                      err_msg=k)
+
+
+def test_merged_helper_persists_union(store):
+    m = store.merged(_spec(lambdas=LAMS_ALL), put=True)
+    assert store.has(_spec(lambdas=LAMS_ALL))
+    assert store.get(_spec(lambdas=LAMS_ALL)).lambdas == list(LAMS_ALL)
+    assert m.lambdas == list(LAMS_ALL)
+
+
+def test_overlapping_merge_identical_cells_ok(store, sweeps):
+    _, digest, res = sweeps
+    store_result(store, _spec(lambdas=LAMS_ALL), res[LAMS_ALL],
+                 inputs_digest_=digest)
+    merged = store.merge([store.get(_spec(lambdas=LAMS_A)),
+                          store.get(_spec(lambdas=LAMS_ALL))])
+    assert merged.lambdas == list(LAMS_ALL)
+
+
+def test_overlapping_merge_mismatched_cells_raise(store):
+    a = store.get(_spec(lambdas=LAMS_A))
+    tampered = {k: v.copy() for k, v in a.arrays.items()}
+    lam_axis = a.axes.index("lam")
+    sl = [slice(None)] * tampered["trace/comm_rate"].ndim
+    sl[lam_axis] = 0
+    tampered["trace/comm_rate"][tuple(sl)] += 0.5
+    b = dataclasses.replace(a, arrays=tampered)
+    with pytest.raises(ValueError, match="refusing to merge"):
+        store.merge([a, b])
+
+
+def test_merge_rejects_mismatched_inputs_digest(store):
+    a = store.get(_spec(lambdas=LAMS_A))
+    b = store.get(_spec(lambdas=LAMS_B))
+    b = dataclasses.replace(b, extra={**b.extra, "inputs_digest": "other"})
+    with pytest.raises(ValueError, match="different sweep inputs"):
+        store.merge([a, b])
+
+
+def test_merge_rejects_different_family(store, sweeps):
+    sampler, _, res = sweeps
+    other_spec = _spec(lambdas=LAMS_B, eps=0.4)
+    other = run_sweep(other_spec, sampler, W0, problem=PROB)
+    store_result(store, other_spec, other)
+    with pytest.raises(ValueError, match="families"):
+        store.merge([store.get(_spec(lambdas=LAMS_A)),
+                     store.get(other_spec)])
+
+
+# ----------------------------------------------------------- extension ----
+
+
+def test_missing_lambdas(store, sweeps):
+    _, digest, _ = sweeps
+    assert store.missing_lambdas(_spec(lambdas=LAMS_ALL),
+                                 inputs_digest=digest) == ()
+    assert store.missing_lambdas(_spec(lambdas=(1e-3, 3e-2)),
+                                 inputs_digest=digest) == (3e-2,)
+    # unknown inputs: nothing is reusable
+    assert store.missing_lambdas(_spec(lambdas=LAMS_A),
+                                 inputs_digest="other") == LAMS_A
+
+
+def test_extend_computes_only_missing_cells(store, sweeps, monkeypatch):
+    """Asking for the union grid when two sub-grids are cached runs the
+    engine zero times; asking with one new λ runs it exactly once, over
+    just that λ."""
+    from repro.experiments import sweep as sweep_mod
+    sampler, _, res = sweeps
+    calls = []
+    real = sweep_mod.run_sweep
+
+    def spy(spec, *a, **kw):
+        calls.append(spec.lambdas)
+        return real(spec, *a, **kw)
+
+    monkeypatch.setattr(sweep_mod, "run_sweep", spy)
+    got = run_sweep_extend(store, _spec(lambdas=LAMS_ALL), sampler, W0,
+                           problem=PROB)
+    assert calls == []                       # fully cached: no device work
+    ref = res[LAMS_ALL]
+    np.testing.assert_array_equal(np.asarray(got.j_final),
+                                  np.asarray(ref.j_final))
+    np.testing.assert_array_equal(np.asarray(got.trace.final_weights),
+                                  np.asarray(ref.trace.final_weights))
+    assert got.axes == ref.axes
+
+    got2 = run_sweep_extend(store, _spec(lambdas=(1e-3, 3e-2)), sampler, W0,
+                            problem=PROB)
+    assert calls == [(3e-2,)]                # only the missing column
+    assert store.has(_spec(lambdas=(1e-3, 3e-2)))
+    # the cached columns are byte-reused, not recomputed
+    li = list(LAMS_ALL).index(1e-3)
+    np.testing.assert_array_equal(np.asarray(got2.j_final)[:, 0],
+                                  np.asarray(ref.j_final)[:, li])
+
+
+def test_extend_preserves_requested_lambda_order(store, sweeps):
+    sampler, _, res = sweeps
+    got = run_sweep_extend(store, _spec(lambdas=(1e-1, 1e-3)), sampler, W0,
+                           problem=PROB)
+    ref = res[LAMS_ALL]
+    np.testing.assert_array_equal(np.asarray(got.j_final)[:, 0],
+                                  np.asarray(ref.j_final)[:, 2])
+    np.testing.assert_array_equal(np.asarray(got.j_final)[:, 1],
+                                  np.asarray(ref.j_final)[:, 0])
+
+
+# ----------------------------------------------------------- spec hash ----
+
+
+def test_spec_hash_ignores_chunk_size_and_resolves_summary():
+    s = _spec()
+    assert spec_hash(s) == spec_hash(dataclasses.replace(s, chunk_size=4))
+    assert spec_hash(s) == spec_hash(
+        dataclasses.replace(s, trace=TraceSpec()))
+    assert spec_hash(s) != spec_hash(
+        dataclasses.replace(s, trace=TraceSpec(alphas=True)))
+    assert spec_hash(s) != spec_hash(dataclasses.replace(s, trace="full"))
+
+
+def test_family_hash_ignores_only_lambdas():
+    s = _spec()
+    assert family_hash(s) == family_hash(
+        dataclasses.replace(s, lambdas=(3e-2,)))
+    assert family_hash(s) != family_hash(dataclasses.replace(s, eps=0.4))
+    assert spec_hash(s) != spec_hash(dataclasses.replace(s, lambdas=(3e-2,)))
+
+
+def test_spec_payload_is_canonical_and_array_aware():
+    s = _spec(random_tx_prob=np.full((2, 3, 1, 2), 0.4, np.float32))
+    p = spec_payload(s)
+    assert list(p) == sorted(p)
+    assert p["random_tx_prob"]["__array__"]["shape"] == [2, 3, 1, 2]
+    s2 = _spec(random_tx_prob=np.full((2, 3, 1, 2), 0.4, np.float32))
+    assert spec_hash(s) == spec_hash(s2)
+    s3 = _spec(random_tx_prob=np.full((2, 3, 1, 2), 0.5, np.float32))
+    assert spec_hash(s) != spec_hash(s3)
+
+
+# ------------------------------------------------------------- queries ----
+
+
+def _synthetic_entry(comm, j, lambdas=(1e-4, 1e-3, 1e-2, 1e-1)):
+    L = len(lambdas)
+    arrays = {
+        "trace/comm_rate": np.repeat(
+            np.asarray(comm, np.float32).reshape(1, L, 1, 1), 2, axis=3),
+        "trace/j_final": np.repeat(
+            np.asarray(j, np.float32).reshape(1, L, 1, 1), 2, axis=3),
+    }
+    payload = {"modes": ["theoretical"], "lambdas": list(lambdas),
+               "rhos": [0.9], "seeds": [0, 1], "eps": 0.5,
+               "num_iterations": 10, "num_agents": 2}
+    return StoredSweep(spec=payload, spec_hash="synthetic",
+                       family_hash="fam", axes=("mode", "lam", "rho", "seed"),
+                       arrays=arrays, extra={"trace_kind": "summary"})
+
+
+COMM = (1.0, 0.6, 0.3, 0.1)
+J = (0.01, 0.02, 0.05, 0.2)
+
+
+def test_best_lambda_interpolates_budget_crossing():
+    c = query.tradeoff_curve(_synthetic_entry(COMM, J))
+    best = query.best_lambda(c, 0.45)
+    assert best["feasible"] and best["interpolated"]
+    # comm is log-λ linear between (1e-3, 0.6) and (1e-2, 0.3): the 0.45
+    # crossing sits at λ = 10^-2.5 with J halfway between 0.02 and 0.05
+    np.testing.assert_allclose(best["lam"], 10 ** -2.5, rtol=1e-6)
+    np.testing.assert_allclose(best["comm_rate"], 0.45, atol=1e-9)
+    np.testing.assert_allclose(best["J"], 0.035, atol=1e-9)
+
+
+def test_best_lambda_grid_point_and_edges():
+    c = query.tradeoff_curve(_synthetic_entry(COMM, J))
+    exact = query.best_lambda(c, 0.3)
+    # comm is stored float32, so a budget that hits a grid point lands
+    # within float32 epsilon of its λ (and snaps to the grid, no interp)
+    assert not exact["interpolated"]
+    assert exact["lam"] == pytest.approx(1e-2, rel=1e-6)
+    loose = query.best_lambda(c, 1.0)
+    assert loose["lam"] == 1e-4 and loose["J"] == pytest.approx(0.01)
+    tight = query.best_lambda(c, 0.05)
+    assert not tight["feasible"] and tight["lam"] == 1e-1
+
+
+def test_pareto_front_drops_dominated_points():
+    c = query.tradeoff_curve(_synthetic_entry(COMM, (0.01, 0.02, 0.5, 0.2)))
+    front = query.pareto_front(c)
+    assert [(r["comm_rate"], r["J"]) for r in front] == [
+        (pytest.approx(0.1), pytest.approx(0.2)),
+        (pytest.approx(0.6), pytest.approx(0.02)),
+        (pytest.approx(1.0), pytest.approx(0.01)),
+    ]
+
+
+def test_best_lambda_non_monotone_comm_skips_interpolation():
+    """Seed noise can break comm monotonicity; the crossing interpolation
+    (which needs monotone xp) must then drop out, leaving the cached grid
+    points as conservative candidates — never np.interp garbage."""
+    c = query.tradeoff_curve(
+        _synthetic_entry((0.40, 0.31, 0.33, 0.10), (0.01, 0.02, 0.03, 0.2)))
+    best = query.best_lambda(c, 0.32)
+    assert best["feasible"] and not best["interpolated"]
+    assert best["lam"] == pytest.approx(1e-3)
+    assert best["J"] == pytest.approx(0.02, rel=1e-5)
+
+
+def test_tradeoff_at_refuses_extrapolation():
+    c = query.tradeoff_curve(_synthetic_entry(COMM, J))
+    at = query.tradeoff_at(c, 1e-3)
+    assert not at["interpolated"]
+    assert at["comm_rate"] == pytest.approx(0.6)
+    with pytest.raises(ValueError, match="outside the cached grid"):
+        query.tradeoff_at(c, 1e-5)
+
+
+def test_curve_reduces_leading_axes_by_name(store):
+    entry = store.get(_spec(lambdas=LAMS_A))
+    c = query.tradeoff_curve(entry, mode="practical")
+    assert c.mode == "practical"
+    assert c.lambdas.tolist() == sorted(LAMS_A)
+    assert np.all((c.comm >= 0) & (c.comm <= 1))
+    with pytest.raises(KeyError):
+        query.tradeoff_curve(entry, mode="nope")
+    with pytest.raises(KeyError, match="unknown axes"):
+        query.tradeoff_curve(entry, select={"env": 0})   # typo'd axis name
+    with pytest.raises(KeyError, match="base axes"):
+        query.tradeoff_curve(entry, select={"mode": 0})  # use mode= instead
+
+
+# ----------------------------------------------- serving path (no jax) ----
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def test_query_path_never_imports_jax(disk_store):
+    """Acceptance: a cold SweepStore answers best_lambda/pareto with zero
+    device computation — jax never even enters the process."""
+    code = (
+        "import sys\n"
+        "from repro.experiments.store import SweepStore\n"
+        "from repro.experiments import query\n"
+        f"s = SweepStore({disk_store!r})\n"
+        "e = s.get(s.hashes()[0])\n"
+        "c = query.tradeoff_curve(e)\n"
+        "b = query.best_lambda(c, 0.5)\n"
+        "f = query.pareto_front(c)\n"
+        "assert 0 <= b['comm_rate'] <= 1 and f\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the query path'\n"
+        "print('DEVICE-FREE-OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=_env(), cwd=REPO, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "DEVICE-FREE-OK" in r.stdout
+
+
+def test_serve_sweeps_once_cli(disk_store):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.experiments.serve_sweeps", disk_store,
+         "--once", "best_lambda?budget=0.9&mode=practical"],
+        capture_output=True, text=True, env=_env(), cwd=REPO, timeout=120)
+    assert r.returncode == 0, r.stderr
+    body = json.loads(r.stdout)
+    assert body["jax_loaded"] is False
+    assert body["mode"] == "practical"
+    assert 0 <= body["result"]["comm_rate"] <= 1
+
+
+def test_serve_sweeps_http_roundtrip(disk_store):
+    handler = type("H", (serve_sweeps._Handler,),
+                   {"store": SweepStore(disk_store)})
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        base = f"http://127.0.0.1:{httpd.server_address[1]}"
+        entries = json.load(urllib.request.urlopen(f"{base}/sweeps"))
+        assert len(entries["entries"]) == 1
+        front = json.load(urllib.request.urlopen(f"{base}/query/pareto"))
+        assert front["result"]["front"]
+        best = json.load(urllib.request.urlopen(
+            f"{base}/query/best_lambda?budget=0.8"))
+        assert best["result"]["comm_budget"] == 0.8
+        curve = json.load(urllib.request.urlopen(
+            f"{base}/query/curve?mode=theoretical"))
+        assert [r["lam"] for r in curve["result"]["rows"]] == list(LAMS_ALL)
+        # every response carries the field (False on a real serving host —
+        # the subprocess tests above assert that; this process has jax)
+        assert entries["jax_loaded"] is True
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{base}/query/nope")
+        assert e.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{base}/query/curve?sel_env=1")
+        assert e.value.code == 400              # typo'd select axis: loud
+    finally:
+        httpd.shutdown()
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_QUERY_STORE"),
+                    reason="REPRO_QUERY_STORE not set (CI resume-kill job "
+                           "points it at the benchmark's store artifact)")
+def test_queries_against_real_ci_store():
+    """The CI resume-kill job runs the store-backed benchmark first, then
+    points this test at the resulting store dir — the query service is
+    exercised against a store a real sweep produced."""
+    store = SweepStore(os.environ["REPRO_QUERY_STORE"])
+    hashes = store.hashes()
+    assert hashes, "benchmark did not populate the store"
+    entry = store.get(hashes[0])
+    c = query.tradeoff_curve(entry)
+    best = query.best_lambda(c, 0.5)
+    assert 0.0 <= best["comm_rate"] <= 1.0
+    assert query.pareto_front(c)
+    mid = float(np.sqrt(c.lambdas[0] * c.lambdas[-1]))
+    at = query.tradeoff_at(c, mid)
+    assert 0.0 <= at["comm_rate"] <= 1.0
