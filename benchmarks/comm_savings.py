@@ -22,6 +22,8 @@ import subprocess
 import sys
 import time
 
+import numpy as np
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 LAMBDAS = (0.0, 1.0, 30.0, 300.0)
@@ -74,7 +76,7 @@ for lam in lams:
 """
 
 
-def run(smoke: bool = False) -> list[dict]:
+def run(smoke: bool = False, store=None) -> list[dict]:
     steps, lambdas = (4, (0.0, 30.0)) if smoke else (30, LAMBDAS)
     env = dict(os.environ,
                PYTHONPATH=os.path.join(REPO, "src"),
@@ -99,4 +101,29 @@ def run(smoke: bool = False) -> list[dict]:
                                 "no output: ") + r.stderr[-500:]))
     if rows:
         rows[0]["sweep_wall_s"] = time.perf_counter() - t0
+    if store is not None and len(recs) == len(lambdas):
+        _persist(store, lambdas, steps, recs)
     return rows
+
+
+def _persist(store, lambdas, steps, recs) -> None:
+    """One dict-spec ``SweepStore`` entry (axes: just λ) so the jax-free
+    report pipeline (DESIGN.md §9) can regenerate the savings table and
+    chart from a cold store.  Skipped when the entry already exists —
+    measured LM losses are not covered by the append-only byte-identity
+    guarantee the sweep-engine entries enjoy."""
+    from repro.experiments.store import SweepStore
+    if not isinstance(store, SweepStore):
+        store = SweepStore(store)
+    spec = {"figure": "comm_savings", "model": "mamba2-370m-reduced",
+            "lambdas": [float(l) for l in lambdas], "num_steps": steps,
+            "agents": recs[0]["agents"]}
+    if store.has(spec):
+        return
+    arrays = {k: np.asarray([rec[k] for rec in recs], np.float64)
+              for k in ("comm_rate", "bytes_per_step_full",
+                        "bytes_per_step_gated", "loss_first", "loss_last")}
+    store.put(spec, arrays, axes=("lam",),
+              extra={"figure": "comm_savings",
+                     "grad_bytes": recs[0]["grad_bytes"],
+                     "agents": recs[0]["agents"]})

@@ -13,6 +13,12 @@ grid executes as exactly TWO jitted ``run_sweep`` calls: one for the gated
 triggers, one for the random baseline matched to the theoretical trigger's
 measured rates (EXPERIMENTS.md §Engine).  A small per-run slice is also
 timed to report the speedup over the seed repo's sequential loop.
+
+With ``store=`` (``run.py --store``) both sweeps go through
+``sweep_or_load``: results persist to the ``SweepStore`` tagged
+``figure=fig2`` — what ``run.py --from-store`` / the report pipeline
+(DESIGN.md §9) regenerates this figure from without any device work —
+and a re-run with a warm store computes nothing.
 """
 
 from __future__ import annotations
@@ -27,7 +33,13 @@ import numpy as np
 from repro.core.algorithm1 import GatedSGDConfig, ParamSampler, run_gated_sgd
 from repro.core.trigger import TriggerConfig
 from repro.envs import GridWorld, stack_agent_params
-from repro.experiments import SweepSpec, matched_random_probs, run_sweep, tradeoff_rows
+from repro.experiments import (
+    SweepSpec,
+    matched_random_probs,
+    run_sweep,
+    sweep_or_load,
+    tradeoff_rows,
+)
 
 EPS = 0.5
 N = 250
@@ -49,7 +61,7 @@ def _fleets(gw: GridWorld, w0):
     return jax.tree.map(lambda a, b: jnp.stack([a, b]), homog, hetero)
 
 
-def run(smoke: bool = False) -> list[dict]:
+def run(smoke: bool = False, store=None) -> list[dict]:
     n_iter, seeds, lambdas = ((25, 2, (1e-3, 1e-1)) if smoke
                               else (N, SEEDS, LAMBDAS))
     gw = GridWorld()
@@ -58,13 +70,25 @@ def run(smoke: bool = False) -> list[dict]:
     rho = prob.min_rho(EPS) * 1.0001
     sampler = ParamSampler(fn=gw.sampler_fn(T), params=None)
     regimes = _fleets(gw, w0)
+    extra = {"figure": "fig2", "regimes": list(REGIMES)}
+
+    def sweep(spec):
+        if store is None:
+            return run_sweep(spec, sampler, w0, problem=prob,
+                             param_sets=regimes)
+        return sweep_or_load(store, spec, sampler, w0, problem=prob,
+                             param_sets=regimes, extra=extra)
 
     # -- jitted call 1: both gated triggers, both regimes ---------------------
+    # store-backed runs stream O(1)-memory summaries (the figure only
+    # needs comm/J, and store entries stay KB-scale); the bare benchmark
+    # keeps the full-trace default, the engine's bit-compat contract
     spec = SweepSpec(modes=("theoretical", "practical"), lambdas=lambdas,
                      seeds=tuple(range(seeds)), rhos=(rho,), eps=EPS,
-                     num_iterations=n_iter, num_agents=2)
+                     num_iterations=n_iter, num_agents=2, tag="fig2",
+                     trace="summary" if store is not None else "full")
     t0 = time.perf_counter()
-    res = run_sweep(spec, sampler, w0, problem=prob, param_sets=regimes)
+    res = sweep(spec)
     jax.block_until_ready(res.comm_rate)
     t1 = time.perf_counter()
 
@@ -72,8 +96,7 @@ def run(smoke: bool = False) -> list[dict]:
     spec_rand = dataclasses.replace(
         spec, modes=("random",), seeds=tuple(range(50, 50 + seeds)),
         random_tx_prob=matched_random_probs(res, spec))
-    res_rand = run_sweep(spec_rand, sampler, w0, problem=prob,
-                         param_sets=regimes)
+    res_rand = sweep(spec_rand)
     jax.block_until_ready(res_rand.comm_rate)
     t2 = time.perf_counter()
 

@@ -6,6 +6,11 @@ Three panels: (left) large lambda => infrequent, late communication;
 
 All 2-agent panels share one jitted ``run_sweep`` call (lambda is data); the
 10-agent panel is a second call (the fleet size changes array shapes).
+
+With ``store=`` (``run.py --store``) both sweeps persist their FULL traces
+to the ``SweepStore`` tagged ``figure=fig3`` (plus w* and the panel map in
+the entry metadata) — everything the jax-free report pipeline (DESIGN.md
+§9) needs to regenerate the per-panel trajectory stats from a cold store.
 """
 
 from __future__ import annotations
@@ -18,7 +23,7 @@ import numpy as np
 
 from repro.core.algorithm1 import ParamSampler
 from repro.envs import LinearSystem
-from repro.experiments import SweepSpec, run_sweep
+from repro.experiments import SweepSpec, run_sweep, sweep_or_load
 
 N = 1500
 T = 1000
@@ -26,7 +31,7 @@ PANELS_2 = (("left_infrequent", 1e-1), ("middle_frequent", 1e-4),
             ("right_2agents", 1e-2))
 
 
-def run(smoke: bool = False, N: int = N, T: int = T) -> list[dict]:
+def run(smoke: bool = False, N: int = N, T: int = T, store=None) -> list[dict]:
     if smoke:
         N, T = 100, 64
     ls = LinearSystem()
@@ -51,22 +56,30 @@ def run(smoke: bool = False, N: int = N, T: int = T) -> list[dict]:
             J_final=float(j_final), w_err_quarterly=w_err,
             us_per_call=us))
 
-    def sweep(lambdas, agents):
+    def sweep(lambdas, agents, panels):
         spec = SweepSpec(modes=("practical",), lambdas=lambdas, seeds=(0,),
                          rhos=(rho,), eps=eps, num_iterations=N,
-                         num_agents=agents)
+                         num_agents=agents, tag=f"fig3-{agents}agents")
         sampler = ParamSampler(fn=fn, params=ls.agent_params(w0, agents))
         t0 = time.perf_counter()
-        res = run_sweep(spec, sampler, w0, problem=prob)
+        if store is None:
+            res = run_sweep(spec, sampler, w0, problem=prob)
+        else:
+            res = sweep_or_load(
+                store, spec, sampler, w0, problem=prob,
+                extra={"figure": "fig3", "wstar": wstar.tolist(),
+                       "panels": [[n, lam] for n, lam in panels]})
         jax.block_until_ready(res.comm_rate)
         return res, (time.perf_counter() - t0) * 1e6 / len(lambdas)
 
-    res2, us2 = sweep(tuple(lam for _, lam in PANELS_2), agents=2)
+    res2, us2 = sweep(tuple(lam for _, lam in PANELS_2), agents=2,
+                      panels=PANELS_2)
     for li, (name, lam) in enumerate(PANELS_2):
         cell = jax.tree.map(lambda x: x[0, li, 0, 0], res2.trace)
         emit(name, lam, 2, cell, res2.j_final[0, li, 0, 0], us2)
 
-    res10, us10 = sweep((1e-2,), agents=10)
+    res10, us10 = sweep((1e-2,), agents=10,
+                        panels=(("right_10agents", 1e-2),))
     emit("right_10agents", 1e-2, 10,
          jax.tree.map(lambda x: x[0, 0, 0, 0], res10.trace),
          res10.j_final[0, 0, 0, 0], us10)

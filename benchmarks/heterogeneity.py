@@ -1,0 +1,133 @@
+"""Heterogeneity study over garnet fleets (EXPERIMENTS.md §Heterogeneity).
+
+The event-triggered scheme earns its keep when agents are NOT identical
+(paper §V; Qi et al. 2108.11887 and Khodadadian et al. 2206.10185 both
+name agent/environment heterogeneity as federated RL's open axis).  This
+study sweeps a ≥64-instance garnet family under ≥2 *fleet classes* —
+
+* ``homogeneous`` — every instance runs the same clean uniform-visit
+  fleet (the control);
+* ``mixed``       — half of each instance's fleet is junk: visit
+  distribution collapsed onto an instance-specific random state with
+  instance-specific target noise (``garnet_fleet_sets(num_junk=m/2)``) —
+  the ZIPPED per-env fleet axis (``run_sweep(fleet_sets=...)``,
+  DESIGN.md §2), still one jitted call per class —
+
+and reports the λ-frontier per class: communication rate vs final J
+(envs and seeds averaged) plus the J spread across the family, with
+``best_lambda`` budget answers per (class, mode).  Both class sweeps go
+through ``sweep_or_load``, so results persist to a ``SweepStore``
+(``experiments/bench/heterogeneity/store`` by default — the store-backed
+artifact) tagged ``figure=heterogeneity``, distinguished by
+``SweepSpec.tag`` (same grid, different fleets: without the tag their
+store entries would collide on one spec hash).  The report pipeline
+(DESIGN.md §9) renders the cross-class frontier from that store with
+zero device computation — ``run.py --from-store`` replays it any time.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import EXP_DIR
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import family_sampler_fn, garnet_env_family, garnet_fleet_sets
+from repro.experiments import SweepSpec, SweepStore, sweep_or_load
+from repro.experiments import query as query_lib
+from repro.experiments.report import generate_report, render_heterogeneity
+
+EPS = 0.4
+RHO = 0.999
+DEFAULT_STORE = os.path.join(EXP_DIR, "heterogeneity", "store")
+COMM_BUDGET = 0.5
+
+
+def _scale(smoke: bool) -> dict:
+    if smoke:
+        return dict(envs=8, states=10, agents=2, iters=20, samples=8,
+                    lambdas=(1e-3, 1e-1), seeds=(0,))
+    return dict(envs=64, states=20, agents=4, iters=150, samples=10,
+                lambdas=tuple(np.logspace(-4, -1, 4)), seeds=(0, 1))
+
+
+def run(smoke: bool = False, store=None) -> list[dict]:
+    cfg = _scale(smoke)
+    tmp = None
+    if store is None:
+        # smoke runs must not touch the committed real-scale store
+        if smoke:
+            tmp = tempfile.mkdtemp(prefix="heterogeneity_store_")
+            store = os.path.join(tmp, "store")
+        else:
+            store = DEFAULT_STORE
+    store = store if isinstance(store, SweepStore) else SweepStore(store)
+    try:
+        return _run(smoke, cfg, store)
+    finally:
+        if tmp is not None:
+            import shutil
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _run(smoke: bool, cfg: dict, store: SweepStore) -> list[dict]:
+
+    envs, fam = garnet_env_family(cfg["envs"], num_states=cfg["states"])
+    w0 = jnp.zeros(cfg["states"])
+    sampler = ParamSampler(fn=family_sampler_fn(cfg["samples"]), params=None)
+    classes = (("homogeneous", 0), ("mixed", cfg["agents"] // 2))
+
+    rows, entries, timing = [], [], {}
+    for cls, num_junk in classes:
+        fleets = garnet_fleet_sets(envs, w0, cfg["agents"],
+                                   num_junk=num_junk)
+        spec = SweepSpec(
+            modes=("theoretical", "practical"), lambdas=cfg["lambdas"],
+            seeds=cfg["seeds"], rhos=(RHO,), eps=EPS,
+            num_iterations=cfg["iters"], num_agents=cfg["agents"],
+            trace="summary", tag=f"het-{cls}")
+        t0 = time.perf_counter()
+        res = sweep_or_load(store, spec, sampler, w0, env_sets=fam,
+                            fleet_sets=fleets,
+                            extra={"figure": "heterogeneity",
+                                   "fleet_class": cls,
+                                   "num_junk": num_junk})
+        jax.block_until_ready(res.comm_rate)
+        runs = int(np.prod(np.asarray(res.comm_rate).shape))
+        timing[cls] = (time.perf_counter() - t0) * 1e6 / runs
+        entries.append(store.get(spec))
+
+    # figure rows from the SAME renderer the report pipeline uses — the
+    # benchmark JSON and the regenerated report cannot drift apart
+    for row in render_heterogeneity(entries)["rows"]:
+        row["us_per_call"] = timing[row["fleet_class"]]
+        rows.append(row)
+
+    # budget answers per (class, mode): which λ meets the comm budget and
+    # at what J — the deployment question, asked of the store
+    for e in entries:
+        cls = e.extra["fleet_class"]
+        for mode in e.modes:
+            curve = query_lib.tradeoff_curve(e, mode=mode)
+            best = query_lib.best_lambda(curve, COMM_BUDGET)
+            rows.append(dict(
+                bench="heterogeneity", fleet_class=cls, mode=mode,
+                query=f"best_lambda@{COMM_BUDGET}", lam=best["lam"],
+                comm_rate=best["comm_rate"], J_final=best.get("J"),
+                feasible=best["feasible"], us_per_call=timing[cls]))
+
+    # regenerate the report artifacts next to the store (the jax-free
+    # path is subprocess-asserted by benchmarks/report_regen.py)
+    out = os.path.join(os.path.dirname(store.root), "report")
+    index = generate_report(store, out)
+    rows.append(dict(bench="heterogeneity", suite="report",
+                     env_instances=cfg["envs"],
+                     fleet_classes=[c for c, _ in classes],
+                     store=store.root, report_dir=out,
+                     artifacts=len(index["artifacts"]), us_per_call=0.0))
+    return rows

@@ -1,0 +1,131 @@
+"""Report-regeneration benchmark: cold ``SweepStore`` → every figure
+artifact, with jax never imported (DESIGN.md §9).
+
+The regeneration itself runs in a SUBPROCESS (the ``serve_sweeps``
+pattern) that asserts ``jax`` never enters ``sys.modules`` — the
+acceptance gate for the store-backed report pipeline: figure JSONs and
+SVG charts are recomputed from arrays already on disk, zero device
+computation.  The regeneration runs twice into separate directories and
+the outputs are compared byte for byte, so nondeterminism in the
+renderer fails the benchmark, not a downstream diff.
+
+Store resolution: explicit ``store=`` (``run.py --from-store``), else
+``$REPRO_STORE_DIR/store`` (the CI resume-kill job's artifact), else the
+committed heterogeneity store (non-smoke), else a throwaway temp store
+populated with a small fig2-style sweep + a two-class garnet
+heterogeneity study so every renderer family is exercised.  A rendered
+copy is published (to ``$REPRO_STORE_DIR/report`` or
+``experiments/bench/report``) only when the store is a persistent one —
+temp-store artifacts are smoke-scale and never land under
+``experiments/bench/`` (the harness rule ``run.py`` documents).
+"""
+
+from __future__ import annotations
+
+import filecmp
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+from benchmarks.common import EXP_DIR
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_REGEN_CODE = r"""
+import json, sys
+from repro.experiments.report import generate_report
+from repro.experiments.store import SweepStore
+store_root, out_dir = sys.argv[1], sys.argv[2]
+index = generate_report(SweepStore(store_root), out_dir)
+assert "jax" not in sys.modules, "jax leaked into the report path"
+assert index["jax_loaded"] is False
+print(json.dumps(index))
+"""
+
+
+def _populate(store_root: str) -> None:
+    """Seed an empty store with one entry per renderer family (jax side —
+    the regeneration below still runs device-free)."""
+    from benchmarks import fig2_grid_tradeoff, heterogeneity
+    fig2_grid_tradeoff.run(smoke=True, store=store_root)
+    heterogeneity.run(smoke=True, store=store_root)
+
+
+def _regen(store_root: str, out_dir: str) -> dict:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-c", _REGEN_CODE, store_root, out_dir],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=600)
+    if r.returncode != 0:
+        raise RuntimeError(f"report regeneration failed: {r.stderr[-800:]}")
+    return json.loads(r.stdout)
+
+
+def _identical_trees(a: str, b: str) -> bool:
+    fa, fb = sorted(os.listdir(a)), sorted(os.listdir(b))
+    if fa != fb:
+        return False
+    match, mismatch, errors = filecmp.cmpfiles(a, b, fa, shallow=False)
+    return not mismatch and not errors
+
+
+def run(smoke: bool = False, store=None) -> list[dict]:
+    ci_root = os.environ.get("REPRO_STORE_DIR")
+    het_store = os.path.join(EXP_DIR, "heterogeneity", "store")
+    if store is None and ci_root is not None:
+        store = os.path.join(ci_root, "store")
+    if store is None and not smoke and os.path.isdir(het_store):
+        store = het_store                 # the committed real-scale store
+    tmp = None
+    if store is None:
+        tmp = tempfile.mkdtemp(prefix="report_regen_")
+        store = os.path.join(tmp, "store")
+    store = os.fspath(getattr(store, "root", store))
+    if not os.path.isdir(store) or not os.listdir(store):
+        _populate(store)
+
+    try:
+        with tempfile.TemporaryDirectory() as scratch:
+            out_a = os.path.join(scratch, "report_a")
+            out_b = os.path.join(scratch, "report_b")
+            t0 = time.perf_counter()
+            index = _regen(store, out_a)
+            regen_s = time.perf_counter() - t0
+            _regen(store, out_b)
+            deterministic = _identical_trees(out_a, out_b)
+
+            # keep one rendered copy — ONLY for persistent stores: the CI
+            # artifact dir, or the repo report dir on a real non-smoke
+            # store.  Temp-store output is smoke-scale and stays scratch.
+            final = None
+            if ci_root is not None and store == os.path.join(ci_root,
+                                                             "store"):
+                final = os.path.join(ci_root, "report")
+            elif not smoke and tmp is None:
+                final = os.path.join(EXP_DIR, "report")
+            if final is not None:
+                shutil.rmtree(final, ignore_errors=True)
+                shutil.copytree(out_a, final)
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    n_art = len(index["artifacts"])
+    rows = [dict(bench="report_regen",
+                 us_per_call=regen_s * 1e6 / max(n_art, 1),
+                 store_entries=index["entries"], artifacts=n_art,
+                 figures=sorted({a["figure"] for a in index["artifacts"]}),
+                 jax_loaded=index["jax_loaded"],
+                 byte_deterministic=deterministic,
+                 regen_wall_s=regen_s)]
+    if not deterministic:
+        rows[0]["error"] = "report regeneration is not byte-deterministic"
+    if index["jax_loaded"]:
+        rows[0]["error"] = "jax leaked into the report path"
+    return rows

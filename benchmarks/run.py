@@ -11,6 +11,16 @@ writes full JSON to experiments/bench/.
 ``--smoke`` shrinks every suite's grid to seconds-scale (tiny grids, few
 iterations) so the whole benchmark set runs inside CI; smoke results are
 NOT written to experiments/bench/ (they would overwrite the real numbers).
+
+Store-backed figure regeneration (DESIGN.md §9):
+
+  --store ROOT       figure suites (fig2/fig3/theorem1/comm_savings/
+                     heterogeneity) persist their sweeps to this
+                     ``SweepStore`` via ``sweep_or_load`` — a warm re-run
+                     loads instead of re-sweeping
+  --from-store ROOT  skip the device entirely: regenerate every figure
+                     artifact the store backs through the jax-free report
+                     pipeline (``benchmarks.report_regen``)
 """
 
 from __future__ import annotations
@@ -24,7 +34,9 @@ from benchmarks import (
     comm_savings,
     fig2_grid_tradeoff,
     fig3_continuous,
+    heterogeneity,
     kernels_bench,
+    report_regen,
     resume_query,
     roofline,
     sweep_scaling,
@@ -40,14 +52,21 @@ SUITES = {
     "sweep_scaling": sweep_scaling,
     "comm_savings": comm_savings,
     "resume_query": resume_query,
+    "heterogeneity": heterogeneity,
+    "report_regen": report_regen,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
 
+# suites that accept store= (persist results / reuse cached columns)
+STORE_AWARE = {"fig2", "fig3", "theorem1", "comm_savings", "heterogeneity",
+               "report_regen"}
+
 
 def _derived(row: dict) -> str:
     for key in ("J_final", "rhs_bound", "overhead_pct", "savings_pct",
-                "gflop_per_call", "dominant"):
+                "gflop_per_call", "dominant", "byte_deterministic",
+                "artifacts"):
         if key in row:
             return f"{key}={row[key]}"
     return ""
@@ -58,15 +77,31 @@ def main() -> None:
     ap.add_argument("--only", choices=tuple(SUITES), default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale grids for CI; skips JSON output")
+    ap.add_argument("--store", default=None, metavar="ROOT",
+                    help="SweepStore root: figure suites persist/reuse "
+                         "their sweeps there (sweep_or_load)")
+    ap.add_argument("--from-store", default=None, metavar="ROOT",
+                    dest="from_store",
+                    help="regenerate figure artifacts from this SweepStore "
+                         "via the jax-free report pipeline; no device work")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(SUITES)
+    if args.from_store:
+        if args.only not in (None, "report_regen"):
+            ap.error("--from-store regenerates through the report pipeline; "
+                     "combine it only with --only report_regen")
+        names = ["report_regen"]
+    else:
+        names = [args.only] if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         t0 = time.time()
+        kwargs = {}
+        if name in STORE_AWARE and (args.store or args.from_store):
+            kwargs["store"] = args.from_store or args.store
         try:
-            rows = SUITES[name].run(smoke=args.smoke)
+            rows = SUITES[name].run(smoke=args.smoke, **kwargs)
         except Exception as e:  # keep the harness going; report at the end
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
             failures += 1
@@ -83,9 +118,10 @@ def main() -> None:
                 failures += 1
                 continue
             label = row.get("bench", name)
-            sub = [str(row[k]) for k in ("regime", "mode", "panel", "lam",
-                                         "arch", "shape", "mesh", "suite",
-                                         "devices", "env_instances")
+            sub = [str(row[k]) for k in ("regime", "fleet_class", "mode",
+                                         "query", "panel", "lam", "arch",
+                                         "shape", "mesh", "suite", "devices",
+                                         "env_instances")
                    if k in row]
             full = label + ("[" + "/".join(sub) + "]" if sub else "")
             print(f"{full},{row.get('us_per_call', 0):.1f},{_derived(row)}",

@@ -5,6 +5,12 @@ Both lambda and rho are trace-time data in the sweep engine (they only enter
 through the threshold-schedule array), so the whole grid — including the two
 rho settings — is ONE jitted ``run_sweep`` call; the gradient-covariance
 estimate for Tr(Phi G) is a second small vmapped program.
+
+With ``store=`` (``run.py --store``) the sweep AND the estimated constants
+(Tr(Phi G), J(w0), J(w*)) persist to the ``SweepStore`` tagged
+``figure=theorem1``, so the jax-free report pipeline (DESIGN.md §9) can
+re-evaluate both sides of the bound from a cold store; a warm re-run
+reuses the cached constants and computes nothing.
 """
 
 from __future__ import annotations
@@ -19,7 +25,12 @@ from repro.core.algorithm1 import ParamSampler
 from repro.core.trigger import theorem1_bound
 from repro.core.vfa import stochastic_gradient
 from repro.envs import GridWorld
-from repro.experiments import SweepSpec, run_sweep
+from repro.experiments import SweepSpec, SweepStore, run_sweep
+from repro.experiments.runtime import (
+    arrays_to_result,
+    inputs_digest,
+    store_result,
+)
 
 EPS = 0.5
 N = 150
@@ -28,7 +39,7 @@ SEEDS = 6
 LAMBDAS = (1e-4, 1e-3, 1e-2, 1e-1)
 
 
-def run(smoke: bool = False) -> list[dict]:
+def run(smoke: bool = False, store=None) -> list[dict]:
     n_iter, seeds, lambdas, draws = ((30, 2, (1e-3, 1e-1), 60) if smoke
                                      else (N, SEEDS, LAMBDAS, 300))
     gw = GridWorld()
@@ -39,25 +50,54 @@ def run(smoke: bool = False) -> list[dict]:
     rho_min = prob.min_rho(EPS)
     rhos = (rho_min * 1.0001, min(rho_min * 1.05, 0.999))
 
-    # empirical Tr(Phi G) at w0 (Theorem 1 assumes constant covariance) —
-    # one vmapped program instead of 300 sequential sampler calls
-    keys = jnp.stack([jax.random.key(10_000 + s) for s in range(draws)])
-    grads = jax.vmap(
-        lambda k: stochastic_gradient(w0, *fn(params1, k)))(keys)
-    G = np.cov(np.asarray(grads).T)
-    tr_phi_g = float(np.trace(np.asarray(prob.second_moment()) @ G))
-
+    # store-backed runs stream summaries (the bound only needs comm/J);
+    # the bare benchmark keeps the full-trace default
     spec = SweepSpec(modes=("theoretical",), lambdas=lambdas,
                      seeds=tuple(range(seeds)), rhos=rhos, eps=EPS,
-                     num_iterations=n_iter, num_agents=2)
+                     num_iterations=n_iter, num_agents=2, tag="theorem1",
+                     trace="summary" if store is not None else "full")
     sampler = ParamSampler(fn=fn, params=gw.agent_params(w0, 2))
+    if store is not None and not isinstance(store, SweepStore):
+        store = SweepStore(store)
+
     t0 = time.perf_counter()
-    res = run_sweep(spec, sampler, w0, problem=prob)
+    entry = None
+    if store is not None and store.has(spec):
+        # warm store — mirror sweep_or_load's contract: an entry under
+        # this hash computed from different inputs is a different
+        # experiment, refuse it rather than trust stale constants
+        entry = store.get(spec)
+        stored = entry.extra.get("inputs_digest")
+        digest = inputs_digest(sampler, w0, problem=prob)
+        if stored is not None and stored != digest:
+            raise ValueError(
+                f"store entry {entry.spec_hash} was computed from "
+                "different inputs — give this sweep its own SweepSpec.tag")
+    if entry is not None:
+        res = arrays_to_result(entry)
+    else:
+        res = run_sweep(spec, sampler, w0, problem=prob)
+    if entry is not None and "trace_phi_g" in entry.extra:
+        tr_phi_g = float(entry.extra["trace_phi_g"])
+    else:
+        # empirical Tr(Phi G) at w0 (Theorem 1 assumes constant
+        # covariance) — one vmapped program, not 300 sequential calls
+        keys = jnp.stack([jax.random.key(10_000 + s) for s in range(draws)])
+        grads = jax.vmap(
+            lambda k: stochastic_gradient(w0, *fn(params1, k)))(keys)
+        G = np.cov(np.asarray(grads).T)
+        tr_phi_g = float(np.trace(np.asarray(prob.second_moment()) @ G))
     jax.block_until_ready(res.comm_rate)
     us = (time.perf_counter() - t0) * 1e6 / int(np.prod(res.comm_rate.shape))
 
     j0 = float(prob.objective(w0))
     jstar = float(prob.objective(prob.optimum()))
+    if store is not None and not store.has(spec):
+        store_result(
+            store, spec, res,
+            inputs_digest_=inputs_digest(sampler, w0, problem=prob),
+            extra={"figure": "theorem1", "trace_phi_g": tr_phi_g,
+                   "j_w0": j0, "j_wstar": jstar})
     rows = []
     for li, lam in enumerate(lambdas):
         for ri, rho in enumerate(rhos):

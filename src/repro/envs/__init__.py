@@ -14,7 +14,13 @@ from repro.envs.base import (  # noqa: F401
     family_sampler_fn,
     stack_agent_params,
     stack_env_family,
+    stack_env_fleets,
 )
-from repro.envs.garnet import GarnetMDP, garnet_env_family, garnet_family  # noqa: F401
+from repro.envs.garnet import (  # noqa: F401
+    GarnetMDP,
+    garnet_env_family,
+    garnet_family,
+    garnet_fleet_sets,
+)
 from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.envs.linear_system import LinearSystem  # noqa: F401

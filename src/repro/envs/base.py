@@ -1,4 +1,4 @@
-"""Common environment protocol for the batched sweep engine (DESIGN.md §2).
+"""Common environment protocol for the batched sweep engine (DESIGN.md §5).
 
 Every env exposes the same three capabilities the experiment stack needs:
 
@@ -70,6 +70,22 @@ def stack_agent_params(*rows) -> object:
     heterogeneous regime.
     """
     return jax.tree.map(lambda *leaves: jax.numpy.stack(leaves), *rows)
+
+
+def stack_env_fleets(fleets) -> object:
+    """Stack one agent fleet PER ENV INSTANCE into the zipped fleet axis.
+
+    ``fleets`` is a sequence of E per-env agent-param pytrees (each with
+    leaves (m, ...), e.g. from ``stack_agent_params``); the result's leaves
+    are (E, m, ...) — the ``fleet_sets=`` input of ``run_sweep``, gathered
+    by the *same* env index as ``env_sets`` inside the jit (zip semantics:
+    no extra grid axis).  All fleets must share a treedef and a fleet size
+    m (rectangular across the family; vary composition, not cardinality).
+    """
+    fleets = list(fleets)
+    if not fleets:
+        raise ValueError("need at least one per-env fleet to stack")
+    return jax.tree.map(lambda *leaves: jax.numpy.stack(leaves), *fleets)
 
 
 def as_param_sampler(env: Env, v_current, num_agents: int,

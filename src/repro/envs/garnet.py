@@ -95,6 +95,42 @@ def garnet_family(num_instances: int, **kwargs) -> tuple[GarnetMDP, ...]:
     return tuple(GarnetMDP(seed=s, **kwargs) for s in range(num_instances))
 
 
+def garnet_fleet_sets(envs, v_current, num_agents: int, num_junk: int = 0,
+                      skew: float = 30.0, noise_scale: float = 5.0,
+                      seed: int = 0):
+    """One agent fleet PER garnet instance — ``run_sweep(fleet_sets=...)``.
+
+    The zipped heterogeneity axis (DESIGN.md §2): instance e's fleet has
+    ``num_junk`` junk agents whose visit distribution collapses onto an
+    *instance-specific* random state (logits skewed by ``skew``) with an
+    instance-specific target-noise scale drawn in
+    ``[0.5, 1.5] * noise_scale``; the rest are clean uniform-visit agents.
+    Draws are seeded per ``(seed, instance)``, so fleets are reproducible
+    data, never code.  ``num_junk=0`` stacks identical clean fleets — the
+    homogeneous control class of a heterogeneity study.  Returns a pytree
+    with leaves ``(E, m, ...)``; fleet size is rectangular across the
+    family (vary composition per env, not cardinality).
+    """
+    if not 0 <= num_junk <= num_agents:
+        raise ValueError(f"num_junk must be in [0, {num_agents}], "
+                         f"got {num_junk}")
+    from repro.envs.base import stack_agent_params, stack_env_fleets
+
+    fleets = []
+    for e, env in enumerate(envs):
+        rng = np.random.default_rng((seed, e))
+        rows = [env.agent_param_row(v_current)
+                for _ in range(num_agents - num_junk)]
+        for _ in range(num_junk):
+            logits = np.zeros(env.num_states, np.float32)
+            logits[int(rng.integers(env.num_states))] = skew
+            rows.append(env.agent_param_row(
+                v_current, visit_logits=jnp.asarray(logits),
+                noise_scale=float(noise_scale * (0.5 + rng.random()))))
+        fleets.append(stack_agent_params(*rows))
+    return stack_env_fleets(fleets)
+
+
 def garnet_env_family(num_instances: int, v_current=None,
                       with_terms: bool = True, **kwargs):
     """The family stacked as a sweep-engine env grid axis.

@@ -21,10 +21,12 @@ _EXPORTS = {
     "run_sweep": "repro.experiments.sweep",
     "tradeoff_rows": "repro.experiments.sweep",
     # resumable runtime (jax)
+    "gc_finished": "repro.experiments.runtime",
     "run_sweep_extend": "repro.experiments.runtime",
     "run_sweep_resumable": "repro.experiments.runtime",
     "store_result": "repro.experiments.runtime",
-    # summary store + queries (numpy only)
+    "sweep_or_load": "repro.experiments.runtime",
+    # summary store + queries + report regeneration (numpy only)
     "SweepStore": "repro.experiments.store",
     "StoredSweep": "repro.experiments.store",
     "family_hash": "repro.experiments.store",
@@ -33,6 +35,8 @@ _EXPORTS = {
     "pareto_front": "repro.experiments.query",
     "tradeoff_at": "repro.experiments.query",
     "tradeoff_curve": "repro.experiments.query",
+    "generate_report": "repro.experiments.report",
+    "render_entry": "repro.experiments.report",
 }
 
 

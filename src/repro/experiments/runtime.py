@@ -25,7 +25,10 @@ service (``repro.experiments.query`` / ``serve_sweeps``) answers
 trigger-threshold questions from.  ``run_sweep_extend`` closes the loop:
 asked for a λ grid that is partially cached, it computes only the
 missing λ columns, merges them with the store's family entries, and
-persists the union.
+persists the union; ``sweep_or_load`` is the store-first entry point the
+figure benchmarks build on (DESIGN.md §9).  Finished chunk dirs are
+recovery state — ``gc_finished`` reclaims them once the summary record
+is committed (refusing while the ``INCOMPLETE`` resume lock exists).
 """
 
 from __future__ import annotations
@@ -58,6 +61,7 @@ from repro.experiments.sweep import (
 
 _CHUNK_RE = re.compile(r"chunk_(\d{6})\.npz$")
 _MANIFEST = "manifest.json"
+_INCOMPLETE = "INCOMPLETE"
 _FORMAT_VERSION = 1
 
 
@@ -76,24 +80,25 @@ def _tree_digest(h, tree) -> None:
 
 
 def inputs_digest(sampler, w0, problem=None, param_sets=None,
-                  env_sets=None) -> str:
+                  env_sets=None, fleet_sets=None) -> str:
     """Content digest of everything *outside* the spec that shapes results.
 
     The spec hash alone cannot tell two sweeps apart when they differ in
-    ``w0``, the fleet's stacked sampler params, the exact problem, or the
-    env family — this digest rides in every chunk checkpoint and store
-    entry so a resume (or a merge) against the wrong inputs raises instead
-    of silently mixing runs.  The sampler *function* is assumed pure and
-    identified by the arrays it consumes (the repo-wide convention).
+    ``w0``, the fleet's stacked sampler params, the exact problem, the
+    env family, or the zipped per-env fleet stacks — this digest rides in
+    every chunk checkpoint and store entry so a resume (or a merge)
+    against the wrong inputs raises instead of silently mixing runs.  The
+    sampler *function* is assumed pure and identified by the arrays it
+    consumes (the repo-wide convention).
     """
     h = hashlib.sha256()
     terms = (problem if isinstance(problem, ProblemTerms)
              else ProblemTerms.from_problem(problem) if problem is not None
              else None)
     _tree_digest(h, jnp.asarray(w0))
-    # with param_sets the engine ignores sampler.params entirely, so two
-    # samplers differing only there must digest identically
-    _tree_digest(h, None if param_sets is not None
+    # with param_sets or fleet_sets the engine ignores sampler.params
+    # entirely, so two samplers differing only there must digest identically
+    _tree_digest(h, None if (param_sets is not None or fleet_sets is not None)
                  else getattr(sampler, "params", None))
     _tree_digest(h, terms)
     _tree_digest(h, param_sets)
@@ -102,6 +107,7 @@ def inputs_digest(sampler, w0, problem=None, param_sets=None,
         _tree_digest(h, getattr(env_sets, "terms", None))
     else:
         _tree_digest(h, None)
+    _tree_digest(h, fleet_sets)
     return h.hexdigest()
 
 
@@ -146,10 +152,30 @@ def _write_manifest(store_dir: str, meta: dict) -> None:
                 f"{store_dir} already holds chunks of a different sweep "
                 f"(exec_hash {prev.get('exec_hash')!r} != "
                 f"{meta['exec_hash']!r}); use a fresh store_dir per sweep")
-        return
+        if meta.get("summary_store") in (None, prev.get("summary_store")):
+            return
+        # resume added/changed the summary store: record it for gc_finished
+        meta = {**prev, "summary_store": meta["summary_store"]}
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(meta, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _note_summary_store(store_dir: str, root: str) -> None:
+    """Record (post hoc) which summary store holds this sweep's final
+    record — what ``gc_finished`` verifies against by default."""
+    path = os.path.join(store_dir, _MANIFEST)
+    if not os.path.isfile(path):
+        return
+    with open(path) as f:
+        manifest = json.load(f)
+    if manifest.get("summary_store") == root:
+        return
+    manifest["summary_store"] = root
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
     os.replace(tmp, path)
 
 
@@ -181,6 +207,7 @@ def run_sweep_resumable(
     store_dir: str,
     param_sets=None,
     env_sets=None,
+    fleet_sets=None,
     mesh=None,
     summary_store: Optional[Union[str, store_lib.SweepStore]] = None,
     on_chunk=None,
@@ -206,15 +233,23 @@ def run_sweep_resumable(
     Segment granularity is ``spec.chunk_size`` runs per device
     (``SweepPlan.segment_runs``); with ``chunk_size=None`` the whole grid
     is one segment — it still checkpoints, but cannot resume mid-grid.
+
+    While the sweep runs (and after a crash) the dir carries an
+    ``INCOMPLETE`` marker, removed only on successful completion — the
+    resume lock ``gc_finished`` refuses to collect past.
     """
     plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
-                      env_sets=env_sets, mesh=mesh)
+                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh)
     sh = store_lib.spec_hash(spec)
     in_digest = inputs_digest(sampler, w0, problem=problem,
-                              param_sets=param_sets, env_sets=env_sets)
+                              param_sets=param_sets, env_sets=env_sets,
+                              fleet_sets=fleet_sets)
     exec_hash = _exec_hash(sh, in_digest, plan)
     segments = plan.segments()
 
+    if summary_store is not None and not isinstance(summary_store,
+                                                    store_lib.SweepStore):
+        summary_store = store_lib.SweepStore(summary_store)
     os.makedirs(store_dir, exist_ok=True)
     _write_manifest(store_dir, {
         "version": _FORMAT_VERSION,
@@ -227,7 +262,13 @@ def run_sweep_resumable(
         "num_segments": len(segments),
         "segment_runs": plan.segment_runs,
         "padded_runs": plan.padded_runs,
+        # retention/GC: lets gc_finished verify the final merged record
+        # without being handed the store again
+        "summary_store": (summary_store.root
+                          if summary_store is not None else None),
     })
+    with open(os.path.join(store_dir, _INCOMPLETE), "w") as f:
+        f.write(exec_hash)
     done = completed_chunks(store_dir, exec_hash)
     template = _segment_template(plan) if done else None
 
@@ -275,10 +316,82 @@ def run_sweep_resumable(
     result = finalize_sweep(plan, flat)
 
     if summary_store is not None:
-        if not isinstance(summary_store, store_lib.SweepStore):
-            summary_store = store_lib.SweepStore(summary_store)
         store_result(summary_store, spec, result, inputs_digest_=in_digest)
+    # every chunk is durable and the summary (if requested) committed:
+    # release the resume lock so gc_finished may collect the chunk dir
+    os.remove(os.path.join(store_dir, _INCOMPLETE))
     return result
+
+
+def gc_finished(store_dir: str,
+                store: Optional[Union[str, store_lib.SweepStore]] = None,
+                ) -> dict:
+    """Retention/GC: delete a *finished* sweep's chunk checkpoints.
+
+    Chunk files are recovery state, not results — once the sweep's final
+    merged record is committed to the summary ``SweepStore`` they only
+    cost disk.  ``gc_finished`` removes them (and the manifest, and the
+    dir when it is then empty) after verifying, in order:
+
+    * no ``INCOMPLETE`` resume lock is present (the sweep is mid-run or
+      crashed; resuming to completion clears it) — else ``RuntimeError``;
+    * the summary store (``store=``, defaulting to the root recorded in
+      the manifest when the sweep ran with ``summary_store=``) holds an
+      entry for the manifest's spec hash with the same inputs digest —
+      else ``LookupError``.
+
+    Idempotent: a second call, or a call on a dir that never existed,
+    returns ``{"collected": False, ...}`` without touching anything.
+    Returns GC stats (files and bytes freed).
+    """
+    manifest_path = os.path.join(store_dir, _MANIFEST)
+    if not os.path.isdir(store_dir) or not os.path.isfile(manifest_path):
+        chunks = [n for n in (os.listdir(store_dir)
+                              if os.path.isdir(store_dir) else [])
+                  if _CHUNK_RE.match(n)]
+        if chunks:
+            raise LookupError(
+                f"{store_dir} holds chunk files but no manifest — not a "
+                "sweep this runtime finished; refusing to delete")
+        return {"collected": False, "files": 0, "bytes": 0,
+                "reason": "nothing to collect"}
+    if os.path.exists(os.path.join(store_dir, _INCOMPLETE)):
+        raise RuntimeError(
+            f"{store_dir} carries the INCOMPLETE resume lock — the sweep "
+            "is running or crashed mid-run; resume it to completion (or "
+            "delete the dir manually) before collecting")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if store is None:
+        store = manifest.get("summary_store")
+        if store is None:
+            raise LookupError(
+                f"{store_dir} ran without summary_store= and no store= was "
+                "passed — cannot verify the final record is committed")
+    if not isinstance(store, store_lib.SweepStore):
+        store = store_lib.SweepStore(store)
+    sh = manifest["spec_hash"]
+    if not store.has(sh):
+        raise LookupError(
+            f"summary store {store.root} has no entry {sh} — the final "
+            "merged record is not committed; refusing to delete chunks")
+    entry_digest = store.get(sh).extra.get("inputs_digest")
+    if entry_digest != manifest["inputs_digest"]:
+        raise LookupError(
+            f"store entry {sh} was computed from different inputs "
+            f"({entry_digest} != {manifest['inputs_digest']}) — refusing "
+            "to treat it as this sweep's final record")
+    files, freed = 0, 0
+    for name in sorted(os.listdir(store_dir)):
+        if _CHUNK_RE.match(name) or name == _MANIFEST:
+            path = os.path.join(store_dir, name)
+            freed += os.path.getsize(path)
+            os.remove(path)
+            files += 1
+    if not os.listdir(store_dir):
+        os.rmdir(store_dir)
+    return {"collected": True, "files": files, "bytes": freed,
+            "spec_hash": sh}
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +470,10 @@ def run_sweep_extend(
     *,
     param_sets=None,
     env_sets=None,
+    fleet_sets=None,
     mesh=None,
     store_dir: Optional[str] = None,
+    extra: Optional[dict] = None,
 ) -> SweepResult:
     """Grid extension: compute only the λ cells the store does not have.
 
@@ -371,27 +486,84 @@ def run_sweep_extend(
     answers directly — deliberate duplication of cached columns, traded
     for hash-addressable results (skip it by querying the family via
     ``store.merged`` instead).  A fully-cached request touches no device.
+
+    ``extra`` key/values land in the persisted entries' metadata (e.g.
+    ``{"figure": "fig2"}`` — what the report pipeline renders by).
     """
     if not isinstance(store, store_lib.SweepStore):
         store = store_lib.SweepStore(store)
     in_digest = inputs_digest(sampler, w0, problem=problem,
-                              param_sets=param_sets, env_sets=env_sets)
+                              param_sets=param_sets, env_sets=env_sets,
+                              fleet_sets=fleet_sets)
     missing = store.missing_lambdas(spec, inputs_digest=in_digest)
     if missing:
         sub = dataclasses.replace(spec, lambdas=tuple(missing))
         if store_dir is not None:
             result = run_sweep_resumable(
                 sub, sampler, w0, problem, store_dir=store_dir,
-                param_sets=param_sets, env_sets=env_sets, mesh=mesh)
+                param_sets=param_sets, env_sets=env_sets,
+                fleet_sets=fleet_sets, mesh=mesh)
         else:
             from repro.experiments.sweep import run_sweep
             result = run_sweep(sub, sampler, w0, problem,
                                param_sets=param_sets, env_sets=env_sets,
-                               mesh=mesh)
-        store_result(store, sub, result, inputs_digest_=in_digest)
+                               fleet_sets=fleet_sets, mesh=mesh)
+        store_result(store, sub, result, inputs_digest_=in_digest,
+                     extra=extra)
+        if store_dir is not None:
+            # the sub-sweep's record is committed (with the figure extras,
+            # which is why run_sweep_resumable does not write it itself):
+            # note the store root so gc_finished can verify unaided
+            _note_summary_store(store_dir, store.root)
     merged = store.merged(spec, inputs_digest=in_digest)
     entry = _select_lambdas(merged, tuple(float(l) for l in spec.lambdas))
+    if extra:
+        entry = dataclasses.replace(entry, extra={**entry.extra, **extra})
     # make the exact requested spec addressable by hash in the store
     if not store.has(entry.spec_hash):
         store.put(entry.spec, entry.arrays, entry.axes, extra=entry.extra)
     return arrays_to_result(entry)
+
+
+def sweep_or_load(
+    store: Union[str, store_lib.SweepStore],
+    spec: SweepSpec,
+    sampler,
+    w0,
+    problem: Optional[Union[vfa_lib.VFAProblem, ProblemTerms]] = None,
+    *,
+    param_sets=None,
+    env_sets=None,
+    fleet_sets=None,
+    mesh=None,
+    store_dir: Optional[str] = None,
+    extra: Optional[dict] = None,
+) -> SweepResult:
+    """Store-first sweep: load when cached, compute only what is missing.
+
+    The figure benchmarks' entry point to store-backed regeneration
+    (EXPERIMENTS.md §Heterogeneity): when ``store`` already holds the
+    exact spec (hash hit, matching inputs digest), the cached entry is
+    returned with ZERO device computation; otherwise the missing λ
+    columns are filled via ``run_sweep_extend`` (which itself reuses any
+    cached family columns) and the finished grid is persisted.  Either
+    way the returned ``SweepResult`` is bitwise the stored entry.
+    """
+    if not isinstance(store, store_lib.SweepStore):
+        store = store_lib.SweepStore(store)
+    if store.has(spec):
+        entry = store.get(spec)
+        in_digest = inputs_digest(sampler, w0, problem=problem,
+                                  param_sets=param_sets, env_sets=env_sets,
+                                  fleet_sets=fleet_sets)
+        stored = entry.extra.get("inputs_digest")
+        if stored is not None and stored != in_digest:
+            raise ValueError(
+                f"store entry {entry.spec_hash} was computed from different "
+                "inputs (w0/sampler/env/fleet digests differ) — same spec, "
+                "different experiment; give this sweep its own SweepSpec.tag")
+        return arrays_to_result(entry)
+    return run_sweep_extend(store, spec, sampler, w0, problem,
+                            param_sets=param_sets, env_sets=env_sets,
+                            fleet_sets=fleet_sets, mesh=mesh,
+                            store_dir=store_dir, extra=extra)

@@ -9,6 +9,9 @@ of the ``SweepSpec``, so that table outlives the job that computed it:
   fields (sorted keys; arrays digested by shape/dtype/bytes).  Execution
   knobs that cannot change results (``chunk_size``) are excluded, so a
   chunked and an unchunked run of the same grid share one store entry.
+  ``SweepSpec.tag`` IS hashed: sweeps whose difference lives in inputs
+  the spec cannot see (e.g. two fleet compositions over one grid) carry
+  distinct tags so they get distinct entries.
 * **family hash** — the spec hash with the λ grid removed: entries with
   equal family hashes (and equal input digests) are the *same experiment
   at different thresholds* and can be merged along the λ axis, which is

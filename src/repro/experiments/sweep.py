@@ -9,7 +9,8 @@ the same compiled program evaluated at many points.  ``run_sweep``:
 
   1. flattens the requested grid (optional env-family axis x optional
      agent-parameter-set axis x modes x lambdas x rhos x seeds) into
-     per-run arrays,
+     per-run arrays — an optional *zipped* per-env fleet stack
+     (``fleet_sets=``) rides the env axis instead of adding one,
   2. executes ONE jitted call — ``vmap`` (default, fastest), ``lax.map``
      (sequential; bit-identical to per-run execution, used by the parity
      tests), or chunked map-over-vmap (``SweepSpec.chunk_size``) for grids
@@ -92,6 +93,11 @@ class SweepSpec:
     batching: str = "vmap"          # 'vmap' | 'map'
     trace: Union[str, TraceSpec] = "full"   # 'full' | 'summary' | TraceSpec
     chunk_size: Optional[int] = None
+    # Experiment label, part of the spec (and store) identity.  Sweeps whose
+    # difference lives in *inputs* the spec cannot see — e.g. two fleet
+    # compositions over the same grid (heterogeneity studies) — must carry
+    # distinct tags so their SweepStore entries do not collide on one hash.
+    tag: Optional[str] = None
 
     def __post_init__(self):
         for m in self.modes:
@@ -165,19 +171,24 @@ class _RunInputs(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("sampler_fn", "eps", "num_agents", "gain_backend",
-                     "batching", "share_params", "per_run_terms", "trace",
-                     "chunk_size", "mesh"),
+                     "batching", "share_params", "fleet_by_env",
+                     "per_run_terms", "trace", "chunk_size", "mesh"),
 )
 def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
                 shared_terms, *, sampler_fn, eps, num_agents, gain_backend,
-                batching, share_params, per_run_terms, trace, chunk_size,
-                mesh):
+                batching, share_params, fleet_by_env, per_run_terms, trace,
+                chunk_size, mesh):
     def block(per_run, w0, shared_params, param_stack, env_stack, env_terms,
               shared_terms):
         """Execute a (shard-local) block of runs; leading axis = runs."""
 
         def one(run: _RunInputs):
+            # fleet_by_env: the param stack is ZIPPED with the env axis —
+            # the same env index gathers both the MDP and its fleet, so a
+            # per-env fleet never becomes a cross-product grid axis.
             params = (shared_params if share_params else
+                      jax.tree.map(lambda x: x[run.env_idx], param_stack)
+                      if fleet_by_env else
                       jax.tree.map(lambda x: x[run.set_idx], param_stack))
             terms = (jax.tree.map(lambda x: x[run.env_idx], env_terms)
                      if per_run_terms else shared_terms)
@@ -245,6 +256,7 @@ class SweepPlan(NamedTuple):
     num_runs: int                # G: real grid cells
     padded_runs: int             # Gp: multiple of device count x chunk size
     env_indices: Optional[np.ndarray]   # (G,) env index per run, unpadded
+    fleet_by_env: bool = False   # param_stack is zipped with the env axis
 
     @property
     def num_devices(self) -> int:
@@ -274,6 +286,7 @@ def plan_sweep(
     *,
     param_sets: Optional[object] = None,
     env_sets: Optional[object] = None,
+    fleet_sets: Optional[object] = None,
     mesh=None,
 ) -> SweepPlan:
     """Flatten the requested grid into a ``SweepPlan`` (see ``run_sweep``
@@ -285,6 +298,15 @@ def plan_sweep(
     if "theoretical" in spec.modes and terms is None and env_terms is None:
         raise ValueError("theoretical mode needs the exact problem "
                          "(problem= or env_sets with terms)")
+    if fleet_sets is not None:
+        if env_sets is None:
+            raise ValueError("fleet_sets zips one agent fleet per env "
+                             "instance — it requires env_sets")
+        if param_sets is not None:
+            raise ValueError(
+                "fleet_sets and param_sets cannot combine: the fleet stack "
+                "is already selected by the env index (zip semantics); use "
+                "one env family per param regime instead")
 
     M, L, R, S = spec.grid_shape
     share_params = param_sets is None
@@ -294,6 +316,17 @@ def plan_sweep(
         E = int(jax.tree.leaves(env_sets.params)[0].shape[0])
         gs += (E,)
         axes += ("env_set",)
+        if fleet_sets is not None:
+            for leaf in jax.tree.leaves(fleet_sets):
+                if leaf.shape[0] != E:
+                    raise ValueError(
+                        f"fleet_sets leaves must stack one fleet per env "
+                        f"instance: leading axis {leaf.shape[0]} != {E} envs")
+                if leaf.shape[1] != spec.num_agents:
+                    raise ValueError(
+                        f"fleet_sets fleets carry {leaf.shape[1]} agents, "
+                        f"spec.num_agents is {spec.num_agents} (fleets must "
+                        "be rectangular across the family)")
     if not share_params:
         P = int(jax.tree.leaves(param_sets)[0].shape[0])
         gs += (P,)
@@ -324,7 +357,9 @@ def plan_sweep(
     keys = jnp.stack([jax.random.key(int(s)) for s in spec.seeds])[si]
 
     shared_params = param_stack = None
-    if share_params:
+    if fleet_sets is not None:
+        param_stack = jax.tree.map(jnp.asarray, fleet_sets)
+    elif share_params:
         shared_params = sampler.params
     else:
         param_stack = jax.tree.map(jnp.asarray, param_sets)
@@ -348,7 +383,8 @@ def plan_sweep(
         env_terms=env_terms if env_terms is not None else None,
         shared_terms=None if env_terms is not None else terms,
         sampler_fn=sampler.fn, mesh=mesh, gs=gs, axes=axes,
-        num_runs=G, padded_runs=Gp, env_indices=ei)
+        num_runs=G, padded_runs=Gp, env_indices=ei,
+        fleet_by_env=fleet_sets is not None)
 
 
 def _exec_args(plan: SweepPlan, per_run: _RunInputs,
@@ -360,6 +396,7 @@ def _exec_args(plan: SweepPlan, per_run: _RunInputs,
         sampler_fn=plan.sampler_fn, eps=spec.eps,
         num_agents=spec.num_agents, gain_backend=spec.gain_backend,
         batching=spec.batching, share_params=plan.param_stack is None,
+        fleet_by_env=plan.fleet_by_env,
         per_run_terms=plan.env_terms is not None,
         trace=resolve_trace(spec.trace), chunk_size=chunk_size,
         mesh=plan.mesh)
@@ -434,6 +471,7 @@ def run_sweep(
     *,
     param_sets: Optional[object] = None,
     env_sets: Optional[object] = None,
+    fleet_sets: Optional[object] = None,
     mesh=None,
 ) -> SweepResult:
     """Execute the whole grid as one jitted call.
@@ -454,6 +492,14 @@ def run_sweep(
                   ``.terms`` — stacked ``ProblemTerms`` or None): adds the
                   outermost ``"env_set"`` axis, so hundreds of random MDPs
                   sweep in the same jitted call.
+      fleet_sets: optional pytree of *per-env agent fleets*, leaves
+                  (E, m, ...) ZIPPED with the env axis (requires
+                  ``env_sets``; exclusive with ``param_sets``): env instance
+                  e runs with fleet row e — per-env sampler skew, noise
+                  scales, etc. — gathered by the same env index inside the
+                  jit.  No grid axis is added, and ``sampler.params`` is
+                  ignored.  Build stacks with
+                  ``repro.envs.base.stack_env_fleets``.
       mesh:       optional 1-axis device mesh (``launch.mesh.make_sweep_mesh``):
                   the flattened run axis is sharded over its devices via
                   ``shard_map``, padded to a multiple of the device count
@@ -469,7 +515,7 @@ def run_sweep(
     ``SweepResult`` after a crash.
     """
     plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
-                      env_sets=env_sets, mesh=mesh)
+                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh)
     return finalize_sweep(plan, exec_plan(plan))
 
 

@@ -1,0 +1,178 @@
+"""Zipped per-env fleet axis (ISSUE 4 tentpole):
+
+* a ``fleet_sets=`` sweep is BITWISE identical to the per-env reference
+  loop (each instance swept alone with its own fleet), both against the
+  single-instance zipped path and the plain shared-params path;
+* zip semantics: no grid axis is added, the env index selects the fleet;
+* validation: fleet stacks must ride an env family, must not combine
+  with ``param_sets``, and must be rectangular (E fleets x m agents);
+* identity: ``inputs_digest`` sees the fleet stack, and ``SweepSpec.tag``
+  separates same-grid/different-fleet store entries;
+* the resumable runtime runs the same zipped plan (crash-resume parity
+  for the new axis)."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import (
+    family_sampler_fn,
+    garnet_env_family,
+    garnet_fleet_sets,
+    stack_env_family,
+)
+from repro.experiments import SweepSpec, run_sweep, spec_hash
+from repro.experiments.runtime import inputs_digest, run_sweep_resumable
+
+E, S, M = 4, 10, 3
+
+ENVS, FAM = garnet_env_family(E, num_states=S)
+W0 = jnp.zeros(S)
+FLEETS = garnet_fleet_sets(ENVS, W0, M, num_junk=1)
+SAMPLER = ParamSampler(fn=family_sampler_fn(8), params=None)
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical"), lambdas=(1e-3, 1e-1),
+                seeds=(0, 1), rhos=(0.999,), eps=0.4, num_iterations=15,
+                num_agents=M, trace="summary")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def test_fleet_stack_shapes():
+    assert {k: v.shape[:2] for k, v in FLEETS.items()} == {
+        "v": (E, M), "visit_logits": (E, M), "noise_scale": (E, M)}
+    # junk rows are instance-specific: the skewed state differs across envs
+    skewed = np.asarray(FLEETS["visit_logits"]).argmax(axis=-1)[:, -1]
+    assert len(set(skewed.tolist())) > 1
+
+
+def test_zipped_fleet_axis_bitwise_vs_per_env_loop():
+    """The tentpole parity contract: one zipped jitted call == the loop of
+    per-env sweeps, each with that env's own fleet, bit for bit."""
+    spec = _spec()
+    res = run_sweep(spec, SAMPLER, W0, env_sets=FAM, fleet_sets=FLEETS)
+    assert res.axes == ("env_set", "mode", "lam", "rho", "seed")
+    assert np.asarray(res.j_final).shape == (E, 2, 2, 1, 2)
+    for e in range(E):
+        one_env = stack_env_family([ENVS[e]], W0)
+        fleet_row = jax.tree.map(lambda x: x[e], FLEETS)
+        # reference 1: shared-params path (fleet row as sampler.params)
+        ref = run_sweep(spec, ParamSampler(fn=SAMPLER.fn, params=fleet_row),
+                        W0, env_sets=one_env)
+        for got_a, ref_a in ((res.j_final[e], ref.j_final[0]),
+                             (res.comm_rate[e], ref.comm_rate[0]),
+                             (res.trace.final_weights[e],
+                              ref.trace.final_weights[0])):
+            np.testing.assert_array_equal(np.asarray(got_a),
+                                          np.asarray(ref_a))
+        # reference 2: single-instance zipped path
+        ref2 = run_sweep(spec, SAMPLER, W0, env_sets=one_env,
+                         fleet_sets=jax.tree.map(lambda x: x[e:e + 1],
+                                                 FLEETS))
+        np.testing.assert_array_equal(np.asarray(res.j_final[e]),
+                                      np.asarray(ref2.j_final[0]))
+
+
+def test_homogeneous_fleet_sets_match_shared_params():
+    """num_junk=0 stacks identical clean fleets: the zipped path must
+    reproduce the plain shared-params sweep exactly."""
+    spec = _spec(modes=("practical",))
+    clean = garnet_fleet_sets(ENVS, W0, M, num_junk=0)
+    zipped = run_sweep(spec, SAMPLER, W0, env_sets=FAM, fleet_sets=clean)
+    shared = run_sweep(
+        spec, ParamSampler(fn=SAMPLER.fn,
+                           params=ENVS[0].agent_params(W0, M)),
+        W0, env_sets=FAM)
+    np.testing.assert_array_equal(np.asarray(zipped.j_final),
+                                  np.asarray(shared.j_final))
+    np.testing.assert_array_equal(np.asarray(zipped.comm_rate),
+                                  np.asarray(shared.comm_rate))
+
+
+def test_fleet_sets_requires_env_sets():
+    with pytest.raises(ValueError, match="requires env_sets"):
+        run_sweep(_spec(modes=("practical",)), SAMPLER, W0,
+                  fleet_sets=FLEETS)
+
+
+def test_fleet_sets_rejects_param_sets_combination():
+    param_sets = jax.tree.map(lambda x: x[None],
+                              ENVS[0].agent_params(W0, M))
+    with pytest.raises(ValueError, match="cannot combine"):
+        run_sweep(_spec(modes=("practical",)), SAMPLER, W0, env_sets=FAM,
+                  param_sets=param_sets, fleet_sets=FLEETS)
+
+
+def test_fleet_sets_must_be_rectangular():
+    short = jax.tree.map(lambda x: x[: E - 1], FLEETS)
+    with pytest.raises(ValueError, match="one fleet per env"):
+        run_sweep(_spec(modes=("practical",)), SAMPLER, W0, env_sets=FAM,
+                  fleet_sets=short)
+    wide = jax.tree.map(lambda x: np.concatenate([x, x[:, :1]], axis=1),
+                        FLEETS)
+    with pytest.raises(ValueError, match="num_agents"):
+        run_sweep(_spec(modes=("practical",)), SAMPLER, W0, env_sets=FAM,
+                  fleet_sets=wide)
+
+
+def test_garnet_fleet_sets_validates_num_junk():
+    with pytest.raises(ValueError, match="num_junk"):
+        garnet_fleet_sets(ENVS, W0, M, num_junk=M + 1)
+
+
+def test_sampler_params_ignored_with_fleet_sets():
+    """Like param_sets: the engine reads fleets from the stack, never from
+    sampler.params — and the inputs digest must agree."""
+    spec = _spec(modes=("practical",))
+    junk_params = ENVS[0].agent_params(W0 + 99.0, M)
+    a = run_sweep(spec, SAMPLER, W0, env_sets=FAM, fleet_sets=FLEETS)
+    b = run_sweep(spec, ParamSampler(fn=SAMPLER.fn, params=junk_params),
+                  W0, env_sets=FAM, fleet_sets=FLEETS)
+    np.testing.assert_array_equal(np.asarray(a.j_final),
+                                  np.asarray(b.j_final))
+    assert (inputs_digest(SAMPLER, W0, env_sets=FAM, fleet_sets=FLEETS)
+            == inputs_digest(ParamSampler(fn=SAMPLER.fn, params=junk_params),
+                             W0, env_sets=FAM, fleet_sets=FLEETS))
+
+
+def test_inputs_digest_sees_fleet_sets():
+    base = inputs_digest(SAMPLER, W0, env_sets=FAM, fleet_sets=FLEETS)
+    clean = garnet_fleet_sets(ENVS, W0, M, num_junk=0)
+    assert inputs_digest(SAMPLER, W0, env_sets=FAM,
+                         fleet_sets=clean) != base
+    assert inputs_digest(SAMPLER, W0, env_sets=FAM) != base
+
+
+def test_tag_separates_same_grid_fleet_classes():
+    """Two fleet classes over one grid are different experiments: the tag
+    keeps their store identities (spec hashes) apart."""
+    a = _spec(tag="het-homogeneous")
+    b = _spec(tag="het-mixed")
+    assert spec_hash(a) != spec_hash(b)
+    assert spec_hash(a) == spec_hash(dataclasses.replace(b,
+                                                         tag="het-homogeneous"))
+
+
+def test_resumable_runtime_runs_zipped_plan(tmp_path):
+    """Crash-resume parity extends to the fleet axis."""
+    spec = _spec(chunk_size=4)
+    ref = run_sweep(spec, SAMPLER, W0, env_sets=FAM, fleet_sets=FLEETS)
+    d = str(tmp_path / "chunks")
+    run_sweep_resumable(spec, SAMPLER, W0, store_dir=d, env_sets=FAM,
+                        fleet_sets=FLEETS)
+    chunks = sorted(f for f in os.listdir(d) if f.startswith("chunk_"))
+    for f in chunks[len(chunks) // 2:]:
+        os.remove(os.path.join(d, f))
+    got = run_sweep_resumable(spec, SAMPLER, W0, store_dir=d, env_sets=FAM,
+                              fleet_sets=FLEETS)
+    np.testing.assert_array_equal(np.asarray(got.j_final),
+                                  np.asarray(ref.j_final))
+    np.testing.assert_array_equal(np.asarray(got.trace.final_weights),
+                                  np.asarray(ref.trace.final_weights))

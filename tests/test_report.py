@@ -1,0 +1,288 @@
+"""Report pipeline + retention/GC + store-first sweeps (ISSUE 4):
+
+* report regeneration is BYTE-deterministic from the same store and
+  never imports jax (subprocess-asserted, the serve_sweeps pattern);
+* ``figure_rows`` mirrors the engine's ``tradeoff_rows`` and the jax-free
+  Theorem 1 bound mirrors ``repro.core.trigger.theorem1_bound`` — the
+  two parity pins that keep the duplicated-by-necessity numpy side
+  honest;
+* ``sweep_or_load`` computes nothing on a warm store, only the missing λ
+  columns on a partial one, and refuses an input-mismatched entry;
+* ``runtime.gc_finished`` deletes chunk dirs only for sweeps whose final
+  record is committed, refuses while the INCOMPLETE resume lock exists,
+  and is idempotent."""
+
+import filecmp
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import ParamSampler
+from repro.core.trigger import theorem1_bound
+from repro.envs import GridWorld, family_sampler_fn, garnet_env_family, garnet_fleet_sets
+from repro.experiments import SweepSpec, run_sweep, tradeoff_rows
+from repro.experiments.report import (
+    _theorem1_rhs,
+    figure_rows,
+    generate_report,
+    render_entry,
+    render_heterogeneity,
+)
+from repro.experiments.runtime import (
+    gc_finished,
+    inputs_digest,
+    run_sweep_resumable,
+    store_result,
+    sweep_or_load,
+)
+from repro.experiments.store import SweepStore
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EPS = 0.5
+N = 20
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical"), lambdas=(1e-3, 1e-1),
+                seeds=(0, 1), rhos=(RHO,), eps=EPS, num_iterations=N,
+                num_agents=2, random_tx_prob=0.4, trace="summary")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+@pytest.fixture(scope="module")
+def het_store(tmp_path_factory):
+    """A store holding a two-class garnet heterogeneity study plus one
+    generic entry — every renderer group the CI store can carry."""
+    root = str(tmp_path_factory.mktemp("het") / "store")
+    store = SweepStore(root)
+    envs, fam = garnet_env_family(3, num_states=8)
+    w0 = jnp.zeros(8)
+    sampler = ParamSampler(fn=family_sampler_fn(6), params=None)
+    for cls, junk in (("homogeneous", 0), ("mixed", 1)):
+        fleets = garnet_fleet_sets(envs, w0, 2, num_junk=junk)
+        spec = SweepSpec(modes=("theoretical", "practical"),
+                         lambdas=(1e-3, 1e-1), seeds=(0,), rhos=(0.999,),
+                         eps=0.4, num_iterations=10, num_agents=2,
+                         trace="summary", tag=f"het-{cls}")
+        sweep_or_load(store, spec, sampler, w0, env_sets=fam,
+                      fleet_sets=fleets,
+                      extra={"figure": "heterogeneity", "fleet_class": cls})
+    res = run_sweep(_spec(), _sampler(), W0, problem=PROB)
+    store_result(store, _spec(), res,
+                 inputs_digest_=inputs_digest(_sampler(), W0, problem=PROB))
+    return root
+
+
+# ------------------------------------------------------------- parity -----
+
+
+def test_figure_rows_mirror_tradeoff_rows():
+    spec = _spec()
+    res = run_sweep(spec, _sampler(), W0, problem=PROB)
+    # round-trip through a throwaway store to get the numpy-side entry
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        s = SweepStore(d)
+        store_result(s, spec, res)
+        entry = s.get(spec)
+    got = figure_rows(entry)
+    want = tradeoff_rows(res, spec)
+    assert len(got) == len(want)
+    by_key = {(r["mode"], r["lam"]): r for r in got}
+    for w in want:
+        g = by_key[(w["mode"], w["lam"])]
+        assert g["comm_rate"] == pytest.approx(w["comm_rate"], rel=1e-6)
+        assert g["J_final"] == pytest.approx(w["J_final"], rel=1e-6)
+        assert g["metric8"] == pytest.approx(w["metric8"], rel=1e-6)
+
+
+def test_jaxfree_theorem1_bound_matches_core():
+    for lam, rho in ((1e-3, 0.9), (1e-1, 0.999)):
+        assert _theorem1_rhs(lam, rho, 0.5, 40, 1.3, 0.2, 0.7) == \
+            pytest.approx(theorem1_bound(lam, rho, 0.5, 40, 1.3, 0.2, 0.7),
+                          rel=1e-12)
+
+
+# --------------------------------------------------- regeneration ---------
+
+
+def _tree_equal(a: str, b: str) -> bool:
+    fa, fb = sorted(os.listdir(a)), sorted(os.listdir(b))
+    if fa != fb:
+        return False
+    match, mismatch, errors = filecmp.cmpfiles(a, b, fa, shallow=False)
+    return not mismatch and not errors
+
+
+def test_report_regeneration_is_byte_deterministic(het_store, tmp_path):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    idx1 = generate_report(SweepStore(het_store), a)
+    idx2 = generate_report(SweepStore(het_store), b)
+    assert idx1["artifacts"] == idx2["artifacts"]
+    assert _tree_equal(a, b)
+    figures = {art["figure"] for art in idx1["artifacts"]}
+    assert figures == {"tradeoff", "heterogeneity"}
+    # heterogeneity classes group into ONE cross-entry artifact
+    het = [art for art in idx1["artifacts"]
+           if art["figure"] == "heterogeneity"]
+    assert len(het) == 1
+    for art in idx1["artifacts"]:
+        assert os.path.isfile(os.path.join(a, art["json"]))
+        assert os.path.isfile(os.path.join(a, art["svg"]))
+
+
+def test_report_path_never_imports_jax(het_store, tmp_path):
+    """Acceptance: figure artifacts regenerate from a cold store with jax
+    never entering the process."""
+    out = str(tmp_path / "report")
+    code = (
+        "import sys\n"
+        "from repro.experiments.report import generate_report\n"
+        "from repro.experiments.store import SweepStore\n"
+        f"idx = generate_report(SweepStore({het_store!r}), {out!r})\n"
+        "assert idx['artifacts'], 'nothing rendered'\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the report path'\n"
+        "assert idx['jax_loaded'] is False\n"
+        "print('REPORT-DEVICE-FREE-OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=REPO, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "REPORT-DEVICE-FREE-OK" in r.stdout
+
+
+def test_heterogeneity_rows_carry_spread_and_classes(het_store):
+    store = SweepStore(het_store)
+    entries = [store.get(h) for h in store.hashes()
+               if store.get(h).extra.get("figure") == "heterogeneity"]
+    art = render_heterogeneity(entries)
+    classes = {r["fleet_class"] for r in art["rows"]}
+    assert classes == {"homogeneous", "mixed"}
+    for r in art["rows"]:
+        assert r["env_instances"] == 3
+        assert r["J_env_spread"] >= 0
+        assert 0 <= r["comm_rate"] <= 1
+    assert art["svg"].startswith("<svg ")
+
+
+def test_render_entry_dispatches_untagged_to_tradeoff(het_store):
+    store = SweepStore(het_store)
+    entry = store.get(_spec())
+    art = render_entry(entry)
+    assert art["figure"] == "tradeoff"
+    assert len(art["rows"]) == 4          # 2 modes x 2 lambdas, seeds out
+
+
+# ------------------------------------------------------ sweep_or_load -----
+
+
+def test_sweep_or_load_cached_and_partial(tmp_path, monkeypatch):
+    from repro.experiments import sweep as sweep_mod
+    store = SweepStore(tmp_path / "store")
+    sampler = _sampler()
+    calls = []
+    real = sweep_mod.run_sweep
+
+    def spy(spec, *a, **kw):
+        calls.append(spec.lambdas)
+        return real(spec, *a, **kw)
+
+    monkeypatch.setattr(sweep_mod, "run_sweep", spy)
+    spec = _spec()
+    first = sweep_or_load(store, spec, sampler, W0, problem=PROB)
+    assert calls == [spec.lambdas]        # cold store: everything computes
+    again = sweep_or_load(store, spec, sampler, W0, problem=PROB)
+    assert calls == [spec.lambdas]        # warm store: zero engine calls
+    np.testing.assert_array_equal(np.asarray(again.j_final),
+                                  np.asarray(first.j_final))
+    wider = _spec(lambdas=(1e-3, 1e-2, 1e-1))
+    got = sweep_or_load(store, wider, sampler, W0, problem=PROB)
+    assert calls == [spec.lambdas, (1e-2,)]   # only the missing column
+    np.testing.assert_array_equal(np.asarray(got.j_final)[..., [0, 2], :, :],
+                                  np.asarray(first.j_final))
+
+
+def test_sweep_or_load_rejects_mismatched_inputs(tmp_path):
+    store = SweepStore(tmp_path / "store")
+    spec = _spec()
+    sweep_or_load(store, spec, _sampler(), W0, problem=PROB)
+    other = ParamSampler(fn=GW.sampler_fn(10),
+                         params=GW.agent_params(W0 + 1.0, 2))
+    with pytest.raises(ValueError, match="different inputs"):
+        sweep_or_load(store, spec, other, W0, problem=PROB)
+
+
+# -------------------------------------------------------------- GC --------
+
+
+def test_gc_finished_full_lifecycle(tmp_path):
+    spec = _spec(chunk_size=4)
+    store = SweepStore(tmp_path / "store")
+    chunks = str(tmp_path / "chunks")
+    # not yet committed anywhere: refuse
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                        store_dir=chunks)
+    with pytest.raises(LookupError, match="cannot verify"):
+        gc_finished(chunks)
+    with pytest.raises(LookupError, match="no entry"):
+        gc_finished(chunks, store)
+    # committed: collect, then idempotent no-op
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                        store_dir=chunks, summary_store=store)
+    stats = gc_finished(chunks)           # store root comes from manifest
+    assert stats["collected"] and stats["files"] > 0
+    assert not os.path.exists(chunks)
+    assert gc_finished(chunks)["collected"] is False
+    # the summary entry (the deliverable) survives GC untouched
+    assert store.has(spec)
+
+
+def test_gc_finished_refuses_incomplete_marker(tmp_path):
+    spec = _spec(chunk_size=4)
+    store = SweepStore(tmp_path / "store")
+    chunks = str(tmp_path / "chunks")
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                        store_dir=chunks, summary_store=store)
+    # simulate a crashed resume: the lock is back, chunks are partial
+    open(os.path.join(chunks, "INCOMPLETE"), "w").write("crashed")
+    with pytest.raises(RuntimeError, match="INCOMPLETE"):
+        gc_finished(chunks)
+    os.remove(os.path.join(chunks, "INCOMPLETE"))
+    assert gc_finished(chunks)["collected"]
+
+
+def test_gc_finished_refuses_foreign_chunk_dir(tmp_path):
+    d = tmp_path / "foreign"
+    d.mkdir()
+    (d / "chunk_000000.npz").write_bytes(b"not a sweep")
+    with pytest.raises(LookupError, match="no manifest"):
+        gc_finished(str(d))
+
+
+def test_gc_finished_rejects_mismatched_store_entry(tmp_path):
+    """An entry under the same spec hash but computed from other inputs
+    must not count as this sweep's final record."""
+    spec = _spec(chunk_size=4)
+    store = SweepStore(tmp_path / "store")
+    chunks = str(tmp_path / "chunks")
+    res = run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                              store_dir=chunks)
+    store_result(store, spec, res, inputs_digest_="someone-else")
+    with pytest.raises(LookupError, match="different inputs"):
+        gc_finished(chunks, store)
