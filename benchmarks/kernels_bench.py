@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gain import gain_matvec
+from repro.kernels.gain import gain_family_stats, gain_matvec
 from repro.kernels.ssd_scan import ssd_chunk_tiles
 
 
@@ -42,6 +42,23 @@ def run(smoke: bool = False) -> list[dict]:
     err = float(jnp.max(jnp.abs(got - want)))
     rows.append(dict(bench="kernel_gain", shape=f"T{T}xn{n}", us_per_call=us,
                      gflop_per_call=2 * T * n / 1e9, max_abs_err=err))
+
+    # batched-agent gain-family kernel: the fused sweep step's one pass over
+    # (m, T, n) — the path sweeps actually run (DESIGN.md §3).  FLOPs: the
+    # m batched projections (2mTn) plus the per-agent n-scale statistics
+    # (norm, g.gradJ: 2mn each; quadratic form: 2mn^2 + 2mn).
+    m, Tf, nf = (8, 128, 64) if smoke else (64, 1024, 512)
+    phi_b = jnp.asarray(rng.normal(size=(m, Tf, nf)).astype(np.float32))
+    g_b = jnp.asarray(rng.normal(size=(m, nf)).astype(np.float32))
+    gj = jnp.asarray(rng.normal(size=(nf,)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(nf, nf)).astype(np.float32))
+    got, us = _time(lambda: gain_family_stats(phi_b, g_b, gj, pm))
+    want = ref.gain_family_stats_ref(phi_b, g_b, gj, pm)
+    err = float(jnp.max(jnp.abs(got - want) / (jnp.abs(want) + 1.0)))
+    flops = 2 * m * Tf * nf + 2 * m * nf**2 + 6 * m * nf
+    rows.append(dict(bench="kernel_gain_family", shape=f"m{m}xT{Tf}xn{nf}",
+                     us_per_call=us, gflop_per_call=flops / 1e9,
+                     max_rel_err=err))
 
     # flash attention tile
     B, L, H, KVH, D = (1, 256, 2, 1, 64) if smoke else (1, 512, 4, 2, 64)

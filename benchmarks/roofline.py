@@ -1,5 +1,7 @@
 """Roofline table: aggregates the dry-run artifacts (experiments/dryrun/*.json)
-into the per-(arch x shape x mesh) three-term analysis of EXPERIMENTS.md.
+into the per-(arch x shape x mesh) three-term analysis of EXPERIMENTS.md,
+plus the analytic roofline of the sweep engine's gain kernels — the path
+every sweep/fleet/heterogeneity grid actually runs (DESIGN.md §3).
 
 Constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 """
@@ -12,6 +14,67 @@ import os
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (f32 gain math is below
+                           # this; the bound stays a best case)
+HBM_BW = 819e9             # bytes/s per chip
+
+# gain-kernel shapes mirrored from benchmarks/kernels_bench.py non-smoke
+GAIN_SHAPES = {
+    "kernel_gain": dict(T=4096, n=2048),
+    "kernel_gain_family": dict(m=64, T=1024, n=512),
+}
+
+
+def gain_kernel_rows() -> list[dict]:
+    """Analytic roofline terms for the single-agent matvec kernel and the
+    batched-agent family kernel the fused sweep step dispatches.
+
+    FLOPs are exact from the kernel definitions (repro/kernels/gain.py).
+    HBM traffic follows the BlockSpec index maps: a block re-streams every
+    time its index changes between consecutive grid steps, regardless of
+    whether the step's compute uses it — so with the grid ordered
+    (agent-block, T-tile, n-tile), the g column blocks, grad_J and the Phi
+    row slabs are fetched once per (agent-block, T-tile) pair, not once
+    per agent block (the pl.when(ti == 0) guard gates the *compute* only).
+    Phi re-streaming is the model's dominant overhead term; the full g
+    rows and the stats output have agent-only indices and move once per
+    agent block.
+    """
+    rows = []
+    s = GAIN_SHAPES["kernel_gain"]
+    T, n = s["T"], s["n"]
+    flops = 2.0 * T * n
+    traffic = 4.0 * (T * n + n + T)          # phi + g read, proj written
+    rows.append(_gain_row("kernel_gain", f"T{T}xn{n}", flops, traffic))
+
+    from repro.kernels.gain import BLOCK_M, FAMILY_BLOCK_T
+    s = GAIN_SHAPES["kernel_gain_family"]
+    m, T, n = s["m"], s["T"], s["n"]
+    flops = 2.0 * m * T * n + 2.0 * m * n * n + 6.0 * m * n
+    revisits = (m / BLOCK_M) * (T / FAMILY_BLOCK_T)   # (agent, T-tile) pairs
+    traffic = 4.0 * (m * T * n                  # feature blocks, once each
+                     + m * n * (T / FAMILY_BLOCK_T)   # g column blocks
+                     + revisits * (n            # grad_J
+                                   + n * n)     # Phi row slabs
+                     + m * n                    # full g rows, per agent blk
+                     + m * 4)                   # stats out, per agent blk
+    rows.append(_gain_row("kernel_gain_family", f"m{m}xT{T}xn{n}",
+                          flops, traffic))
+    return rows
+
+
+def _gain_row(bench: str, shape: str, flops: float, traffic: float) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = traffic / HBM_BW
+    return dict(
+        bench="roofline_gain", suite=bench, shape=shape, status="ok",
+        flops=flops, traffic_bytes=traffic,
+        compute_s=compute_s, memory_s=memory_s,
+        arithmetic_intensity=flops / traffic,
+        dominant="compute" if compute_s >= memory_s else "memory",
+        us_per_call=max(compute_s, memory_s) * 1e6,
+    )
 
 
 def load_records() -> list[dict]:
@@ -57,7 +120,7 @@ def diagnose(rec: dict) -> str:
 
 def run(smoke: bool = False) -> list[dict]:
     del smoke  # aggregates pre-computed dry-run artifacts; already seconds-scale
-    rows = []
+    rows = gain_kernel_rows()
     for rec in load_records():
         base = dict(bench="roofline", arch=rec["arch"], shape=rec["shape"],
                     mesh=rec["mesh"], status=rec["status"])
@@ -86,6 +149,13 @@ def format_table(rows: list[dict]) -> str:
            f"{'useful':>7s} {'temp_GB':>8s}")
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
+        if r["bench"] == "roofline_gain":
+            lines.append(
+                f"{r['suite']:24s} {r['shape']:12s} {'—':6s} "
+                f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+                f"{0.0:10.3e} {r['dominant']:>10s} "
+                f"{r['arithmetic_intensity']:7.1f} {'—':>8s}")
+            continue
         if r["status"] != "ok":
             lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
                          f"{'— ' + r['status']:>10s}")

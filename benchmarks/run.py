@@ -40,6 +40,7 @@ from benchmarks import (
     resume_query,
     roofline,
     sweep_scaling,
+    sweep_step,
     theorem1_bound,
 )
 from benchmarks.common import save_rows
@@ -50,6 +51,7 @@ SUITES = {
     "theorem1": theorem1_bound,
     "agents_scaling": agents_scaling,
     "sweep_scaling": sweep_scaling,
+    "sweep_step": sweep_step,
     "comm_savings": comm_savings,
     "resume_query": resume_query,
     "heterogeneity": heterogeneity,
@@ -65,8 +67,8 @@ STORE_AWARE = {"fig2", "fig3", "theorem1", "comm_savings", "heterogeneity",
 
 def _derived(row: dict) -> str:
     for key in ("J_final", "rhs_bound", "overhead_pct", "savings_pct",
-                "gflop_per_call", "dominant", "byte_deterministic",
-                "artifacts"):
+                "speedup_vs_reference", "gflop_per_call", "dominant",
+                "byte_deterministic", "artifacts"):
         if key in row:
             return f"{key}={row[key]}"
     return ""
@@ -121,7 +123,8 @@ def main() -> None:
             sub = [str(row[k]) for k in ("regime", "fleet_class", "mode",
                                          "query", "panel", "lam", "arch",
                                          "shape", "mesh", "suite", "devices",
-                                         "env_instances")
+                                         "env_instances", "stage", "m",
+                                         "step_backend", "gain_backend")
                    if k in row]
             full = label + ("[" + "/".join(sub) + "]" if sub else "")
             print(f"{full},{row.get('us_per_call', 0):.1f},{_derived(row)}",

@@ -184,15 +184,25 @@ class GatedSGDConfig:
     num_agents: int
     mode: str = "practical"
     random_tx_prob: float = 0.5   # for mode == "random" (paper's Fig 2 baseline)
-    gain_backend: str = "reference"   # 'reference' | 'pallas' (gain_dispatch)
+    # 'reference' | 'pallas'; None reads REPRO_GAIN_BACKEND at trace time
+    gain_backend: Optional[str] = None
+    # 'reference' | 'fused' (shared-projection gain family, DESIGN.md §3);
+    # None reads REPRO_STEP_BACKEND at trace time
+    step_backend: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
-        if self.gain_backend not in gain_dispatch.BACKENDS:
+        if (self.gain_backend is not None
+                and self.gain_backend not in gain_dispatch.BACKENDS):
             raise ValueError(
                 f"gain_backend must be one of {gain_dispatch.BACKENDS}, "
                 f"got {self.gain_backend!r}")
+        if (self.step_backend is not None
+                and self.step_backend not in gain_dispatch.STEP_BACKENDS):
+            raise ValueError(
+                f"step_backend must be one of {gain_dispatch.STEP_BACKENDS}, "
+                f"got {self.step_backend!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -212,8 +222,9 @@ def gated_sgd_core(
     eps: float,
     num_agents: int,
     terms: Optional[ProblemTerms] = None,
-    gain_backend: str = "reference",
+    gain_backend: Optional[str] = None,
     trace: Union[str, TraceSpec] = "full",
+    step_backend: Optional[str] = None,
 ) -> Union[InnerTrace, SummaryTrace]:
     """Branchless inner loop of Algorithm 1 (lines 5-9).
 
@@ -223,7 +234,9 @@ def gated_sgd_core(
     batches, evaluates the full gain family through ``gain_dispatch`` and
     mask-selects the configured one (eq. 13 / 15 / Remark 4), applies the
     trigger (eq. 9 — or the random/always/never baselines), and performs the
-    server update (eq. 6).
+    server update (eq. 6).  ``step_backend="fused"`` evaluates the family
+    from one shared projection pass (DESIGN.md §3); ``"reference"``
+    (default) is the bitwise-pinned original.
 
     ``trace`` selects what the scan materializes: ``"full"`` (default)
     stacks the per-iteration ``InnerTrace`` exactly as the bit-compat
@@ -248,7 +261,7 @@ def gated_sgd_core(
         grad_j = terms.grad(w) if terms is not None else None
         gains = gain_dispatch.mode_gains(
             mode_id, grads, phi_b, eps, grad_j, phi_matrix,
-            backend=gain_backend)
+            backend=gain_backend, step_backend=step_backend)
         alpha_gate = should_transmit(gains, thresholds[k])
         alpha_rand = jax.random.bernoulli(
             rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
@@ -385,6 +398,7 @@ def run_gated_sgd(
         terms=terms,
         gain_backend=cfg.gain_backend,
         trace=trace,
+        step_backend=cfg.step_backend,
     )
 
 
@@ -467,7 +481,8 @@ def run_value_iteration_scan(
             rng_o, v_weights, mode_id, thresholds, cfg.random_tx_prob,
             lambda rngs: jax.vmap(sampler_fn)(params, rngs),
             cfg.eps, cfg.num_agents, terms=terms,
-            gain_backend=cfg.gain_backend)
+            gain_backend=cfg.gain_backend,
+            step_backend=cfg.step_backend)
         return trace.weights[-1], trace
 
     rngs = jax.random.split(rng, num_outer)

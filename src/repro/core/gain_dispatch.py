@@ -1,10 +1,10 @@
 """Single dispatch point for every gain computation (DESIGN.md §3).
 
 The repo grew three gain implementations — the pure-jnp reference
-(``repro.core.gain``), the fused Pallas streaming kernel
-(``repro.kernels.gain``) and the pytree generalization for deep nets
+(``repro.core.gain``), the fused Pallas kernels (``repro.kernels.gain``)
+and the pytree generalization for deep nets
 (``repro.core.fed_sgd.local_gain``).  Algorithm 1 only ever called the
-reference, so the kernel never served the hot path.  This module is the one
+reference, so the kernels never served the hot path.  This module is the one
 API the rest of the stack goes through:
 
 * ``practical_gain(g, phi_t, eps, backend=...)`` — eq. 15 in the streaming
@@ -17,16 +17,37 @@ API the rest of the stack goes through:
   batched Algorithm 1 core: evaluates the gain family once per agent and
   selects by mode id, so an entire (mode x lambda x seed) sweep shares one
   jitted program.
+* ``family_stats`` — the shared-projection sufficient statistics
+  ``[||g||^2, sum_t proj_t^2, g.grad_J, g^T Phi g]`` every mode's gain
+  derives from; the heart of the fused step backend.
 * ``tree_gain`` — the pytree/HVP path for SPMD training (fed_sgd).
 
-Backends are static (they change the compiled program); everything else is
-data.  The default backend comes from ``REPRO_GAIN_BACKEND`` (reference).
+Two orthogonal dispatch axes, both static (they change the compiled
+program); everything else is data:
+
+* ``backend`` ("reference" | "pallas") picks the *implementation* of the
+  O(T n) projection work: pure jnp, or the Pallas kernels in
+  ``repro.kernels.gain`` (interpret mode off-TPU).  Default from
+  ``REPRO_GAIN_BACKEND``.
+* ``step_backend`` ("reference" | "fused") picks the *structure* of the
+  per-step gain family.  "reference" is the original three independent
+  vmapped passes (bitwise-unchanged — the oracle the parity tests pin
+  against).  "fused" computes the projection ``proj = phi @ g`` once per
+  agent per step and derives practical/norm/theoretical from the shared
+  ``family_stats``; combined with ``backend="pallas"`` the whole family is
+  one batched-agent kernel call instead of 3 x m dispatches.  Default from
+  ``REPRO_STEP_BACKEND``.  Fused matches reference to <= 1e-5 across all
+  six modes (tests/test_sweep.py).
+
+The env-var defaults are read at trace time: processes that flip them
+mid-run must not reuse already-jitted callables (the repo's test/CI jobs
+set them per process).
 """
 
 from __future__ import annotations
 
 import os
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +58,7 @@ from repro.kernels import ops as _kernel_ops
 Array = jax.Array
 
 BACKENDS = ("reference", "pallas")
+STEP_BACKENDS = ("reference", "fused")
 
 # Mode ids shared with repro.core.algorithm1 (kept here so the gain selection
 # and the trigger selection use the same enum without a circular import).
@@ -48,11 +70,23 @@ def default_backend() -> str:
     return os.environ.get("REPRO_GAIN_BACKEND", "reference")
 
 
+def default_step_backend() -> str:
+    return os.environ.get("REPRO_STEP_BACKEND", "reference")
+
+
 def _resolve(backend: Optional[str]) -> str:
     backend = backend or default_backend()
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     return backend
+
+
+def _resolve_step(step_backend: Optional[str]) -> str:
+    step_backend = step_backend or default_step_backend()
+    if step_backend not in STEP_BACKENDS:
+        raise ValueError(
+            f"step_backend must be one of {STEP_BACKENDS}, got {step_backend!r}")
+    return step_backend
 
 
 def practical_gain(g: Array, phi_t: Array, eps: float,
@@ -80,6 +114,76 @@ def norm_gain(g: Array, eps: float) -> Array:
     return _ref.gain_norm_only(g, eps)
 
 
+class FamilyStats(NamedTuple):
+    """Shared per-agent sufficient statistics of the whole gain family.
+
+    One projection pass yields everything eq. 13 / eq. 15 / Remark 4 need:
+
+      practical = -eps * gnorm2 + eps^2 * sumproj2 / T
+      norm      = -eps * gnorm2
+      theoretical = -eps * gdotj + eps^2 * quad
+
+    ``gdotj``/``quad`` are None when no exact model is available (the
+    theoretical trigger is then invalid anyway — spec validation rejects it).
+    """
+
+    gnorm2: Array             # (m,) ||g_i||^2
+    sumproj2: Array           # (m,) sum_t (phi_it . g_i)^2
+    gdotj: Optional[Array]    # (m,) g_i . grad J(w)
+    quad: Optional[Array]     # (m,) g_i^T Phi g_i
+
+
+def family_stats(
+    grads: Array,
+    phi_t: Array,
+    grad_j: Optional[Array],
+    phi_matrix: Optional[Array],
+    *,
+    backend: Optional[str] = None,
+) -> FamilyStats:
+    """Compute the gain family's sufficient statistics in one pass.
+
+    ``backend="pallas"`` runs the batched-agent family kernel
+    (``repro.kernels.gain.gain_family_stats``): ONE ``pallas_call`` whose
+    grid tiles (m, T, n) directly, versus the reference path's m-per-mode
+    dispatches.  When no exact model is given the kernel still runs (with
+    zero placeholders for grad_J / Phi) and the theoretical columns are
+    dropped.
+    """
+    have_model = grad_j is not None and phi_matrix is not None
+    if _resolve(backend) == "pallas":
+        # model presence is static, so the no-model case compiles the
+        # 2-column kernel variant — no zero-Phi streaming, no O(m n^2)
+        # quadratic-form work on practical/norm-only sweeps
+        stats = _kernel_ops.gain_family_stats(
+            phi_t, grads, grad_j if have_model else None,
+            phi_matrix if have_model else None)
+        return FamilyStats(
+            gnorm2=stats[:, 0], sumproj2=stats[:, 1],
+            gdotj=stats[:, 2] if have_model else None,
+            quad=stats[:, 3] if have_model else None)
+    gf = grads.astype(jnp.float32)
+    proj = jax.vmap(lambda p, g: p.astype(jnp.float32) @ g)(phi_t, gf)
+    return FamilyStats(
+        gnorm2=jnp.sum(gf * gf, axis=-1),
+        sumproj2=jnp.sum(proj * proj, axis=-1),
+        gdotj=gf @ grad_j if have_model else None,
+        quad=jnp.sum((gf @ phi_matrix) * gf, axis=-1) if have_model else None)
+
+
+def gains_from_stats(mode_id: Array | int, stats: FamilyStats, eps: float,
+                     num_samples: int) -> Array:
+    """Derive the branchless mode selection from shared family statistics."""
+    prac = -eps * stats.gnorm2 + eps**2 * stats.sumproj2 / num_samples
+    norm = -eps * stats.gnorm2
+    if stats.gdotj is None or stats.quad is None:
+        theo = prac  # spec validation guarantees mode_id != theoretical
+    else:
+        theo = -eps * stats.gdotj + eps**2 * stats.quad
+    return jnp.where(mode_id == MODE_THEORETICAL, theo,
+                     jnp.where(mode_id == MODE_NORM, norm, prac))
+
+
 def mode_gains(
     mode_id: Array | int,
     grads: Array,
@@ -89,6 +193,7 @@ def mode_gains(
     phi_matrix: Optional[Array],
     *,
     backend: Optional[str] = None,
+    step_backend: Optional[str] = None,
 ) -> Array:
     """Per-agent gains for a (possibly traced) trigger-mode id.
 
@@ -104,7 +209,15 @@ def mode_gains(
     never log the practical estimate, matching the reference semantics).
     The selection is branchless so ``mode_id`` can vary across a vmapped
     sweep without retracing.
+
+    ``step_backend="fused"`` derives all three gains from one shared
+    ``family_stats`` pass; ``"reference"`` (default) keeps the original
+    three independent vmapped passes, bitwise unchanged.
     """
+    if _resolve_step(step_backend) == "fused":
+        stats = family_stats(grads, phi_t, grad_j, phi_matrix,
+                             backend=backend)
+        return gains_from_stats(mode_id, stats, eps, phi_t.shape[1])
     prac = jax.vmap(lambda gi, pi: practical_gain(gi, pi, eps, backend=backend))(
         grads, phi_t)
     norm = jax.vmap(lambda gi: norm_gain(gi, eps))(grads)

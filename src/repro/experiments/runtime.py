@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import functools
 import hashlib
 import json
 import os
@@ -140,6 +141,32 @@ def _segment_template(plan: SweepPlan):
     ``eval_shape`` — no device computation)."""
     shapes = segment_shapes(plan)
     return jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), shapes)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_segment(acc, seg, start):
+    """Write one segment's rows into the run-stacked accumulator, in place.
+
+    ``acc`` is DONATED: XLA aliases every accumulator buffer to the
+    corresponding output (shapes/dtypes match exactly, so the aliasing is
+    total — asserted structurally via ``launch.hlo_analysis
+    .donated_aliases``), which makes each segment boundary an in-place
+    update instead of a full copy of the run-stacked state.  The caller
+    must never touch the donated ``acc`` again — reading it raises
+    ``RuntimeError`` (the use-after-donate guard test relies on this).
+    ``start`` is traced so every segment shares one compiled program.
+    """
+    return jax.tree.map(
+        lambda a, s: jax.lax.dynamic_update_slice_in_dim(a, s, start, 0),
+        acc, seg)
+
+
+def _result_accumulator(plan: SweepPlan):
+    """Zero device pytree shaped like the full padded run-stacked result."""
+    shapes = segment_shapes(plan)
+    return jax.tree.map(
+        lambda s: jnp.zeros((plan.padded_runs,) + s.shape[1:], s.dtype),
+        shapes)
 
 
 def _write_manifest(store_dir: str, meta: dict) -> None:
@@ -287,7 +314,14 @@ def run_sweep_resumable(
                             "grid_shape": list(plan.gs)},
         })
 
-    outs: list = [None] * len(segments)
+    # Segment results accumulate in place into one run-stacked pytree: the
+    # accumulator is DONATED to the scatter at every segment boundary (XLA
+    # aliases it to the output — no copy of the run-stacked state, unlike
+    # the concatenate-at-the-end assembly this replaces, which kept every
+    # segment alive and then materialized the full result a second time).
+    # A single segment skips the accumulator entirely.
+    single = None
+    acc = _result_accumulator(plan) if len(segments) > 1 else None
     with concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="sweep-ckpt") as pool:
         pending = []
@@ -298,21 +332,26 @@ def run_sweep_resumable(
                     raise ValueError(
                         f"chunk {done[i]} covers runs {meta['segment']}, "
                         f"expected [{a}, {b}) — stale store_dir?")
-                outs[i] = restored
+                seg = restored
                 if on_chunk is not None:
                     on_chunk(i, len(segments), True)
-                continue
-            out = exec_plan_segment(plan, a, b)       # async dispatch
-            outs[i] = out
-            pending.append(pool.submit(_save_chunk, _chunk_path(store_dir, i),
-                                       i, out))
-            if on_chunk is not None:
-                on_chunk(i, len(segments), False)
+            else:
+                seg = exec_plan_segment(plan, a, b)   # async dispatch
+                # the writer closure holds the only other reference to seg;
+                # it is submitted BEFORE the scatter so the checkpoint bytes
+                # are fetched from the segment output, never from acc
+                pending.append(pool.submit(
+                    _save_chunk, _chunk_path(store_dir, i), i, seg))
+                if on_chunk is not None:
+                    on_chunk(i, len(segments), False)
+            if acc is None:
+                single = seg
+            else:
+                acc = _scatter_segment(acc, seg, jnp.int32(a))
         for f in pending:
             f.result()                                 # re-raise I/O errors
 
-    flat = (outs[0] if len(outs) == 1 else
-            jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs))
+    flat = single if acc is None else acc
     result = finalize_sweep(plan, flat)
 
     if summary_store is not None:

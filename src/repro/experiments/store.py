@@ -104,6 +104,20 @@ def spec_payload(spec) -> dict:
     if items.get("trace") == "summary":
         items["trace"] = {"j_trajectory": False, "alphas": False,
                           "gains": False}
+    # Backend fields resolve their env-var defaults here (mirroring
+    # repro.core.gain_dispatch, jax-free), so a spec hashes by the backend
+    # that actually computed it.  ``step_backend`` entered the spec after
+    # the store format shipped: the default ("reference") is dropped from
+    # the payload so every pre-existing entry keeps its hash, and only
+    # genuinely-fused sweeps (<= 1e-5 of reference, not bitwise) hash apart.
+    if "gain_backend" in items and items["gain_backend"] is None:
+        items["gain_backend"] = os.environ.get("REPRO_GAIN_BACKEND",
+                                               "reference")
+    if items.get("step_backend", "reference") is None:
+        items["step_backend"] = os.environ.get("REPRO_STEP_BACKEND",
+                                               "reference")
+    if items.get("step_backend", None) == "reference":
+        items.pop("step_backend", None)
     return {str(k): _canon(v) for k, v in sorted(items.items())}
 
 

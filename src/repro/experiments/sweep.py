@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import NamedTuple, Optional, Union
 
 import jax
@@ -44,6 +45,7 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro import compat
+from repro.core import gain_dispatch
 from repro.core import vfa as vfa_lib
 from repro.core.algorithm1 import (
     MODE_IDS,
@@ -89,7 +91,11 @@ class SweepSpec:
     num_agents: int
     include_horizon_norm: bool = True
     random_tx_prob: Union[float, np.ndarray] = 0.5
-    gain_backend: str = "reference"
+    # 'reference' | 'pallas'; None resolves REPRO_GAIN_BACKEND at trace time
+    gain_backend: Optional[str] = None
+    # 'reference' | 'fused' shared-projection step (DESIGN.md §3); None
+    # resolves REPRO_STEP_BACKEND at trace time
+    step_backend: Optional[str] = None
     batching: str = "vmap"          # 'vmap' | 'map'
     trace: Union[str, TraceSpec] = "full"   # 'full' | 'summary' | TraceSpec
     chunk_size: Optional[int] = None
@@ -100,11 +106,22 @@ class SweepSpec:
     tag: Optional[str] = None
 
     def __post_init__(self):
+        from repro.core import gain_dispatch
         for m in self.modes:
             if m not in MODES:
                 raise ValueError(f"unknown mode {m!r}, must be one of {MODES}")
         if self.batching not in ("vmap", "map"):
             raise ValueError(f"batching must be 'vmap' or 'map', got {self.batching!r}")
+        if (self.gain_backend is not None
+                and self.gain_backend not in gain_dispatch.BACKENDS):
+            raise ValueError(
+                f"gain_backend must be one of {gain_dispatch.BACKENDS}, "
+                f"got {self.gain_backend!r}")
+        if (self.step_backend is not None
+                and self.step_backend not in gain_dispatch.STEP_BACKENDS):
+            raise ValueError(
+                f"step_backend must be one of {gain_dispatch.STEP_BACKENDS}, "
+                f"got {self.step_backend!r}")
         resolve_trace(self.trace)   # validates
         if self.chunk_size is not None:
             if self.batching != "vmap":
@@ -168,16 +185,15 @@ class _RunInputs(NamedTuple):
     env_idx: Optional[Array]    # (G,) index into the env-family stack, or None
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("sampler_fn", "eps", "num_agents", "gain_backend",
-                     "batching", "share_params", "fleet_by_env",
-                     "per_run_terms", "trace", "chunk_size", "mesh"),
-)
-def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
-                shared_terms, *, sampler_fn, eps, num_agents, gain_backend,
-                batching, share_params, fleet_by_env, per_run_terms, trace,
-                chunk_size, mesh):
+_EXEC_STATICS = ("sampler_fn", "eps", "num_agents", "gain_backend",
+                 "step_backend", "batching", "share_params", "fleet_by_env",
+                 "per_run_terms", "trace", "chunk_size", "mesh")
+
+
+def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
+                     env_terms, shared_terms, *, sampler_fn, eps, num_agents,
+                     gain_backend, step_backend, batching, share_params,
+                     fleet_by_env, per_run_terms, trace, chunk_size, mesh):
     def block(per_run, w0, shared_params, param_stack, env_stack, env_terms,
               shared_terms):
         """Execute a (shard-local) block of runs; leading axis = runs."""
@@ -201,7 +217,8 @@ def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
             return gated_sgd_core(
                 run.keys, w0, run.mode_ids, run.thresholds, run.tx_probs,
                 sample_all, eps, num_agents, terms=terms,
-                gain_backend=gain_backend, trace=trace)
+                gain_backend=gain_backend, trace=trace,
+                step_backend=step_backend)
 
         if batching == "map":
             return jax.lax.map(one, per_run)
@@ -219,12 +236,30 @@ def _sweep_exec(per_run, w0, shared_params, param_stack, env_stack, env_terms,
         return block(per_run, w0, shared_params, param_stack, env_stack,
                      env_terms, shared_terms)
     axis = mesh.axis_names[0]
+    # pallas_call has no shard_map replication rule on jax <= 0.4, so the
+    # kernel-backed gain paths must skip the check; the sweep is pure batch
+    # parallelism (no replicated outputs), so the check adds nothing here —
+    # mesh-vs-single parity is asserted directly by tests/test_sweep_sharded.
+    check_vma = (gain_backend or gain_dispatch.default_backend()) != "pallas"
     sharded = compat.shard_map(
         block, mesh=mesh,
         in_specs=(PartitionSpec(axis),) + (PartitionSpec(),) * 6,
-        out_specs=PartitionSpec(axis))
+        out_specs=PartitionSpec(axis), check_vma=check_vma)
     return sharded(per_run, w0, shared_params, param_stack, env_stack,
                    env_terms, shared_terms)
+
+
+_sweep_exec = functools.partial(jax.jit, static_argnames=_EXEC_STATICS)(
+    _sweep_exec_impl)
+
+# Segment-loop variant: the sliced per-run inputs are created inside
+# ``exec_plan_segment`` and never read again, so XLA may reuse their buffers
+# for the outputs (input-output aliasing; verified structurally through
+# ``launch.hlo_analysis.donated_aliases`` by tests/test_runtime_resume.py).
+# Donation cannot change results — crash-resume stays bitwise identical.
+_sweep_exec_donated = functools.partial(
+    jax.jit, static_argnames=_EXEC_STATICS, donate_argnums=(0,))(
+    _sweep_exec_impl)
 
 
 class SweepPlan(NamedTuple):
@@ -395,6 +430,7 @@ def _exec_args(plan: SweepPlan, per_run: _RunInputs,
     kwargs = dict(
         sampler_fn=plan.sampler_fn, eps=spec.eps,
         num_agents=spec.num_agents, gain_backend=spec.gain_backend,
+        step_backend=spec.step_backend,
         batching=spec.batching, share_params=plan.param_stack is None,
         fleet_by_env=plan.fleet_by_env,
         per_run_terms=plan.env_terms is not None,
@@ -403,9 +439,18 @@ def _exec_args(plan: SweepPlan, per_run: _RunInputs,
     return args, kwargs
 
 
-def _exec(plan: SweepPlan, per_run: _RunInputs, chunk_size: Optional[int]):
+def _exec(plan: SweepPlan, per_run: _RunInputs, chunk_size: Optional[int],
+          donate: bool = False):
     args, kwargs = _exec_args(plan, per_run, chunk_size)
-    return _sweep_exec(*args, **kwargs)
+    if not donate:
+        return _sweep_exec(*args, **kwargs)
+    with warnings.catch_warnings():
+        # only same-shape/dtype leaves can alias (e.g. the (runs,) f32
+        # tx_probs -> comm_rate pair); jax warns about the rest of the
+        # donated slice every lowering — expected here, not actionable
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _sweep_exec_donated(*args, **kwargs)
 
 
 def exec_plan(plan: SweepPlan):
@@ -413,19 +458,26 @@ def exec_plan(plan: SweepPlan):
     return _exec(plan, plan.per_run, plan.spec.chunk_size)
 
 
-def exec_plan_segment(plan: SweepPlan, start: int, stop: int):
+def exec_plan_segment(plan: SweepPlan, start: int, stop: int,
+                      donate: bool = True):
     """One checkpointable segment ``[start, stop)`` of the padded run axis.
 
     Dispatched as its own (cached-compile) call so the resumable runtime
     can checkpoint between segments; vmapped-segment results are bitwise
     identical to the corresponding rows of ``exec_plan`` on this backend
     (asserted end-to-end by tests/test_runtime_resume.py).
+
+    The per-run input slice is materialized here and not used after the
+    call, so its buffers are donated by default — XLA may alias them to
+    matching outputs instead of allocating fresh ones (the HLO aliasing is
+    asserted by the donation tests); ``plan.per_run`` itself is never
+    donated.
     """
     if not (0 <= start < stop <= plan.padded_runs):
         raise ValueError(f"segment [{start}, {stop}) outside "
                          f"[0, {plan.padded_runs})")
     sliced = jax.tree.map(lambda x: x[start:stop], plan.per_run)
-    return _exec(plan, sliced, None)
+    return _exec(plan, sliced, None, donate=donate)
 
 
 def segment_shapes(plan: SweepPlan):

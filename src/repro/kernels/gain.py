@@ -1,30 +1,57 @@
-"""Pallas TPU kernel for the paper's practical-gain hot spot (eq. 15).
+"""Pallas TPU kernels for the paper's gain hot spot (eq. 13 / 15).
 
 The O(T n) quantity is ``proj_t = phi_t . g`` followed by ``sum_t proj_t^2``;
-footnote 2 of the paper promises O(T n) per agent and this kernel delivers it
-without ever materializing ``Phi_hat = (1/T) sum phi phi^T`` (n x n) in HBM.
+footnote 2 of the paper promises O(T n) per agent and these kernels deliver
+it without ever materializing ``Phi_hat = (1/T) sum phi phi^T`` (n x n) in
+HBM.  Two entry points:
 
-Tiling: grid (T_tiles, n_tiles); each program multiplies a (BT x BN) VMEM
-tile of the feature matrix against a (BN,) slice of the gradient and
-accumulates into the (BT,) projection block — n_tiles is the sequential
-reduction dimension (TPU grids execute in order, so revisiting the same
-output block accumulates in VMEM).  BT=256, BN=512 keeps the working set
-~0.6 MB, far under the ~16 MB VMEM budget, and both are multiples of the
-(8,128) f32 tile.
+* ``gain_matvec`` / ``practical_gain`` — the original single-agent (T, n)
+  matvec.  Tiling: grid (T_tiles, n_tiles); each program multiplies a
+  (BT x BN) VMEM tile of the feature matrix against a (BN,) slice of the
+  gradient and accumulates into the (BT,) projection block — n_tiles is the
+  sequential reduction dimension (TPU grids execute in order, so revisiting
+  the same output block accumulates in VMEM).  BT=256, BN=512 keeps the
+  working set ~0.6 MB, far under the ~16 MB VMEM budget, and both are
+  multiples of the (8,128) f32 tile.
+
+* ``gain_family_stats`` — the batched-agent *family* kernel the fused sweep
+  step runs (DESIGN.md §3).  The grid tiles ``(m, T, n)`` directly — agents
+  are a grid axis, not a vmap around a scalar kernel — and one pass over the
+  (BM x BT x BN) feature block emits every sufficient statistic the six-mode
+  gain family needs: ``||g||^2``, ``sum_t proj_t^2``, ``g . grad_J`` and the
+  theoretical quadratic form ``g^T Phi g``.  Each agent's projection block
+  accumulates across n-tiles in VMEM scratch (the innermost, sequential grid
+  axis) and is squared-and-reduced once per T-tile on the last n-tile; the
+  n-scale vector statistics accumulate on the first T-tile only, so nothing
+  is computed twice.  One ``pallas_call`` replaces the 3 x m per-agent
+  dispatches of the reference path — the call-count reduction
+  ``benchmarks/sweep_step.py`` measures.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
 BLOCK_T = 256
 BLOCK_N = 512
+
+# Family-kernel agent block: 8 agents per program keeps the feature block at
+# BM*BT*BN*4B = 1 MB of VMEM while cutting the grid (and, off-TPU, the
+# interpreter's per-step overhead) by 8x versus one agent per program.
+BLOCK_M = 8
+FAMILY_BLOCK_T = 128
+FAMILY_BLOCK_N = 256
+
+# Column order of the (m, 4) stats array gain_family_stats emits.
+STAT_GNORM2, STAT_SUMPROJ2, STAT_GDOTJ, STAT_QUAD = range(4)
 
 
 def _matvec_kernel(phi_ref, g_ref, out_ref):
@@ -73,3 +100,129 @@ def practical_gain(phi: Array, g: Array, eps: float = 1.0,
     proj = gain_matvec(phi, g, interpret=interpret)
     gf = g.astype(jnp.float32)
     return -eps * (gf @ gf) + eps**2 * jnp.sum(proj**2) / phi.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Batched-agent family kernel (the fused sweep step's one projection pass).
+# ---------------------------------------------------------------------------
+
+
+def _family_kernel(with_model: bool, phi_ref, g_ref, *rest):
+    """Kernel body: see module docstring for the accumulation schedule.
+
+    With a model, ``g`` arrives twice — as the (BM, BN) column block
+    matching the current n-tile and as the full (BM, n_pad) row the
+    quadratic form's second factor needs; both views alias the same HBM
+    buffer, so no extra memory moves through the host.  Without one
+    (``with_model=False`` — no exact grad J / Phi available), the
+    theoretical inputs, their O(m n^2) quadratic-form work and the Phi
+    streaming are compiled out entirely and ``out`` carries two columns.
+    """
+    if with_model:
+        gj_ref, pm_ref, gfull_ref, out_ref, proj_ref = rest
+    else:
+        out_ref, proj_ref = rest
+    ti = pl.program_id(1)
+    ni = pl.program_id(2)
+    nn = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(ti == 0, ni == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ni == 0)
+    def _init_proj():
+        proj_ref[...] = jnp.zeros_like(proj_ref)
+
+    phi = phi_ref[...].astype(jnp.float32)            # (BM, BT, BN)
+    g = g_ref[...].astype(jnp.float32)                # (BM, BN)
+    proj_ref[...] += jax.lax.dot_general(
+        phi, g, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (BM, BT)
+
+    @pl.when(ti == 0)
+    def _vector_stats():
+        # n-scale statistics accumulate over n-tiles on the first T-tile
+        # only, so the compute touches each column block exactly once.
+        out_ref[:, STAT_GNORM2] += jnp.sum(g * g, axis=-1)
+        if with_model:
+            gj = gj_ref[...].astype(jnp.float32)      # (1, BN)
+            pm = pm_ref[...].astype(jnp.float32)      # (BN, n_pad)
+            gfull = gfull_ref[...].astype(jnp.float32)  # (BM, n_pad)
+            out_ref[:, STAT_GDOTJ] += g @ gj[0]
+            # quadratic form, row-block at a time:
+            # g_blk @ (Phi[blk, :] @ g_full)
+            out_ref[:, STAT_QUAD] += jnp.sum(
+                jnp.dot(g, pm, preferred_element_type=jnp.float32) * gfull,
+                axis=-1)
+
+    @pl.when(ni == nn - 1)
+    def _projection_stats():
+        p = proj_ref[...]
+        out_ref[:, STAT_SUMPROJ2] += jnp.sum(p * p, axis=-1)
+
+
+def gain_family_stats(phi: Array, g: Array,
+                      grad_j: Optional[Array] = None,
+                      phi_matrix: Optional[Array] = None,
+                      *, interpret: bool = True, block_m: int = BLOCK_M,
+                      block_t: int = FAMILY_BLOCK_T,
+                      block_n: int = FAMILY_BLOCK_N) -> Array:
+    """Per-agent gain-family sufficient statistics in one fused pass.
+
+    Args:
+      phi:        (m, T, n) per-agent local feature batches.
+      g:          (m, n) per-agent stochastic gradients.
+      grad_j:     (n,) exact grad J(w), or None when no model is available.
+      phi_matrix: (n, n) exact second moment Phi, or None.
+
+    With a model, returns (m, 4) float32 ``[||g||^2, sum_t (phi_t.g)^2,
+    g.grad_J, g^T Phi g]`` — everything eq. 13 / eq. 15 / Remark 4 need, so
+    the six trigger modes derive from one projection pass
+    (``repro.core.gain_dispatch.mode_gains`` with ``step_backend="fused"``).
+    Without one (both None), returns (m, 2) ``[||g||^2, sum proj^2]`` from
+    a kernel variant that never streams Phi nor pays the O(m n^2)
+    quadratic form — the common practical/norm-only sweep.
+    """
+    with_model = grad_j is not None and phi_matrix is not None
+    m, T, n = phi.shape
+    bm = min(block_m, m)
+    bt = min(block_t, T)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_t = (-T) % bt
+    pad_n = (-n) % bn
+    if pad_m or pad_t or pad_n:
+        # zero padding is exact: padded rows/columns contribute 0 to every
+        # accumulated statistic, and padded agents are sliced off below
+        phi = jnp.pad(phi, ((0, pad_m), (0, pad_t), (0, pad_n)))
+        g = jnp.pad(g, ((0, pad_m), (0, pad_n)))
+    if pad_n and with_model:
+        grad_j = jnp.pad(grad_j, (0, pad_n))
+        phi_matrix = jnp.pad(phi_matrix, ((0, pad_n), (0, pad_n)))
+    mp, Tp, np_ = phi.shape
+    grid = (mp // bm, Tp // bt, np_ // bn)
+    in_specs = [
+        pl.BlockSpec((bm, bt, bn), lambda ai, ti, ni: (ai, ti, ni)),
+        pl.BlockSpec((bm, bn), lambda ai, ti, ni: (ai, ni)),
+    ]
+    operands = [phi, g]
+    cols = 2
+    if with_model:
+        in_specs += [
+            pl.BlockSpec((1, bn), lambda ai, ti, ni: (0, ni)),
+            pl.BlockSpec((bn, np_), lambda ai, ti, ni: (ni, 0)),
+            pl.BlockSpec((bm, np_), lambda ai, ti, ni: (ai, 0)),
+        ]
+        operands += [grad_j[None, :], phi_matrix, g]
+        cols = 4
+    out = pl.pallas_call(
+        functools.partial(_family_kernel, with_model),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, cols), lambda ai, ti, ni: (ai, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, cols), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bt), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[:m]

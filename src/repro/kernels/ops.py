@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gain import gain_family_stats as _gain_family_stats
 from repro.kernels.gain import gain_matvec as _gain_matvec
 from repro.kernels.gain import practical_gain as _practical_gain
 from repro.kernels.ssd_scan import ssd_chunked_pallas as _ssd
@@ -38,6 +39,15 @@ def gain_matvec(phi: Array, g: Array) -> Array:
 @functools.partial(jax.jit, static_argnames=("eps",))
 def practical_gain(phi: Array, g: Array, eps: float = 1.0) -> Array:
     return _practical_gain(phi, g, eps=eps, interpret=_default_interpret())
+
+
+@jax.jit
+def gain_family_stats(phi: Array, g: Array, grad_j=None,
+                      phi_matrix=None) -> Array:
+    """Batched-agent gain-family statistics in one kernel pass: (m, 4)
+    with an exact model, (m, 2) without (the model-free kernel variant)."""
+    return _gain_family_stats(phi, g, grad_j, phi_matrix,
+                              interpret=_default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

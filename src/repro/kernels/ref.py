@@ -22,6 +22,24 @@ def practical_gain_ref(phi: Array, g: Array, eps: float) -> Array:
     return -eps * (gf @ gf) + eps**2 * jnp.sum(proj**2) / phi.shape[0]
 
 
+def gain_family_stats_ref(phi: Array, g: Array, grad_j: Array = None,
+                          phi_matrix: Array = None) -> Array:
+    """Batched-agent gain-family statistics (oracle for kernels/gain.py).
+
+    phi: (m, T, n); g: (m, n); grad_j: (n,) or None; phi_matrix: (n, n) or
+    None.  With a model, returns (m, 4) f32 [||g||^2, sum_t (phi_t.g)^2,
+    g.grad_J, g^T Phi g]; without one, the (m, 2) prefix.
+    """
+    phif = phi.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    proj = jnp.einsum("mtn,mn->mt", phif, gf)
+    cols = [jnp.sum(gf * gf, axis=-1), jnp.sum(proj * proj, axis=-1)]
+    if grad_j is not None and phi_matrix is not None:
+        cols += [gf @ grad_j.astype(jnp.float32),
+                 jnp.sum((gf @ phi_matrix.astype(jnp.float32)) * gf, axis=-1)]
+    return jnp.stack(cols, axis=-1)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                         window: int = 0) -> Array:
     """q: (B, Lq, H, d); k/v: (B, Lk, KVH, d) with KVH | H (GQA)."""

@@ -42,6 +42,61 @@ _NAME_RE = re.compile(r"%([\w.\-]+)")
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+# input-output aliasing (buffer donation).  Compiled HLO carries the alias
+# map on the HloModule line: input_output_alias={ {out_idx}: (param, {param_
+# idx}, may-alias) }; pre-optimization StableHLO marks donated-and-matched
+# parameters with a `tf.aliasing_output = N : i32` attribute instead.
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}\s*:\s*\((\d+),\s*\{([\d,\s]*)\},\s*(may-alias|must-alias)\)")
+_STABLEHLO_ALIAS_RE = re.compile(
+    r"%arg(\d+):\s*tensor<[^>]*>\s*\{[^{}]*tf\.aliasing_output\s*=\s*(\d+)")
+
+
+def _index_tuple(text: str) -> tuple:
+    return tuple(int(x) for x in text.split(",") if x.strip())
+
+
+def donated_aliases(text: str) -> list[dict]:
+    """Input-output alias pairs a donated-buffer program established.
+
+    Accepts either compiled HLO text (``compiled.as_text()``) or lowered
+    StableHLO (``lowered.as_text()``); returns one record per aliased pair:
+    ``{"parameter": int, "output_index": tuple, "parameter_index": tuple,
+    "kind": "may-alias"|"must-alias"}``.  An empty list means the program
+    donates nothing XLA could alias — the structural check the donation
+    tests assert against (DESIGN.md §8)."""
+    out = []
+    marker = "input_output_alias={"
+    pos = text.find(marker)
+    if pos >= 0:
+        # balanced-brace scan of the alias map (entries contain braces)
+        start = pos + len(marker) - 1
+        depth = 0
+        for i in range(start, len(text)):
+            if text[i] == "{":
+                depth += 1
+            elif text[i] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+        block = text[start:i + 1]
+        for m in _ALIAS_ENTRY_RE.finditer(block):
+            out.append({
+                "output_index": _index_tuple(m.group(1)),
+                "parameter": int(m.group(2)),
+                "parameter_index": _index_tuple(m.group(3)),
+                "kind": m.group(4),
+            })
+        return out
+    for m in _STABLEHLO_ALIAS_RE.finditer(text):
+        out.append({
+            "output_index": (int(m.group(2)),),
+            "parameter": int(m.group(1)),
+            "parameter_index": (),
+            "kind": "may-alias",
+        })
+    return out
+
 # ops whose boundary bytes count as HBM traffic
 _NO_TRAFFIC = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",

@@ -7,7 +7,12 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep, see pyproject [dev]
 from hypothesis import given, settings, strategies as st
 
-from repro.launch.hlo_analysis import _SHAPE_RE, _shapes_bytes, analyze
+from repro.launch.hlo_analysis import (
+    _SHAPE_RE,
+    _shapes_bytes,
+    analyze,
+    donated_aliases,
+)
 
 
 @given(
@@ -57,6 +62,39 @@ def test_nested_scan_trip_counts_multiply():
     ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
     a = analyze(jax.jit(outer).lower(x, ws).compile().as_text())
     assert a["flops"] == pytest.approx(3 * 4 * 2 * 16 * 32 * 32)
+
+
+def test_donated_aliases_parses_compiled_and_lowered_text():
+    @jax.jit
+    def plain(a, b):
+        return a + b
+
+    import functools
+    donated = functools.partial(jax.jit, donate_argnums=(0,))(
+        lambda a, b: a + b)
+
+    a = jnp.ones((8, 4))
+    assert donated_aliases(plain.lower(a, a).compile().as_text()) == []
+    compiled = donated.lower(a, a).compile()
+    got = donated_aliases(compiled.as_text())
+    assert got == [{"output_index": (), "parameter": 0,
+                    "parameter_index": (), "kind": "may-alias"}]
+    # pre-optimization StableHLO marks the matched parameter instead
+    low = donated_aliases(donated.lower(a, a).as_text())
+    assert low and low[0]["parameter"] == 0
+
+
+def test_donated_aliases_multi_output_literal():
+    text = ("HloModule jit_f, is_scheduled=true, input_output_alias={ {0}: "
+            "(0, {}, may-alias), {1}: (2, {1}, must-alias) }, "
+            "entry_computation_layout={(f32[4]{0})->f32[4]{0}}")
+    got = donated_aliases(text)
+    assert got == [
+        {"output_index": (0,), "parameter": 0, "parameter_index": (),
+         "kind": "may-alias"},
+        {"output_index": (1,), "parameter": 2, "parameter_index": (1,),
+         "kind": "must-alias"},
+    ]
 
 
 def test_dryrun_override_parsing():

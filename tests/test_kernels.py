@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gain import gain_matvec, practical_gain
+from repro.kernels.gain import gain_family_stats, gain_matvec, practical_gain
 from repro.kernels.ssd_scan import ssd_chunk_tiles, ssd_chunked_pallas
 from repro.models.ssm import ssd_chunked
 
@@ -24,6 +24,62 @@ def test_gain_kernel_sweep(rng, T, n, dtype):
     gg = practical_gain(phi, g, eps=0.5)
     ww = ref.practical_gain_ref(phi, g, 0.5)
     np.testing.assert_allclose(gg, ww, rtol=tol * 5, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m,T,n", [
+    (1, 10, 6),       # below every block size
+    (2, 8, 25),       # the repo's typical tiny-fleet shape
+    (8, 128, 256),    # exactly one (BM, BT, BN) block
+    (13, 100, 30),    # ragged on every axis
+    (33, 257, 130),   # ragged + multi-block on every axis
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gain_family_kernel_sweep(rng, m, T, n, dtype):
+    """Batched-agent family kernel vs the jnp oracle: one pass emits
+    ||g||^2, sum proj^2, g.gradJ and the theoretical quadratic form."""
+    phi = jnp.asarray(rng.normal(size=(m, T, n))).astype(dtype)
+    g = jnp.asarray(rng.normal(size=(m, n))).astype(dtype)
+    gj = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    got = gain_family_stats(phi, g, gj, pm)
+    want = ref.gain_family_stats_ref(phi, g, gj, pm)
+    assert got.shape == (m, 4) and got.dtype == jnp.float32
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    scale = np.abs(np.asarray(want)) + 1.0
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=tol)
+
+
+def test_gain_family_kernel_model_free_variant(rng):
+    """Without an exact model the kernel compiles the 2-column variant —
+    no Phi streaming, no quadratic form — and matches the oracle prefix."""
+    m, T, n = 13, 100, 30
+    phi = jnp.asarray(rng.normal(size=(m, T, n)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    got = gain_family_stats(phi, g)
+    assert got.shape == (m, 2)
+    want = ref.gain_family_stats_ref(phi, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    gj = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    full = gain_family_stats(phi, g, gj, pm)
+    np.testing.assert_array_equal(np.asarray(full[:, :2]), np.asarray(got))
+
+
+def test_gain_family_kernel_under_vmap(rng):
+    """The sweep engine vmaps the kernel over the run axis (per-run grad_J):
+    batching must agree with the per-run loop."""
+    G, m, T, n = 3, 5, 12, 9
+    phi = jnp.asarray(rng.normal(size=(G, m, T, n)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(G, m, n)).astype(np.float32))
+    gj = jnp.asarray(rng.normal(size=(G, n)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    got = jax.vmap(lambda p, gg, j: gain_family_stats(p, gg, j, pm))(phi, g, gj)
+    for i in range(G):
+        want = ref.gain_family_stats_ref(phi[i], g[i], gj[i], pm)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
 
 
 @pytest.mark.parametrize("case", [

@@ -1,9 +1,14 @@
-"""Resumable-runtime contract (ISSUE 3 acceptance):
+"""Resumable-runtime contract (ISSUE 3 acceptance; donation — ISSUE 5):
 
 * a fresh ``run_sweep_resumable`` is bitwise identical to ``run_sweep``;
 * a sweep killed after k chunks (simulated by truncating the store dir)
   and resumed is bitwise identical to the uninterrupted result — for
-  both ``trace="summary"`` and full-trace modes;
+  both ``trace="summary"`` and full-trace modes, and under the fused
+  step backend with donated buffers;
+* the segment loop donates its buffers: the run-stacked accumulator is
+  fully input-output aliased (structural, via ``launch.hlo_analysis``)
+  and a donated array is never re-read (reads raise — the use-after-
+  donate guard);
 * chunk checkpoints carry the spec hash / input digest / grid coords,
   and a store dir cannot silently serve a different sweep;
 * finished sweeps land in the ``SweepStore`` keyed by spec hash."""
@@ -21,11 +26,20 @@ from repro.core.algorithm1 import ParamSampler
 from repro.envs import GridWorld
 from repro.experiments import SweepSpec, run_sweep
 from repro.experiments.runtime import (
+    _result_accumulator,
+    _scatter_segment,
     completed_chunks,
     inputs_digest,
     run_sweep_resumable,
 )
 from repro.experiments.store import SweepStore, spec_hash
+from repro.experiments.sweep import (
+    _exec_args,
+    _sweep_exec_donated,
+    exec_plan_segment,
+    plan_sweep,
+)
+from repro.launch.hlo_analysis import donated_aliases
 
 EPS = 0.5
 N = 30
@@ -145,6 +159,64 @@ def test_crash_resume_bitwise_on_device_mesh(tmp_path):
     got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, mesh=mesh,
                               store_dir=d)
     _assert_bitwise(got, ref)
+
+
+@pytest.mark.parametrize("trace", ["summary", "full"])
+def test_crash_resume_bitwise_identical_fused_backend(tmp_path, trace):
+    """Donation acceptance: kill-and-resume stays bitwise identical under
+    the fused step backend + donated segment buffers."""
+    spec = _spec(trace=trace, step_backend="fused")
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    _truncate_after(d, 1)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    _assert_bitwise(got, ref)
+
+
+# ------------------------------------------------------------- donation ----
+
+
+def test_scatter_accumulator_aliases_every_buffer():
+    """Structural acceptance: the donated run-stacked accumulator is input-
+    output aliased leaf for leaf in the compiled HLO — each segment
+    boundary is an in-place update, not a copy of the run-stacked state."""
+    plan = plan_sweep(_spec(), _sampler(), W0, PROB)
+    acc = _result_accumulator(plan)
+    seg = exec_plan_segment(plan, 0, plan.segment_runs)
+    compiled = _scatter_segment.lower(acc, seg, jnp.int32(0)).compile()
+    aliases = donated_aliases(compiled.as_text())
+    n_leaves = len(jax.tree.leaves(acc))
+    assert len(aliases) == n_leaves, (aliases, n_leaves)
+    assert {a["parameter"] for a in aliases} == set(range(n_leaves))
+
+
+def test_segment_exec_donates_matching_buffers():
+    """The donated segment executor aliases at least the shape-matched
+    per-run leaves (e.g. tx_probs -> a (runs,) f32 output)."""
+    plan = plan_sweep(_spec(), _sampler(), W0, PROB)
+    sliced = jax.tree.map(lambda x: x[:plan.segment_runs], plan.per_run)
+    args, kwargs = _exec_args(plan, sliced, None)
+    compiled = _sweep_exec_donated.lower(*args, **kwargs).compile()
+    assert donated_aliases(compiled.as_text())
+
+
+def test_use_after_donate_guard():
+    """A donated accumulator must never be re-read: reads raise, and the
+    fresh accumulator carries the segment rows bit-exactly."""
+    plan = plan_sweep(_spec(), _sampler(), W0, PROB)
+    acc0 = _result_accumulator(plan)
+    seg = exec_plan_segment(plan, 0, plan.segment_runs)
+    seg_host = jax.tree.map(np.asarray, seg)        # fetch BEFORE donating
+    acc1 = _scatter_segment(acc0, seg, jnp.int32(0))
+    for leaf in jax.tree.leaves(acc0):
+        assert leaf.is_deleted()
+    with pytest.raises(RuntimeError, match="deleted|donated"):
+        np.asarray(jax.tree.leaves(acc0)[0])
+    jax.tree.map(
+        lambda a, s: np.testing.assert_array_equal(
+            np.asarray(a)[:plan.segment_runs], s),
+        acc1, seg_host)
 
 
 # ------------------------------------------------------- chunk metadata ----

@@ -120,6 +120,122 @@ def test_sweep_pallas_backend_serves_hot_path():
                                   np.asarray(ref.trace.alphas))
 
 
+@pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
+def test_fused_step_backend_parity_per_run_all_modes(gain_backend):
+    """Acceptance: the shared-projection fused step matches the reference
+    oracle to <= 1e-5 across all six modes, full AND summary traces."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    for mode in ALL_MODES:
+        cfg = dict(trigger=TriggerConfig(lam=1e-2, rho=RHO, num_iterations=30),
+                   eps=EPS, num_agents=2, mode=mode, random_tx_prob=0.4)
+        ref = run_gated_sgd(jax.random.key(0), W0, sampler,
+                            GatedSGDConfig(**cfg, step_backend="reference",
+                                           gain_backend=gain_backend),
+                            problem=PROB)
+        for trace in ("full", "summary"):
+            fus = run_gated_sgd(
+                jax.random.key(0), W0, sampler,
+                GatedSGDConfig(**cfg, step_backend="fused",
+                               gain_backend=gain_backend),
+                problem=PROB, trace=trace)
+            w_ref = np.asarray(ref.weights[-1])
+            w_fus = np.asarray(fus.weights[-1] if trace == "full"
+                               else fus.final_weights)
+            np.testing.assert_allclose(w_fus, w_ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{mode}/{trace}")
+            # identical transmit decisions; the comm RATE may differ in the
+            # last ulp (mean lowers as sum*(1/N) or sum/N depending on how
+            # the surrounding program fuses)
+            np.testing.assert_allclose(float(fus.comm_rate),
+                                       float(ref.comm_rate), rtol=1e-6)
+            if trace == "full":
+                np.testing.assert_array_equal(np.asarray(fus.alphas),
+                                              np.asarray(ref.alphas), mode)
+                np.testing.assert_allclose(np.asarray(fus.gains),
+                                           np.asarray(ref.gains),
+                                           rtol=1e-5, atol=1e-5, err_msg=mode)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(fus.tx_counts),
+                    np.asarray(ref.alphas).sum(axis=0), mode)
+
+
+def test_fused_step_backend_parity_inside_sweep():
+    """Fused-vs-reference inside the batched engine: whole grid, all six
+    modes in one jitted call, full trace (alphas must match exactly —
+    a flipped trigger decision would diverge the weights entirely)."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    ref = run_sweep(_spec(num_iterations=30), sampler, W0, problem=PROB)
+    fus = run_sweep(_spec(num_iterations=30, step_backend="fused"),
+                    sampler, W0, problem=PROB)
+    np.testing.assert_allclose(np.asarray(fus.trace.gains),
+                               np.asarray(ref.trace.gains),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fus.trace.alphas),
+                                  np.asarray(ref.trace.alphas))
+    np.testing.assert_allclose(np.asarray(fus.trace.weights),
+                               np.asarray(ref.trace.weights),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fus.j_final),
+                               np.asarray(ref.j_final), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_step_backend_parity_summary_sweep():
+    """Same grid on the streaming summary path (what big sweeps run)."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    ref = run_sweep(_spec(num_iterations=30, trace="summary"),
+                    sampler, W0, problem=PROB)
+    fus = run_sweep(_spec(num_iterations=30, trace="summary",
+                          step_backend="fused"), sampler, W0, problem=PROB)
+    np.testing.assert_array_equal(np.asarray(fus.trace.tx_counts),
+                                  np.asarray(ref.trace.tx_counts))
+    np.testing.assert_allclose(np.asarray(fus.trace.final_weights),
+                               np.asarray(ref.trace.final_weights),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fus.trace.gain_mean),
+                               np.asarray(ref.trace.gain_mean),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_pallas_sweep_serves_hot_path():
+    """The batched-agent family kernel end-to-end inside the sweep."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    specs = [_spec(modes=("practical", "theoretical"), lambdas=(1e-2,),
+                   seeds=(0,), num_iterations=20, step_backend=sb,
+                   gain_backend=gb)
+             for sb, gb in (("reference", "reference"), ("fused", "pallas"))]
+    ref, fus = (run_sweep(s, sampler, W0, problem=PROB) for s in specs)
+    np.testing.assert_allclose(np.asarray(fus.trace.gains),
+                               np.asarray(ref.trace.gains),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fus.trace.alphas),
+                                  np.asarray(ref.trace.alphas))
+
+
+def test_backend_env_defaults(monkeypatch):
+    """SweepSpec/GatedSGDConfig leave backends None by default; the env vars
+    decide at trace time (what the CI pallas-backend job relies on), and the
+    jax-free store hash resolves them identically."""
+    from repro.core import gain_dispatch
+    from repro.experiments.store import spec_hash
+    assert _spec().gain_backend is None and _spec().step_backend is None
+    monkeypatch.delenv("REPRO_GAIN_BACKEND", raising=False)
+    assert gain_dispatch.default_backend() == "reference"
+    assert gain_dispatch.default_step_backend() == "reference"
+    # None-default and explicit "reference" hash identically (store back-
+    # compat: every pre-existing entry keeps its hash)
+    assert spec_hash(_spec()) == spec_hash(_spec(gain_backend="reference"))
+    assert spec_hash(_spec()) == spec_hash(_spec(step_backend="reference"))
+    assert spec_hash(_spec(step_backend="fused")) != spec_hash(_spec())
+    monkeypatch.setenv("REPRO_GAIN_BACKEND", "pallas")
+    assert gain_dispatch.default_backend() == "pallas"
+    assert spec_hash(_spec()) == spec_hash(_spec(gain_backend="pallas"))
+    with pytest.raises(ValueError, match="step_backend"):
+        _spec(step_backend="nope")
+    with pytest.raises(ValueError, match="gain_backend"):
+        _spec(gain_backend="nope")
+
+
 def test_mode_gains_branchless_selection():
     rng = np.random.default_rng(1)
     grads = jnp.asarray(rng.normal(size=(3, 6)).astype(np.float32))
