@@ -1,0 +1,160 @@
+"""Bench regression gate: validate fresh smoke JSON against committed schemas.
+
+The committed ``experiments/bench/*.json`` files are the repo's perf
+baseline.  This checker — deliberately jax-free, it must run in seconds on
+any CI box — compares a fresh ``--smoke`` run (written via
+``benchmarks.run --smoke --out-dir DIR``) against them *structurally*:
+
+* every committed row kind (``bench`` + ``stage`` + ``component``) still
+  appears in the fresh run — a suite that silently stopped emitting a
+  stage (or a backend column) is drift, even if everything else passes;
+* every committed (gain_backend, step_backend) combination per kind is
+  still covered — e.g. dropping the megastep rows from ``sweep_step``
+  fails the gate;
+* fresh rows of a known kind carry at least the committed kind's common
+  fields (smoke rows may add fields; they may not lose them);
+* every numeric value is finite, ``us_per_call`` is non-negative and
+  ``speedup_vs_reference`` is finite and positive.
+
+Numbers are NOT compared: smoke grids are tiny and this container's
+timings are noise — the gate catches schema/coverage drift, which is the
+failure mode that silently rots a committed baseline.  (The first step of
+ROADMAP's "enforced perf trajectory"; actual threshold gating needs real
+hardware.)
+
+  PYTHONPATH=src python -m benchmarks.check_bench --fresh /tmp/bench \
+      [--committed experiments/bench] [suite ...]
+
+With no suites listed, every committed ``<suite>.json`` that also exists
+under ``--fresh`` is checked; suites named explicitly MUST exist in both
+places.  Exits non-zero with one line per violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+COMMITTED_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "bench")
+
+NUMERIC_CHECKS = ("us_per_call", "speedup_vs_reference")
+
+
+def _kind(row: dict) -> tuple:
+    """Row identity within a suite: the label axes, never the grid axes."""
+    return (row.get("bench", ""), row.get("stage", ""),
+            row.get("component", ""))
+
+
+def _backends(row: dict) -> tuple:
+    return (row.get("gain_backend", ""), row.get("step_backend", ""))
+
+
+def _load(path: str) -> list[dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not all(isinstance(r, dict) for r in rows):
+        raise ValueError(f"{path}: expected a JSON list of row objects")
+    return rows
+
+
+def _schema(rows: list[dict]) -> dict:
+    """kind -> (required keys = intersection over rows, backend combos)."""
+    out: dict = {}
+    for row in rows:
+        k = _kind(row)
+        keys, combos = out.setdefault(k, [None, set()])
+        keys = set(row) if keys is None else keys & set(row)
+        combos.add(_backends(row))
+        out[k] = [keys, combos]
+    return out
+
+
+def check_suite(suite: str, committed: list[dict],
+                fresh: list[dict]) -> list[str]:
+    """All violations of the committed schema by the fresh rows."""
+    errors = []
+    if not fresh:
+        return [f"{suite}: fresh run emitted no rows"]
+    want = _schema(committed)
+    got = _schema(fresh)
+    for kind, (keys, combos) in want.items():
+        label = "/".join(filter(None, kind)) or suite
+        if kind not in got:
+            errors.append(f"{suite}: row kind {label!r} missing from fresh run")
+            continue
+        missing_keys = keys - got[kind][0]
+        if missing_keys:
+            errors.append(f"{suite}: {label!r} rows lost committed fields "
+                          f"{sorted(missing_keys)}")
+        missing_combos = combos - got[kind][1]
+        if missing_combos:
+            errors.append(f"{suite}: {label!r} lost backend rows "
+                          f"{sorted(missing_combos)}")
+    for i, row in enumerate(fresh):
+        for key, val in row.items():
+            if isinstance(val, float) and not math.isfinite(val):
+                errors.append(f"{suite}: row {i} ({key}) is non-finite: {val}")
+        for key in NUMERIC_CHECKS:
+            if key in row:
+                val = row[key]
+                if not isinstance(val, (int, float)) or not math.isfinite(val):
+                    errors.append(
+                        f"{suite}: row {i} {key}={val!r} not a finite number")
+                elif key == "us_per_call" and val < 0:
+                    errors.append(f"{suite}: row {i} us_per_call={val} < 0")
+                elif key == "speedup_vs_reference" and val <= 0:
+                    errors.append(
+                        f"{suite}: row {i} speedup_vs_reference={val} <= 0")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, metavar="DIR",
+                    help="directory of fresh per-suite JSON "
+                         "(benchmarks.run --smoke --out-dir DIR)")
+    ap.add_argument("--committed", default=COMMITTED_DIR, metavar="DIR")
+    ap.add_argument("suites", nargs="*",
+                    help="suites to check (default: every committed suite "
+                         "that also exists under --fresh)")
+    args = ap.parse_args()
+
+    if args.suites:
+        suites = args.suites
+    else:
+        suites = sorted(
+            f[:-5] for f in os.listdir(args.committed) if f.endswith(".json")
+            and os.path.exists(os.path.join(args.fresh, f)))
+    if not suites:
+        print("check_bench: nothing to check (no overlapping suite JSON)",
+              file=sys.stderr)
+        sys.exit(1)
+
+    failures = []
+    for suite in suites:
+        cpath = os.path.join(args.committed, f"{suite}.json")
+        fpath = os.path.join(args.fresh, f"{suite}.json")
+        for path, side in ((cpath, "committed"), (fpath, "fresh")):
+            if not os.path.exists(path):
+                failures.append(f"{suite}: no {side} JSON at {path}")
+        if any(f.startswith(f"{suite}:") for f in failures):
+            continue
+        try:
+            failures += check_suite(suite, _load(cpath), _load(fpath))
+        except ValueError as e:
+            failures.append(str(e))
+
+    for line in failures:
+        print(f"FAIL {line}")
+    print(f"check_bench: {len(suites)} suite(s), {len(failures)} violation(s)")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,10 @@ EXP_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__)
                        "experiments", "bench")
 
 
-def save_rows(name: str, rows: list[dict]) -> None:
-    os.makedirs(EXP_DIR, exist_ok=True)
-    with open(os.path.join(EXP_DIR, f"{name}.json"), "w") as f:
+def save_rows(name: str, rows: list[dict], out_dir: str | None = None) -> None:
+    out_dir = out_dir or EXP_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
         json.dump(rows, f, indent=2)
 
 

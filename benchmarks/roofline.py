@@ -23,6 +23,7 @@ HBM_BW = 819e9             # bytes/s per chip
 GAIN_SHAPES = {
     "kernel_gain": dict(T=4096, n=2048),
     "kernel_gain_family": dict(m=64, T=1024, n=512),
+    "kernel_megastep": dict(m=64, T=1024, n=512),   # same shape: comparable
 }
 
 
@@ -61,6 +62,41 @@ def gain_kernel_rows() -> list[dict]:
                      + m * 4)                   # stats out, per agent blk
     rows.append(_gain_row("kernel_gain_family", f"m{m}xT{T}xn{n}",
                           flops, traffic))
+
+    # Whole-inner-step megastep kernel, same shape for comparability.  Two
+    # honest deltas vs the fused two-stage schedule (family kernel + XLA
+    # trigger/update):
+    # * eliminated_intermediate_bytes — the HBM round-trips that no longer
+    #   exist because stats/gains/alphas stay in VMEM and the gated update
+    #   consumes the g rows already resident: stats out+in (2*4m), gains
+    #   out+in (2m), alphas out+in (2m), the update's g re-read (mn) and
+    #   w read+write (2n).
+    # * phi_restream_saved_bytes — grad_J/Phi row slabs re-stream once per
+    #   (agent-block, T-tile) pair; MEGASTEP_BLOCK_M=32 vs the family
+    #   kernel's BLOCK_M=8 quarters the agent blocks, hence the revisits.
+    # Both are small next to the phi streaming term at this shape — the
+    # kernel's real win is dispatch structure, not bytes — which is exactly
+    # what an honest roofline should show.
+    from repro.kernels.gain import MEGASTEP_BLOCK_M
+    s = GAIN_SHAPES["kernel_megastep"]
+    m, T, n = s["m"], s["T"], s["n"]
+    # family FLOPs + trigger compare (m) + gated update (2mn + n)
+    flops = (2.0 * m * T * n + 2.0 * m * n * n + 6.0 * m * n
+             + m + 2.0 * m * n + n)
+    revisits_mega = (m / MEGASTEP_BLOCK_M) * (T / FAMILY_BLOCK_T)
+    traffic = 4.0 * (m * T * n                        # feature blocks
+                     + m * n * (T / FAMILY_BLOCK_T)   # g column blocks
+                     + revisits_mega * (n + n * n)    # grad_J + Phi slabs
+                     + m * n                          # full g rows
+                     + 2.0 * m + n                    # alpha_rand, ctl-ish, w
+                     + n + 2.0 * m)                   # w_next, alphas, gains
+    row = _gain_row("kernel_megastep", f"m{m}xT{T}xn{n}", flops, traffic)
+    revisits_family = (m / BLOCK_M) * (T / FAMILY_BLOCK_T)
+    row["eliminated_intermediate_bytes"] = 4.0 * (
+        2 * 4 * m + 2 * m + 2 * m + m * n + 2 * n)
+    row["phi_restream_saved_bytes"] = 4.0 * (
+        (revisits_family - revisits_mega) * (n + n * n))
+    rows.append(row)
     return rows
 
 

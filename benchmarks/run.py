@@ -4,13 +4,18 @@ comm-savings and kernel/roofline suites.
 Prints ``name,us_per_call,derived`` CSV per row (the repo convention) and
 writes full JSON to experiments/bench/.
 
-  PYTHONPATH=src python -m benchmarks.run              # everything
-  PYTHONPATH=src python -m benchmarks.run --only fig2  # one suite
-  PYTHONPATH=src python -m benchmarks.run --smoke      # seconds-scale CI pass
+  PYTHONPATH=src python -m benchmarks.run                   # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig2       # one suite
+  PYTHONPATH=src python -m benchmarks.run --only kernels,sweep_step  # several
+  PYTHONPATH=src python -m benchmarks.run --smoke           # seconds-scale CI
 
 ``--smoke`` shrinks every suite's grid to seconds-scale (tiny grids, few
 iterations) so the whole benchmark set runs inside CI; smoke results are
 NOT written to experiments/bench/ (they would overwrite the real numbers).
+``--out-dir DIR`` redirects the JSON elsewhere and writes even under
+``--smoke`` — that is how the CI bench-regression gate captures a fresh
+smoke run to validate against the committed schemas
+(``benchmarks.check_bench``).
 
 Store-backed figure regeneration (DESIGN.md §9):
 
@@ -76,9 +81,16 @@ def _derived(row: dict) -> str:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    ap.add_argument("--only", default=None, metavar="SUITE[,SUITE...]",
+                    help="run one or more comma-separated suites: "
+                         + ",".join(SUITES))
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale grids for CI; skips JSON output")
+                    help="seconds-scale grids for CI; skips JSON output "
+                         "(unless --out-dir is given)")
+    ap.add_argument("--out-dir", default=None, metavar="DIR", dest="out_dir",
+                    help="write per-suite JSON here instead of "
+                         "experiments/bench/; also enables JSON under "
+                         "--smoke (the bench-regression gate's input)")
     ap.add_argument("--store", default=None, metavar="ROOT",
                     help="SweepStore root: figure suites persist/reuse "
                          "their sweeps there (sweep_or_load)")
@@ -87,13 +99,19 @@ def main() -> None:
                     help="regenerate figure artifacts from this SweepStore "
                          "via the jax-free report pipeline; no device work")
     args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+    if only:
+        for name in only:
+            if name not in SUITES:
+                ap.error(f"unknown suite {name!r} "
+                         f"(choose from {', '.join(SUITES)})")
     if args.from_store:
-        if args.only not in (None, "report_regen"):
+        if only not in (None, ["report_regen"]):
             ap.error("--from-store regenerates through the report pipeline; "
                      "combine it only with --only report_regen")
         names = ["report_regen"]
     else:
-        names = [args.only] if args.only else list(SUITES)
+        names = only if only else list(SUITES)
 
     print("name,us_per_call,derived")
     failures = 0
@@ -108,7 +126,9 @@ def main() -> None:
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
             failures += 1
             continue
-        if not args.smoke:
+        if args.out_dir:
+            save_rows(name, rows, out_dir=args.out_dir)
+        elif not args.smoke:
             save_rows(name, rows)
         for row in rows:
             # subprocess suites report crashes as error rows rather than

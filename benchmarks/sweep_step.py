@@ -1,6 +1,6 @@
-"""Sweep-step microbenchmark: reference vs fused step backend (DESIGN.md §3).
+"""Sweep-step microbenchmark: reference vs fused vs megastep step backends.
 
-Two stages, swept over (m, T, n):
+Stages, swept over (m, T, n):
 
 * ``gain_family`` — the per-step gain-family evaluation
   (``gain_dispatch.mode_gains``), the exact stage the fused backend
@@ -10,18 +10,33 @@ Two stages, swept over (m, T, n):
   against ONE batched-agent ``gain_family_stats`` call (the call-count
   reduction is the headline: off-TPU the kernels run interpreted, so the
   ratio directly measures dispatch count, which is also what the TPU grid
-  sees).
+  sees).  ``step_backend="megastep"`` is not a separate row here — for
+  gain-only callers it takes the fused path by construction.
 * ``full_step`` — the whole gated-SGD inner step (sampling + gradients +
   gains + trigger + server update) via an N-iteration ``gated_sgd_core``
-  scan on a synthetic linear problem, reported per step.  Sampling and the
-  gradient pass dilute the gain-stage win here; both stages are recorded so
-  the JSON shows the stage speedup AND its end-to-end effect.
+  scan on a synthetic linear problem, reported per step.  The megastep
+  column is the tentpole: gains + trigger + gated update leave as ONE
+  kernel (agent block MEGASTEP_BLOCK_M=32 vs the family kernel's 8, so it
+  also runs a quarter of the grid programs), closing the Amdahl gap the
+  fused rows leave open.
+* ``attribution`` — per-stage cost split of the reference step:
+  ``sample_grad`` (sampling + per-agent gradients, measured by a scan that
+  stops there), ``gain_family`` (measured per call), and ``post_gain``
+  (trigger + gated update, DERIVED as full - sample_grad - gain_family and
+  clamped at 0 — it is the HBM-round-trip slice megastep eliminates).
+  Derived rows carry ``derived=true`` and inherit the noise of all three
+  measurements.
+* ``sweep_step`` — R runs vmapped through the full step (the sweep
+  engine's hot loop), reported per run-step.  On the pallas path the
+  megastep rows ride the kernel's native run-grid axis (custom_vmap):
+  R x m agents in one program per step instead of a kernel dispatch per
+  run.
 
 Rows carry ``speedup_vs_reference`` (reference time / this time, same stage
 and gain backend).  The committed non-smoke JSON
 (experiments/bench/sweep_step.json) is the perf baseline later PRs gate
-against.  The gate that must hold: fused > 1x at every m >= 32 shape on
-the PALLAS gain backend (both stages) — that is the path the fused step
+against.  The gate that must hold: megastep > fused > 1x at every m >= 32
+shape on the PALLAS gain backend full step — that is the path the fusion
 exists for.  The pure-XLA rows are informational: XLA already fuses the
 jnp reference inside one jitted program, so those ratios hover around 1
 and swing ±20-30% with this container's 2-core timing noise.
@@ -48,9 +63,14 @@ GAIN_SHAPES = [(8, 64, 32), (32, 64, 32), (128, 64, 32), (32, 256, 64),
 # pallas pair is measured at moderate m to keep the suite seconds-scale
 PALLAS_SHAPES = [(32, 64, 32), (128, 64, 32)]
 STEP_SHAPES = [(32, 64, 32), (128, 64, 32)]
+SWEEP_RUNS = 4
+SWEEP_SHAPES = [(32, 64, 32)]
 SMOKE_GAIN_SHAPES = [(8, 16, 8), (32, 16, 8)]
 SMOKE_PALLAS_SHAPES = [(8, 16, 8)]
 SMOKE_STEP_SHAPES = [(8, 16, 8)]
+SMOKE_SWEEP_SHAPES = [(8, 16, 8)]
+
+STEP_BACKENDS = ("reference", "fused", "megastep")
 
 
 def _median_time(fn, *args, reps: int = 20, trials: int = 7):
@@ -84,12 +104,7 @@ def _bench_gain_family(m, T, n, gain_backend, step_backend, reps, trials):
     return _median_time(fn, 1, grads, phi, reps=reps, trials=trials)
 
 
-def _bench_full_step(m, T, n, gain_backend, step_backend, num_iterations,
-                     reps, trials):
-    """One gated-SGD inner run on a synthetic linear problem, us per step."""
-    rng = np.random.default_rng(1)
-    w_true = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
-
+def _make_sample_all(T, n, w_true):
     def sample_all(rngs):
         def one(r):
             kf, kn = jax.random.split(r)
@@ -97,18 +112,69 @@ def _bench_full_step(m, T, n, gain_backend, step_backend, num_iterations,
             targets = phi @ w_true + 0.1 * jax.random.normal(kn, (T,))
             return phi, targets
         return jax.vmap(one)(rngs)
+    return sample_all
 
+
+def _core_runner(m, T, n, gain_backend, step_backend, num_iterations):
+    rng = np.random.default_rng(1)
+    w_true = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    sample_all = _make_sample_all(T, n, w_true)
     thresholds = jnp.full((num_iterations,), 1e-3, jnp.float32)
 
-    def run(key):
+    def run(key, mode_id=gain_dispatch.MODE_PRACTICAL):
         return gated_sgd_core(
-            key, jnp.zeros((n,)), gain_dispatch.MODE_PRACTICAL, thresholds,
+            key, jnp.zeros((n,)), mode_id, thresholds,
             0.5, sample_all, EPS, m, trace="summary",
             gain_backend=gain_backend, step_backend=step_backend)
+    return run
+
+
+def _bench_full_step(m, T, n, gain_backend, step_backend, num_iterations,
+                     reps, trials):
+    """One gated-SGD inner run on a synthetic linear problem, us per step."""
+    fn = jax.jit(_core_runner(m, T, n, gain_backend, step_backend,
+                              num_iterations))
+    us_total = _median_time(fn, jax.random.key(0), reps=reps, trials=trials)
+    return us_total / num_iterations
+
+
+def _bench_sample_grad(m, T, n, num_iterations, reps, trials):
+    """The step's pre-gain slice: sampling + per-agent gradients only."""
+    from repro.core import vfa as vfa_lib
+    rng = np.random.default_rng(1)
+    w_true = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    sample_all = _make_sample_all(T, n, w_true)
+
+    def run(key):
+        def step(w, rng_k):
+            rngs = jax.random.split(rng_k, m + 1)
+            phi_b, targets_b = sample_all(rngs[:-1])
+            grads = jax.vmap(vfa_lib.stochastic_gradient,
+                             in_axes=(None, 0, 0))(w, phi_b, targets_b)
+            return w - 1e-6 * jnp.sum(grads, axis=0), None
+        w, _ = jax.lax.scan(step, jnp.zeros((n,)),
+                            jax.random.split(key, num_iterations))
+        return w
 
     fn = jax.jit(run)
     us_total = _median_time(fn, jax.random.key(0), reps=reps, trials=trials)
     return us_total / num_iterations
+
+
+def _bench_sweep_step(m, T, n, gain_backend, step_backend, num_iterations,
+                      runs, reps, trials):
+    """R runs vmapped through the full step, us per (run, step).
+
+    The mode id rides in as per-run DATA (like the sweep engine feeds it),
+    which is also what keeps the reference path's optimization_barrier out
+    of the vmapped program.
+    """
+    run = _core_runner(m, T, n, gain_backend, step_backend, num_iterations)
+    fn = jax.jit(lambda keys, mids: jax.vmap(run)(keys, mids))
+    keys = jax.random.split(jax.random.key(0), runs)
+    mids = jnp.full((runs,), gain_dispatch.MODE_PRACTICAL, jnp.int32)
+    us_total = _median_time(fn, keys, mids, reps=reps, trials=trials)
+    return us_total / (num_iterations * runs)
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -116,7 +182,9 @@ def run(smoke: bool = False) -> list[dict]:
     gain_shapes = SMOKE_GAIN_SHAPES if smoke else GAIN_SHAPES
     pallas_shapes = SMOKE_PALLAS_SHAPES if smoke else PALLAS_SHAPES
     step_shapes = SMOKE_STEP_SHAPES if smoke else STEP_SHAPES
+    sweep_shapes = SMOKE_SWEEP_SHAPES if smoke else SWEEP_SHAPES
     num_iterations = 5 if smoke else 30
+    step_reps = max(reps // 4, 2)
     rows = []
 
     for backend, shapes in (("reference", gain_shapes),
@@ -133,13 +201,42 @@ def run(smoke: bool = False) -> list[dict]:
 
     for backend in ("reference", "pallas"):
         for (m, T, n) in step_shapes:
-            ref = _bench_full_step(m, T, n, backend, "reference",
-                                   num_iterations, max(reps // 4, 2), trials)
-            fus = _bench_full_step(m, T, n, backend, "fused",
-                                   num_iterations, max(reps // 4, 2), trials)
-            for sb, us in (("reference", ref), ("fused", fus)):
+            times = {sb: _bench_full_step(m, T, n, backend, sb,
+                                          num_iterations, step_reps, trials)
+                     for sb in STEP_BACKENDS}
+            for sb in STEP_BACKENDS:
                 rows.append(dict(
                     bench="sweep_step", stage="full_step", m=m, T=T, n=n,
-                    gain_backend=backend, step_backend=sb, us_per_call=us,
-                    speedup_vs_reference=ref / us))
+                    gain_backend=backend, step_backend=sb,
+                    us_per_call=times[sb],
+                    speedup_vs_reference=times["reference"] / times[sb]))
+            # per-stage attribution of the reference step: what megastep
+            # can and cannot touch (sample_grad is outside the fusion
+            # boundary — the Amdahl floor)
+            sample = _bench_sample_grad(m, T, n, num_iterations,
+                                        step_reps, trials)
+            gain = _bench_gain_family(m, T, n, backend, "reference",
+                                      reps, trials)
+            post = max(times["reference"] - sample - gain, 0.0)
+            for comp, us, derived in (("sample_grad", sample, False),
+                                      ("gain_family", gain, False),
+                                      ("post_gain", post, True)):
+                rows.append(dict(
+                    bench="sweep_step", stage="attribution", m=m, T=T, n=n,
+                    gain_backend=backend, component=comp, us_per_call=us,
+                    fraction_of_step=us / times["reference"],
+                    derived=derived))
+
+    for backend in ("reference", "pallas"):
+        for (m, T, n) in sweep_shapes:
+            times = {sb: _bench_sweep_step(m, T, n, backend, sb,
+                                           num_iterations, SWEEP_RUNS,
+                                           step_reps, trials)
+                     for sb in STEP_BACKENDS}
+            for sb in STEP_BACKENDS:
+                rows.append(dict(
+                    bench="sweep_step", stage="sweep_step", m=m, T=T, n=n,
+                    runs=SWEEP_RUNS, gain_backend=backend, step_backend=sb,
+                    us_per_call=times[sb],
+                    speedup_vs_reference=times["reference"] / times[sb]))
     return rows

@@ -186,8 +186,9 @@ class GatedSGDConfig:
     random_tx_prob: float = 0.5   # for mode == "random" (paper's Fig 2 baseline)
     # 'reference' | 'pallas'; None reads REPRO_GAIN_BACKEND at trace time
     gain_backend: Optional[str] = None
-    # 'reference' | 'fused' (shared-projection gain family, DESIGN.md §3);
-    # None reads REPRO_STEP_BACKEND at trace time
+    # 'reference' | 'fused' (shared-projection gain family) | 'megastep'
+    # (whole-inner-step fusion, DESIGN.md §3); None reads
+    # REPRO_STEP_BACKEND at trace time
     step_backend: Optional[str] = None
 
     def __post_init__(self):
@@ -235,8 +236,11 @@ def gated_sgd_core(
     mask-selects the configured one (eq. 13 / 15 / Remark 4), applies the
     trigger (eq. 9 — or the random/always/never baselines), and performs the
     server update (eq. 6).  ``step_backend="fused"`` evaluates the family
-    from one shared projection pass (DESIGN.md §3); ``"reference"``
-    (default) is the bitwise-pinned original.
+    from one shared projection pass (DESIGN.md §3); ``"megastep"`` fuses
+    the *entire* post-gradient step — gains, trigger, gated update — into
+    one ``gain_dispatch.megastep`` dispatch (a single VMEM-resident kernel
+    with ``gain_backend="pallas"``); ``"reference"`` (default) is the
+    bitwise-pinned original.
 
     ``trace`` selects what the scan materializes: ``"full"`` (default)
     stacks the per-iteration ``InnerTrace`` exactly as the bit-compat
@@ -247,6 +251,10 @@ def gated_sgd_core(
     N = thresholds.shape[0]
     phi_matrix = terms.phi_matrix if terms is not None else None
     trace = resolve_trace(trace)
+    # Resolved once at trace time (same contract as the per-call resolution
+    # inside gain_dispatch: flipping the env var mid-process must not reuse
+    # already-jitted callables).
+    step_backend_r = gain_dispatch._resolve_step(step_backend)
 
     def step_body(w, k, rng_k):
         """One gated-SGD step: (w, k, rng_k) -> (w_next, alphas, gains).
@@ -259,6 +267,15 @@ def gated_sgd_core(
         grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
             w, phi_b, targets_b)
         grad_j = terms.grad(w) if terms is not None else None
+        if step_backend_r == "megastep":
+            # the whole rest of the step — gains, trigger, gated update —
+            # is one dispatch; rngs[-1] feeds the same bernoulli draw as
+            # the reference path so RNG streams match bitwise
+            alpha_rand = jax.random.bernoulli(
+                rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
+            return gain_dispatch.megastep(
+                mode_id, w, grads, phi_b, eps, thresholds[k], alpha_rand,
+                grad_j, phi_matrix, backend=gain_backend)
         gains = gain_dispatch.mode_gains(
             mode_id, grads, phi_b, eps, grad_j, phi_matrix,
             backend=gain_backend, step_backend=step_backend)

@@ -29,15 +29,21 @@ program); everything else is data:
   O(T n) projection work: pure jnp, or the Pallas kernels in
   ``repro.kernels.gain`` (interpret mode off-TPU).  Default from
   ``REPRO_GAIN_BACKEND``.
-* ``step_backend`` ("reference" | "fused") picks the *structure* of the
-  per-step gain family.  "reference" is the original three independent
-  vmapped passes (bitwise-unchanged — the oracle the parity tests pin
-  against).  "fused" computes the projection ``proj = phi @ g`` once per
-  agent per step and derives practical/norm/theoretical from the shared
-  ``family_stats``; combined with ``backend="pallas"`` the whole family is
-  one batched-agent kernel call instead of 3 x m dispatches.  Default from
-  ``REPRO_STEP_BACKEND``.  Fused matches reference to <= 1e-5 across all
-  six modes (tests/test_sweep.py).
+* ``step_backend`` ("reference" | "fused" | "megastep") picks the
+  *structure* of the per-step gain family.  "reference" is the original
+  three independent vmapped passes (bitwise-unchanged — the oracle the
+  parity tests pin against).  "fused" computes the projection
+  ``proj = phi @ g`` once per agent per step and derives practical/norm/
+  theoretical from the shared ``family_stats``; combined with
+  ``backend="pallas"`` the whole family is one batched-agent kernel call
+  instead of 3 x m dispatches.  "megastep" widens the fusion boundary to
+  the whole inner step: gains, the eq.-9 trigger, and the eq.-6 gated
+  server update execute as ONE ``megastep`` dispatch — with
+  ``backend="pallas"`` a single VMEM-resident kernel whose scratch carries
+  the statistics and the gated gradient sum, and whose grid leads with the
+  sweep's run axis (``jax.vmap`` over runs batches the *grid*, not the
+  call).  Default from ``REPRO_STEP_BACKEND``.  Both fused and megastep
+  match reference to <= 1e-5 across all six modes (tests/test_sweep.py).
 
 The env-var defaults are read at trace time: processes that flip them
 mid-run must not reuse already-jitted callables (the repo's test/CI jobs
@@ -58,7 +64,7 @@ from repro.kernels import ops as _kernel_ops
 Array = jax.Array
 
 BACKENDS = ("reference", "pallas")
-STEP_BACKENDS = ("reference", "fused")
+STEP_BACKENDS = ("reference", "fused", "megastep")
 
 # Mode ids shared with repro.core.algorithm1 (kept here so the gain selection
 # and the trigger selection use the same enum without a circular import).
@@ -210,11 +216,12 @@ def mode_gains(
     The selection is branchless so ``mode_id`` can vary across a vmapped
     sweep without retracing.
 
-    ``step_backend="fused"`` derives all three gains from one shared
+    ``step_backend="fused"`` (and "megastep", for gain-only callers that
+    have no trigger/update to fuse) derives all three gains from one shared
     ``family_stats`` pass; ``"reference"`` (default) keeps the original
     three independent vmapped passes, bitwise unchanged.
     """
-    if _resolve_step(step_backend) == "fused":
+    if _resolve_step(step_backend) in ("fused", "megastep"):
         stats = family_stats(grads, phi_t, grad_j, phi_matrix,
                              backend=backend)
         return gains_from_stats(mode_id, stats, eps, phi_t.shape[1])
@@ -228,6 +235,72 @@ def mode_gains(
             lambda gi: theoretical_gain(gi, grad_j, phi_matrix, eps))(grads)
     return jnp.where(mode_id == MODE_THEORETICAL, theo,
                      jnp.where(mode_id == MODE_NORM, norm, prac))
+
+
+def megastep(
+    mode_id: Array | int,
+    w: Array,
+    grads: Array,
+    phi_t: Array,
+    eps: float,
+    threshold: Array,
+    alpha_rand: Array,
+    grad_j: Optional[Array],
+    phi_matrix: Optional[Array],
+    *,
+    backend: Optional[str] = None,
+) -> tuple[Array, Array, Array]:
+    """One whole gated-SGD inner step: gains + trigger + eq.-6 update.
+
+    The widest fusion boundary (``step_backend="megastep"``): everything
+    Algorithm 1's step does after the stochastic gradients comes back in a
+    single dispatch — mode-selected gains, the eq.-9 trigger with the
+    random/always/never baselines, and the gated server update.
+
+    Args:
+      mode_id:    scalar int (static or traced) in ``range(len(MODES))``.
+      w:          (n,) current server weights.
+      grads:      (m, n) per-agent stochastic gradients.
+      phi_t:      (m, T, n) per-agent local feature batches.
+      threshold:  scalar lambda_k (traced — a per-iteration schedule entry).
+      alpha_rand: (m,) pre-drawn f32 bernoulli decisions for random mode.
+      grad_j:     (n,) exact grad J(w), or None when no model is available.
+      phi_matrix: (n, n) exact second moment, or None.
+
+    Returns ``(w_next (n,), alphas (m,), gains (m,))``.
+
+    ``backend="pallas"`` executes the step as ONE VMEM-resident kernel
+    (``repro.kernels.gain.megastep``): the family statistics, gains, the
+    transmit mask, and the gated gradient sum never leave VMEM, and
+    ``jax.vmap`` over runs batches the kernel *grid* (R runs x m agents in
+    one program) instead of dispatching a kernel per run.
+    ``backend="reference"`` is the pure-jnp emulation built from the same
+    shared ``family_stats`` the fused step backend uses.
+    """
+    have_model = grad_j is not None and phi_matrix is not None
+    if _resolve(backend) == "pallas":
+        ctl = jnp.stack([jnp.asarray(threshold, jnp.float32),
+                         jnp.asarray(mode_id).astype(jnp.float32)])
+        return _kernel_ops.megastep(
+            phi_t, grads, w, ctl, alpha_rand,
+            grad_j if have_model else None,
+            phi_matrix if have_model else None, eps=eps)
+    stats = family_stats(grads, phi_t, grad_j, phi_matrix, backend=backend)
+    gains = gains_from_stats(mode_id, stats, eps, phi_t.shape[1])
+    gate = (gains <= -threshold).astype(jnp.float32)
+    m = grads.shape[0]
+    alphas = jnp.where(mode_id == MODE_ALWAYS, jnp.ones(m),
+                       jnp.where(mode_id == MODE_NEVER, jnp.zeros(m),
+                                 jnp.where(mode_id == MODE_RANDOM,
+                                           alpha_rand, gate)))
+    # Same constant-folding barrier as gated_sgd_core's reference path (see
+    # the comment there): keeps per-run (concrete mode_id) programs
+    # bit-compatible with the traced-mode sweep program.
+    if not isinstance(mode_id, jax.core.Tracer):
+        alphas = jax.lax.optimization_barrier(alphas)
+    gf = grads.astype(jnp.float32)
+    upd = jnp.einsum("m,mn->n", alphas, gf) / jnp.maximum(jnp.sum(alphas), 1.0)
+    return w - eps * upd, alphas, gains
 
 
 def tree_gain(g: Any, cfg: Any,

@@ -93,8 +93,8 @@ class SweepSpec:
     random_tx_prob: Union[float, np.ndarray] = 0.5
     # 'reference' | 'pallas'; None resolves REPRO_GAIN_BACKEND at trace time
     gain_backend: Optional[str] = None
-    # 'reference' | 'fused' shared-projection step (DESIGN.md §3); None
-    # resolves REPRO_STEP_BACKEND at trace time
+    # 'reference' | 'fused' shared-projection step | 'megastep' whole-step
+    # fusion (DESIGN.md §3); None resolves REPRO_STEP_BACKEND at trace time
     step_backend: Optional[str] = None
     batching: str = "vmap"          # 'vmap' | 'map'
     trace: Union[str, TraceSpec] = "full"   # 'full' | 'summary' | TraceSpec

@@ -26,11 +26,33 @@ HBM.  Two entry points:
   is computed twice.  One ``pallas_call`` replaces the 3 x m per-agent
   dispatches of the reference path — the call-count reduction
   ``benchmarks/sweep_step.py`` measures.
+
+* ``megastep`` — the whole-inner-step kernel (DESIGN.md §7,
+  ``step_backend="megastep"``).  One ``pallas_call`` executes everything
+  Algorithm 1's gated-SGD step does after the gradients exist: the family
+  statistics above, the per-mode gain derivation, the eq.-9 threshold
+  compare (plus the random/always/never baseline gating), and the gated
+  aggregate + server weight update (eq. 6) — none of the intermediates
+  (per-agent stats, gains, transmit mask, the gated gradient sum) ever
+  round-trips through HBM between XLA ops.  The grid carries a leading
+  *run-batch* axis ``(R, m-blocks, T-tiles, n-tiles)``: the sweep engine's
+  vmap over the flattened run axis lands on a ``jax.custom_batching``
+  rule that feeds all R runs x m agents into ONE kernel program instead of
+  batching the kernel per run.  The gated gradient sum accumulates in a
+  run-wide VMEM scratch row as each agent block's gains complete; the last
+  agent block of a run writes ``w_next``.
+
+Block constants below are *defaults*: every kernel entry point takes
+per-call overrides, and ``REPRO_KERNEL_BLOCKS`` (comma-separated
+``name=int`` pairs, e.g. ``block_m=4,family_block_t=64``) rebinds them
+process-wide — read at trace time, so smoke-sized problems and bench-sized
+shapes stop sharing one hard-coded tiling.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -50,8 +72,46 @@ BLOCK_M = 8
 FAMILY_BLOCK_T = 128
 FAMILY_BLOCK_N = 256
 
+# Megastep agent block: larger than the family kernel's because the gated
+# update needs the full (BM, n) gradient rows resident per agent block
+# anyway, and fewer agent blocks directly cut the Phi/grad_J re-streaming
+# term of the roofline model (revisits = (m/BM) * (T/BT)) as well as the
+# interpreter's per-grid-step overhead off-TPU.  BM*BT*BN*4B = 4 MB of
+# VMEM for the feature block — comfortably under the ~16 MB budget.
+MEGASTEP_BLOCK_M = 32
+
 # Column order of the (m, 4) stats array gain_family_stats emits.
 STAT_GNORM2, STAT_SUMPROJ2, STAT_GDOTJ, STAT_QUAD = range(4)
+
+# Trigger-mode ids, mirrored from repro.core.gain_dispatch.MODES (kept as
+# plain ints here so the kernels stay import-light; pinned by a test).
+_MODE_THEORETICAL, _MODE_PRACTICAL, _MODE_NORM = 0, 1, 2
+_MODE_RANDOM, _MODE_ALWAYS, _MODE_NEVER = 3, 4, 5
+
+_BLOCKS_ENV = "REPRO_KERNEL_BLOCKS"
+
+
+def env_blocks() -> dict[str, int]:
+    """Parse ``REPRO_KERNEL_BLOCKS`` into a name->int override map."""
+    raw = os.environ.get(_BLOCKS_ENV, "")
+    out: dict[str, int] = {}
+    for item in raw.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "=" not in item:
+            raise ValueError(
+                f"{_BLOCKS_ENV} entries must be name=int, got {item!r}")
+        name, _, val = item.partition("=")
+        out[name.strip()] = int(val)
+    return out
+
+
+def _block(name: str, override: Optional[int], default: int) -> int:
+    """Per-call override > env override > module default (trace-time)."""
+    if override is not None:
+        return override
+    return env_blocks().get(name, default)
 
 
 def _matvec_kernel(phi_ref, g_ref, out_ref):
@@ -67,11 +127,12 @@ def _matvec_kernel(phi_ref, g_ref, out_ref):
 
 
 def gain_matvec(phi: Array, g: Array, *, interpret: bool = True,
-                block_t: int = BLOCK_T, block_n: int = BLOCK_N) -> Array:
+                block_t: Optional[int] = None,
+                block_n: Optional[int] = None) -> Array:
     """proj = phi @ g via the tiled kernel.  phi: (T, n); g: (n,) -> (T,)."""
     T, n = phi.shape
-    bt = min(block_t, T)
-    bn = min(block_n, n)
+    bt = min(_block("block_t", block_t, BLOCK_T), T)
+    bn = min(_block("block_n", block_n, BLOCK_N), n)
     pad_t = (-T) % bt
     pad_n = (-n) % bn
     if pad_t or pad_n:
@@ -165,9 +226,10 @@ def _family_kernel(with_model: bool, phi_ref, g_ref, *rest):
 def gain_family_stats(phi: Array, g: Array,
                       grad_j: Optional[Array] = None,
                       phi_matrix: Optional[Array] = None,
-                      *, interpret: bool = True, block_m: int = BLOCK_M,
-                      block_t: int = FAMILY_BLOCK_T,
-                      block_n: int = FAMILY_BLOCK_N) -> Array:
+                      *, interpret: bool = True,
+                      block_m: Optional[int] = None,
+                      block_t: Optional[int] = None,
+                      block_n: Optional[int] = None) -> Array:
     """Per-agent gain-family sufficient statistics in one fused pass.
 
     Args:
@@ -186,9 +248,9 @@ def gain_family_stats(phi: Array, g: Array,
     """
     with_model = grad_j is not None and phi_matrix is not None
     m, T, n = phi.shape
-    bm = min(block_m, m)
-    bt = min(block_t, T)
-    bn = min(block_n, n)
+    bm = min(_block("block_m", block_m, BLOCK_M), m)
+    bt = min(_block("family_block_t", block_t, FAMILY_BLOCK_T), T)
+    bn = min(_block("family_block_n", block_n, FAMILY_BLOCK_N), n)
     pad_m = (-m) % bm
     pad_t = (-T) % bt
     pad_n = (-n) % bn
@@ -226,3 +288,285 @@ def gain_family_stats(phi: Array, g: Array,
         interpret=interpret,
     )(*operands)
     return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Whole-inner-step megastep kernel (gain family + trigger + gated update).
+# ---------------------------------------------------------------------------
+
+
+def _megastep_kernel(with_model: bool, pm_batched: bool, eps: float,
+                     num_samples: int, num_agents: int, block_m: int,
+                     *refs):
+    """Kernel body: one whole gated-SGD step, grid (R, m-blk, T-tile, n-tile).
+
+    Tiles accumulate exactly like ``_family_kernel`` (projection scratch per
+    (run, agent-block, T-tile); n-scale stats on the first T-tile only), but
+    the statistics stay in VMEM scratch instead of leaving as an output:
+    when an agent block's statistics complete (last T-tile, last n-tile) the
+    gains are derived, the trigger fires, the block's transmit mask and
+    gains are written, and the gated gradient sum accumulates into a
+    run-wide scratch row; the last agent block of each run writes
+    ``w_next = w - eps * upd / max(cnt, 1)`` (eq. 6).  Per-run control
+    scalars ride in as a (R, 2) ``[threshold, mode_id]`` array.
+    """
+    if with_model:
+        (phi_ref, gcol_ref, gfull_ref, ctl_ref, arand_ref, w_ref,
+         gj_ref, pm_ref, wout_ref, aout_ref, gout_ref,
+         proj_ref, stats_ref, upd_ref, cnt_ref) = refs
+    else:
+        (phi_ref, gcol_ref, gfull_ref, ctl_ref, arand_ref, w_ref,
+         wout_ref, aout_ref, gout_ref,
+         proj_ref, stats_ref, upd_ref, cnt_ref) = refs
+    ai = pl.program_id(1)
+    ti = pl.program_id(2)
+    ni = pl.program_id(3)
+    na = pl.num_programs(1)
+    nt = pl.num_programs(2)
+    nn = pl.num_programs(3)
+    first = jnp.logical_and(ti == 0, ni == 0)
+    last = jnp.logical_and(ti == nt - 1, ni == nn - 1)
+
+    @pl.when(jnp.logical_and(ai == 0, first))
+    def _init_run():
+        upd_ref[...] = jnp.zeros_like(upd_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(first)
+    def _init_stats():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    @pl.when(ni == 0)
+    def _init_proj():
+        proj_ref[...] = jnp.zeros_like(proj_ref)
+
+    phi = phi_ref[0].astype(jnp.float32)            # (BM, BT, BN)
+    g = gcol_ref[0].astype(jnp.float32)             # (BM, BN)
+    proj_ref[...] += jax.lax.dot_general(
+        phi, g, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)         # (BM, BT)
+
+    @pl.when(ti == 0)
+    def _vector_stats():
+        stats_ref[:, STAT_GNORM2] += jnp.sum(g * g, axis=-1)
+        if with_model:
+            gj = gj_ref[0].astype(jnp.float32)                  # (BN,)
+            pm = (pm_ref[0] if pm_batched else
+                  pm_ref[...]).astype(jnp.float32)              # (BN, n_pad)
+            gfull = gfull_ref[0].astype(jnp.float32)            # (BM, n_pad)
+            stats_ref[:, STAT_GDOTJ] += g @ gj
+            stats_ref[:, STAT_QUAD] += jnp.sum(
+                jnp.dot(g, pm, preferred_element_type=jnp.float32) * gfull,
+                axis=-1)
+
+    @pl.when(ni == nn - 1)
+    def _projection_stats():
+        p = proj_ref[...]
+        stats_ref[:, STAT_SUMPROJ2] += jnp.sum(p * p, axis=-1)
+
+    @pl.when(last)
+    def _gate_and_update():
+        s = stats_ref[...]
+        prac = -eps * s[:, STAT_GNORM2] + eps**2 * s[:, STAT_SUMPROJ2] / num_samples
+        norm = -eps * s[:, STAT_GNORM2]
+        if with_model:
+            theo = -eps * s[:, STAT_GDOTJ] + eps**2 * s[:, STAT_QUAD]
+        else:
+            theo = prac   # spec validation keeps mode != theoretical
+        thresh = ctl_ref[0, 0]
+        mode = ctl_ref[0, 1]
+        gains = jnp.where(mode == _MODE_THEORETICAL, theo,
+                          jnp.where(mode == _MODE_NORM, norm, prac))
+        gate = (gains <= -thresh).astype(jnp.float32)
+        alphas = jnp.where(mode == _MODE_ALWAYS, 1.0,
+                           jnp.where(mode == _MODE_NEVER, 0.0,
+                                     jnp.where(mode == _MODE_RANDOM,
+                                               arand_ref[0], gate)))
+        # zero padded agents so they never transmit (the gated mean divides
+        # by the transmitter count — a phantom always-mode agent would skew
+        # it); 2D iota then squeeze keeps the op TPU-legal
+        idx = ai * block_m + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, 1), 0)[:, 0]
+        alphas = alphas * (idx < num_agents).astype(jnp.float32)
+        gout_ref[...] = gains[None]
+        aout_ref[...] = alphas[None]
+        gfull = gfull_ref[0].astype(jnp.float32)                # (BM, n_pad)
+        upd_ref[...] += jnp.dot(alphas[None, :], gfull,
+                                preferred_element_type=jnp.float32)
+        cnt_ref[...] += jnp.sum(alphas)[None, None]
+
+    @pl.when(jnp.logical_and(ai == na - 1, last))
+    def _write_weights():
+        w = w_ref[0].astype(jnp.float32)                        # (n_pad,)
+        upd = upd_ref[0] / jnp.maximum(cnt_ref[0, 0], 1.0)
+        wout_ref[...] = (w - eps * upd)[None]
+
+
+def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
+                  alpha_rand: Array,
+                  grad_j: Optional[Array] = None,
+                  phi_matrix: Optional[Array] = None,
+                  *, eps: float, interpret: bool = True,
+                  block_m: Optional[int] = None,
+                  block_t: Optional[int] = None,
+                  block_n: Optional[int] = None
+                  ) -> tuple[Array, Array, Array]:
+    """One whole gated-SGD inner step for R runs in a single ``pallas_call``.
+
+    Args (leading axis R = batched runs; the sweep engine's run axis):
+      phi:        (R, m, T, n) per-agent local feature batches.
+      g:          (R, m, n) per-agent stochastic gradients.
+      w:          (R, n) current server weights.
+      ctl:        (R, 2) f32 per-run control ``[threshold, mode_id]``.
+      alpha_rand: (R, m) pre-drawn f32 bernoulli decisions (random mode).
+      grad_j:     (R, n) exact grad J(w), or None when no model is given.
+      phi_matrix: (n, n) grid-shared — or (R, n, n) per-run — exact second
+                  moment Phi, or None.
+
+    Returns ``(w_next (R, n), alphas (R, m), gains (R, m))`` — everything
+    Algorithm 1's step emits after the gradients: eq. 13/15/Remark-4 gains
+    selected by mode, the eq.-9 trigger (with the random/always/never
+    baselines), and the eq.-6 server update, with no HBM round-trip between
+    the stages.
+    """
+    with_model = grad_j is not None and phi_matrix is not None
+    R, m, T, n = phi.shape
+    bm = min(_block("megastep_block_m", block_m, MEGASTEP_BLOCK_M), m)
+    bt = min(_block("family_block_t", block_t, FAMILY_BLOCK_T), T)
+    bn = min(_block("family_block_n", block_n, FAMILY_BLOCK_N), n)
+    pad_m = (-m) % bm
+    pad_t = (-T) % bt
+    pad_n = (-n) % bn
+    if pad_m or pad_t or pad_n:
+        # zero padding is exact: padded rows/columns contribute 0 to every
+        # statistic and to the gated update, and padded agents are masked
+        # out of the transmit count in-kernel
+        phi = jnp.pad(phi, ((0, 0), (0, pad_m), (0, pad_t), (0, pad_n)))
+        g = jnp.pad(g, ((0, 0), (0, pad_m), (0, pad_n)))
+        alpha_rand = jnp.pad(alpha_rand, ((0, 0), (0, pad_m)))
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+        if with_model:
+            grad_j = jnp.pad(grad_j, ((0, 0), (0, pad_n)))
+            phi_matrix = jnp.pad(
+                phi_matrix, ((0, 0),) * (phi_matrix.ndim - 2)
+                + ((0, pad_n), (0, pad_n)))
+    _, mp, Tp, np_ = phi.shape
+    grid = (R, mp // bm, Tp // bt, np_ // bn)
+    in_specs = [
+        pl.BlockSpec((1, bm, bt, bn), lambda r, a, t, i: (r, a, t, i)),
+        pl.BlockSpec((1, bm, bn), lambda r, a, t, i: (r, a, i)),
+        pl.BlockSpec((1, bm, np_), lambda r, a, t, i: (r, a, 0)),
+        pl.BlockSpec((1, 2), lambda r, a, t, i: (r, 0)),
+        pl.BlockSpec((1, bm), lambda r, a, t, i: (r, a)),
+        pl.BlockSpec((1, np_), lambda r, a, t, i: (r, 0)),
+    ]
+    operands = [phi, g, g, ctl, alpha_rand, w]
+    pm_batched = with_model and phi_matrix.ndim == 3
+    if with_model:
+        in_specs.append(pl.BlockSpec((1, bn), lambda r, a, t, i: (r, i)))
+        if pm_batched:
+            in_specs.append(
+                pl.BlockSpec((1, bn, np_), lambda r, a, t, i: (r, i, 0)))
+        else:
+            in_specs.append(
+                pl.BlockSpec((bn, np_), lambda r, a, t, i: (i, 0)))
+        operands += [grad_j, phi_matrix]
+    w_next, alphas, gains = pl.pallas_call(
+        functools.partial(_megastep_kernel, with_model, pm_batched, eps,
+                          T, m, bm),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, np_), lambda r, a, t, i: (r, 0)),
+            pl.BlockSpec((1, bm), lambda r, a, t, i: (r, a)),
+            pl.BlockSpec((1, bm), lambda r, a, t, i: (r, a)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, np_), jnp.float32),
+            jax.ShapeDtypeStruct((R, mp), jnp.float32),
+            jax.ShapeDtypeStruct((R, mp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bt), jnp.float32),    # projection accumulator
+            pltpu.VMEM((bm, 4), jnp.float32),     # family statistics
+            pltpu.VMEM((1, np_), jnp.float32),    # gated gradient sum
+            pltpu.VMEM((1, 1), jnp.float32),      # transmitter count
+        ],
+        interpret=interpret,
+    )(*operands)
+    return w_next[:, :n], alphas[:, :m], gains[:, :m]
+
+
+@functools.lru_cache(maxsize=None)
+def _megastep_batched(with_model: bool, eps: float, interpret: bool,
+                      block_m: Optional[int], block_t: Optional[int],
+                      block_n: Optional[int]):
+    """Per-run megastep with a ``custom_vmap`` rule that turns the sweep
+    engine's vmap over runs into the kernel's leading grid axis.
+
+    The base function services per-run callers (and the bit-compat
+    ``batching="map"`` path) as an R=1 grid; under ``jax.vmap`` the rule
+    re-dispatches ONE ``megastep_call`` whose grid leads with the batch
+    axis — R runs x m agents in the same program, never a kernel per run.
+    A grid-shared ``phi_matrix`` (the common case) stays unbatched all the
+    way into the kernel's BlockSpecs instead of being broadcast R times.
+    """
+    kw = dict(eps=eps, interpret=interpret, block_m=block_m,
+              block_t=block_t, block_n=block_n)
+
+    def _call(phi, g, w, ctl, arand, grad_j=None, phi_matrix=None):
+        return megastep_call(phi, g, w, ctl, arand, grad_j, phi_matrix, **kw)
+
+    if with_model:
+        @jax.custom_batching.custom_vmap
+        def step(phi, g, w, ctl, arand, grad_j, phi_matrix):
+            out = _call(phi[None], g[None], w[None], ctl[None], arand[None],
+                        grad_j[None], phi_matrix)
+            return jax.tree.map(lambda x: x[0], out)
+
+        @step.def_vmap
+        def _rule(axis_size, in_batched, phi, g, w, ctl, arand, grad_j,
+                  phi_matrix):
+            def up(x, b):
+                return x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+            args = [up(a, b) for a, b in zip(
+                (phi, g, w, ctl, arand, grad_j), in_batched[:6])]
+            # phi_matrix: batched => (R, n, n) per-run slabs; unbatched =>
+            # shared (n, n), streamed once for every run's grid programs
+            out = _call(*args, phi_matrix)
+            return out, (True, True, True)
+    else:
+        @jax.custom_batching.custom_vmap
+        def step(phi, g, w, ctl, arand):
+            out = _call(phi[None], g[None], w[None], ctl[None], arand[None])
+            return jax.tree.map(lambda x: x[0], out)
+
+        @step.def_vmap
+        def _rule(axis_size, in_batched, phi, g, w, ctl, arand):
+            def up(x, b):
+                return x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+            out = _call(*[up(a, b) for a, b in zip(
+                (phi, g, w, ctl, arand), in_batched)])
+            return out, (True, True, True)
+
+    return step
+
+
+def megastep(phi: Array, g: Array, w: Array, ctl: Array, alpha_rand: Array,
+             grad_j: Optional[Array] = None,
+             phi_matrix: Optional[Array] = None,
+             *, eps: float, interpret: bool = True,
+             block_m: Optional[int] = None, block_t: Optional[int] = None,
+             block_n: Optional[int] = None) -> tuple[Array, Array, Array]:
+    """Per-run (no leading R axis) whole-step kernel; vmap-aware.
+
+    Shapes are ``megastep_call``'s without the leading run axis; vmapping
+    this function batches the *kernel grid*, not the call.
+    """
+    step = _megastep_batched(
+        grad_j is not None and phi_matrix is not None, eps, interpret,
+        block_m, block_t, block_n)
+    if grad_j is None or phi_matrix is None:
+        return step(phi, g, w, ctl, alpha_rand)
+    return step(phi, g, w, ctl, alpha_rand, grad_j, phi_matrix)

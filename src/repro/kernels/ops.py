@@ -14,6 +14,7 @@ import jax
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gain import gain_family_stats as _gain_family_stats
 from repro.kernels.gain import gain_matvec as _gain_matvec
+from repro.kernels.gain import megastep as _megastep
 from repro.kernels.gain import practical_gain as _practical_gain
 from repro.kernels.ssd_scan import ssd_chunked_pallas as _ssd
 
@@ -48,6 +49,16 @@ def gain_family_stats(phi: Array, g: Array, grad_j=None,
     with an exact model, (m, 2) without (the model-free kernel variant)."""
     return _gain_family_stats(phi, g, grad_j, phi_matrix,
                               interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def megastep(phi: Array, g: Array, w: Array, ctl: Array, alpha_rand: Array,
+             grad_j=None, phi_matrix=None, *,
+             eps: float) -> tuple[Array, Array, Array]:
+    """One whole gated-SGD inner step (stats + gains + trigger + eq.-6
+    update) in a single kernel; vmapping over runs batches the grid."""
+    return _megastep(phi, g, w, ctl, alpha_rand, grad_j, phi_matrix,
+                     eps=eps, interpret=_default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

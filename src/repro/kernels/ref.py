@@ -40,6 +40,35 @@ def gain_family_stats_ref(phi: Array, g: Array, grad_j: Array = None,
     return jnp.stack(cols, axis=-1)
 
 
+def megastep_ref(phi: Array, g: Array, w: Array, ctl: Array,
+                 alpha_rand: Array, grad_j: Array = None,
+                 phi_matrix: Array = None, *,
+                 eps: float) -> tuple[Array, Array, Array]:
+    """Whole-inner-step oracle (one run; vmap for the R axis).
+
+    phi: (m, T, n); g: (m, n); w: (n,); ctl: (2,) f32 [threshold, mode_id];
+    alpha_rand: (m,) pre-drawn bernoulli decisions.  Returns
+    (w_next (n,), alphas (m,), gains (m,)) — mode-selected gain (eq.
+    13/15/Remark 4), the eq.-9 trigger with random/always/never baselines,
+    and the eq.-6 gated server update.
+    """
+    stats = gain_family_stats_ref(phi, g, grad_j, phi_matrix)
+    T = phi.shape[1]
+    prac = -eps * stats[:, 0] + eps**2 * stats[:, 1] / T
+    norm = -eps * stats[:, 0]
+    theo = (-eps * stats[:, 2] + eps**2 * stats[:, 3]
+            if stats.shape[-1] == 4 else prac)
+    thresh, mode = ctl[0], ctl[1]
+    gains = jnp.where(mode == 0, theo, jnp.where(mode == 2, norm, prac))
+    gate = (gains <= -thresh).astype(jnp.float32)
+    alphas = jnp.where(mode == 4, 1.0,
+                       jnp.where(mode == 5, 0.0,
+                                 jnp.where(mode == 3, alpha_rand, gate)))
+    gf = g.astype(jnp.float32)
+    upd = alphas @ gf / jnp.maximum(jnp.sum(alphas), 1.0)
+    return w.astype(jnp.float32) - eps * upd, alphas, gains
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                         window: int = 0) -> Array:
     """q: (B, Lq, H, d); k/v: (B, Lk, KVH, d) with KVH | H (GQA)."""

@@ -1,0 +1,94 @@
+"""Bench regression gate (benchmarks.check_bench): jax-free schema checks.
+
+The gate compares a fresh --smoke run's JSON against the committed
+experiments/bench baselines structurally — row kinds, backend coverage,
+required fields, finite numbers — without comparing timings."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.check_bench import check_suite
+
+COMMITTED = [
+    dict(bench="sweep_step", stage="full_step", m=32, gain_backend="pallas",
+         step_backend="reference", us_per_call=100.0,
+         speedup_vs_reference=1.0),
+    dict(bench="sweep_step", stage="full_step", m=32, gain_backend="pallas",
+         step_backend="megastep", us_per_call=40.0,
+         speedup_vs_reference=2.5),
+    dict(bench="sweep_step", stage="attribution", m=32,
+         gain_backend="pallas", component="sample_grad", us_per_call=60.0),
+]
+
+
+def _fresh(**overrides):
+    rows = [dict(r) for r in COMMITTED]
+    for r in rows:
+        r["m"] = 8  # smoke grids shrink the shapes — that's fine
+        r.update(overrides)
+    return rows
+
+
+def test_identical_schema_passes():
+    assert check_suite("sweep_step", COMMITTED, _fresh()) == []
+
+
+def test_extra_fresh_fields_and_kinds_pass():
+    rows = _fresh(extra_column=1.5)
+    rows.append(dict(bench="sweep_step", stage="new_stage", us_per_call=1.0))
+    assert check_suite("sweep_step", COMMITTED, rows) == []
+
+
+def test_missing_row_kind_fails():
+    rows = [r for r in _fresh() if r.get("stage") != "attribution"]
+    errs = check_suite("sweep_step", COMMITTED, rows)
+    assert any("missing from fresh run" in e for e in errs)
+
+
+def test_missing_backend_rows_fail():
+    rows = [r for r in _fresh() if r.get("step_backend") != "megastep"]
+    errs = check_suite("sweep_step", COMMITTED, rows)
+    assert any("lost backend rows" in e and "megastep" in e for e in errs)
+
+
+def test_lost_field_fails():
+    rows = _fresh()
+    for r in rows:
+        r.pop("us_per_call")
+    errs = check_suite("sweep_step", COMMITTED, rows)
+    assert any("lost committed fields" in e for e in errs)
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), -1.0, 0.0])
+def test_bad_speedup_fails(bad):
+    errs = check_suite("sweep_step", COMMITTED, _fresh(
+        speedup_vs_reference=bad))
+    assert errs, bad
+
+
+def test_empty_fresh_fails():
+    assert check_suite("sweep_step", COMMITTED, []) == [
+        "sweep_step: fresh run emitted no rows"]
+
+
+def test_cli_end_to_end(tmp_path):
+    """Exit 0 on matching dirs, non-zero once the fresh run drifts."""
+    cdir, fdir = tmp_path / "committed", tmp_path / "fresh"
+    cdir.mkdir(), fdir.mkdir()
+    (cdir / "sweep_step.json").write_text(json.dumps(COMMITTED))
+    (fdir / "sweep_step.json").write_text(json.dumps(_fresh()))
+    cmd = [sys.executable, "-m", "benchmarks.check_bench",
+           "--fresh", str(fdir), "--committed", str(cdir)]
+    ok = subprocess.run(cmd, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    (fdir / "sweep_step.json").write_text(json.dumps(_fresh()[:1]))
+    bad = subprocess.run(cmd, capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "lost backend rows" in bad.stdout or "missing" in bad.stdout
+    # an explicitly named suite must exist on both sides
+    missing = subprocess.run(cmd + ["nope"], capture_output=True, text=True)
+    assert missing.returncode == 1
+    assert "no committed JSON" in missing.stdout

@@ -7,7 +7,13 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gain import gain_family_stats, gain_matvec, practical_gain
+from repro.kernels.gain import (
+    gain_family_stats,
+    gain_matvec,
+    megastep,
+    megastep_call,
+    practical_gain,
+)
 from repro.kernels.ssd_scan import ssd_chunk_tiles, ssd_chunked_pallas
 from repro.models.ssm import ssd_chunked
 
@@ -80,6 +86,96 @@ def test_gain_family_kernel_under_vmap(rng):
         want = ref.gain_family_stats_ref(phi[i], g[i], gj[i], pm)
         np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
                                    rtol=2e-4, atol=2e-4)
+
+
+def _megastep_inputs(rng, R, m, T, n):
+    phi = jnp.asarray(rng.normal(size=(R, m, T, n)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(R, m, n)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(R, n)).astype(np.float32))
+    arand = jnp.asarray(rng.integers(0, 2, size=(R, m)).astype(np.float32))
+    gj = jnp.asarray(rng.normal(size=(R, n)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    return phi, g, w, arand, gj, pm
+
+
+@pytest.mark.parametrize("m,T,n,bm", [
+    (2, 8, 25, None),     # tiny fleet, below every block
+    (5, 37, 23, 4),       # ragged everywhere + padded agents in the mask
+    (33, 129, 30, 8),     # multi-block on every axis
+])
+def test_megastep_kernel_all_modes_vs_oracle(rng, m, T, n, bm):
+    """Whole-inner-step kernel vs the jnp oracle: mode-selected gains, the
+    eq.-9 trigger (all six modes as runtime data), and the eq.-6 gated
+    update.  alphas must be EXACT — a flipped decision diverges weights."""
+    R = 2
+    phi, g, w, arand, gj, pm = _megastep_inputs(rng, R, m, T, n)
+    for mode in range(6):
+        thresh = 0.8 * float(jnp.median(jnp.abs(g)))
+        ctl = jnp.tile(jnp.asarray([[thresh, float(mode)]], jnp.float32),
+                       (R, 1))
+        got = megastep_call(phi, g, w, ctl, arand, gj, pm, eps=0.5,
+                            block_m=bm)
+        want = jax.vmap(lambda p, gg, ww, c, ar, j: ref.megastep_ref(
+            p, gg, ww, c, ar, j, pm, eps=0.5))(phi, g, w, ctl, arand, gj)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]), f"mode {mode}")
+        for name, a, b in zip(("w_next", "gains"),
+                              (got[0], got[2]), (want[0], want[2])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"mode {mode} {name}")
+
+
+def test_megastep_kernel_model_free_variant(rng):
+    """No exact model => the 2-column statistics variant; spec validation
+    keeps the theoretical mode off this path."""
+    R, m, T, n = 2, 5, 20, 9
+    phi, g, w, arand, _, _ = _megastep_inputs(rng, R, m, T, n)
+    ctl = jnp.tile(jnp.asarray([[0.01, 1.0]], jnp.float32), (R, 1))
+    got = megastep_call(phi, g, w, ctl, arand, eps=0.5)
+    want = jax.vmap(lambda p, gg, ww, c, ar: ref.megastep_ref(
+        p, gg, ww, c, ar, eps=0.5))(phi, g, w, ctl, arand)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_megastep_run_axis_bitwise_vs_per_run(rng):
+    """The custom_vmap rule batches the kernel GRID: vmapping the per-run
+    entry must be bitwise identical to R=1 calls (the sweep engine's
+    per-run <-> vmap bit-compat contract rides on this)."""
+    R, m, T, n = 4, 5, 12, 9
+    phi, g, w, arand, gj, pm = _megastep_inputs(rng, R, m, T, n)
+    ctl = jnp.tile(jnp.asarray([[0.01, 1.0]], jnp.float32), (R, 1))
+    # shared phi_matrix stays unbatched through the rule (closed over)
+    batched = jax.vmap(lambda p, gg, ww, c, ar, j: megastep(
+        p, gg, ww, c, ar, j, pm, eps=0.5))(phi, g, w, ctl, arand, gj)
+    for r in range(R):
+        single = megastep(phi[r], g[r], w[r], ctl[r], arand[r], gj[r], pm,
+                          eps=0.5)
+        for name, a, b in zip(("w_next", "alphas", "gains"), single, batched):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b[r]),
+                                          f"run {r} {name}")
+
+
+def test_kernel_blocks_env_override(rng, monkeypatch):
+    """REPRO_KERNEL_BLOCKS retiles the kernels without changing results
+    (the per-call override is exercised by the sweep tests above)."""
+    m, T, n = 5, 37, 23
+    phi = jnp.asarray(rng.normal(size=(m, T, n)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    base = gain_family_stats(phi, g)
+    monkeypatch.setenv("REPRO_KERNEL_BLOCKS",
+                       "block_m=2, family_block_t=16, family_block_n=8")
+    retiled = gain_family_stats(phi, g)
+    np.testing.assert_allclose(np.asarray(retiled), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    monkeypatch.setenv("REPRO_KERNEL_BLOCKS", "family_block_t=oops")
+    with pytest.raises(ValueError):
+        gain_family_stats(phi, g)
+    monkeypatch.setenv("REPRO_KERNEL_BLOCKS", "16")
+    with pytest.raises(ValueError, match="name=int"):
+        gain_family_stats(phi, g)
 
 
 @pytest.mark.parametrize("case", [

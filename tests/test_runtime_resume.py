@@ -174,6 +174,22 @@ def test_crash_resume_bitwise_identical_fused_backend(tmp_path, trace):
     _assert_bitwise(got, ref)
 
 
+@pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
+def test_crash_resume_bitwise_identical_megastep_backend(tmp_path,
+                                                         gain_backend):
+    """Megastep acceptance: kill-and-resume under the whole-inner-step
+    backend + donated segment buffers stays bitwise identical to the
+    uninterrupted sweep.  On the pallas path each chunk's vmap rides the
+    kernel's run-grid axis through the same donated executor."""
+    spec = _spec(step_backend="megastep", gain_backend=gain_backend)
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    _truncate_after(d, 1)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    _assert_bitwise(got, ref)
+
+
 # ------------------------------------------------------------- donation ----
 
 

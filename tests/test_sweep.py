@@ -197,6 +197,85 @@ def test_fused_step_backend_parity_summary_sweep():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
+def test_megastep_backend_parity_per_run_all_modes(gain_backend):
+    """Acceptance: the whole-inner-step megastep backend matches the
+    reference oracle to <= 1e-5 across all six modes, full AND summary
+    traces, with exact transmit decisions."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    for mode in ALL_MODES:
+        cfg = dict(trigger=TriggerConfig(lam=1e-2, rho=RHO, num_iterations=30),
+                   eps=EPS, num_agents=2, mode=mode, random_tx_prob=0.4)
+        ref = run_gated_sgd(jax.random.key(0), W0, sampler,
+                            GatedSGDConfig(**cfg, step_backend="reference"),
+                            problem=PROB)
+        for trace in ("full", "summary"):
+            meg = run_gated_sgd(
+                jax.random.key(0), W0, sampler,
+                GatedSGDConfig(**cfg, step_backend="megastep",
+                               gain_backend=gain_backend),
+                problem=PROB, trace=trace)
+            w_ref = np.asarray(ref.weights[-1])
+            w_meg = np.asarray(meg.weights[-1] if trace == "full"
+                               else meg.final_weights)
+            np.testing.assert_allclose(w_meg, w_ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{mode}/{trace}")
+            np.testing.assert_allclose(float(meg.comm_rate),
+                                       float(ref.comm_rate), rtol=1e-6)
+            if trace == "full":
+                np.testing.assert_array_equal(np.asarray(meg.alphas),
+                                              np.asarray(ref.alphas), mode)
+                np.testing.assert_allclose(np.asarray(meg.gains),
+                                           np.asarray(ref.gains),
+                                           rtol=1e-5, atol=1e-5, err_msg=mode)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(meg.tx_counts),
+                    np.asarray(ref.alphas).sum(axis=0), mode)
+
+
+@pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
+def test_megastep_parity_inside_sweep(gain_backend):
+    """Megastep-vs-reference inside the batched engine: whole grid, all six
+    modes in one jitted call.  On the pallas path the sweep's vmap batches
+    the kernel GRID (custom_vmap run axis) — exact alphas proves the fused
+    trigger decisions survive the batched program."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    ref = run_sweep(_spec(num_iterations=30), sampler, W0, problem=PROB)
+    meg = run_sweep(_spec(num_iterations=30, step_backend="megastep",
+                          gain_backend=gain_backend),
+                    sampler, W0, problem=PROB)
+    np.testing.assert_allclose(np.asarray(meg.trace.gains),
+                               np.asarray(ref.trace.gains),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(meg.trace.alphas),
+                                  np.asarray(ref.trace.alphas))
+    np.testing.assert_allclose(np.asarray(meg.trace.weights),
+                               np.asarray(ref.trace.weights),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(meg.j_final),
+                               np.asarray(ref.j_final), rtol=1e-4, atol=1e-5)
+
+
+def test_megastep_parity_summary_chunked_sweep():
+    """Summary + chunked sweep on megastep+pallas: the lax.map-over-vmap
+    chunks each ride the kernel's run-grid axis; tx_counts stay exact."""
+    sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
+    ref = run_sweep(_spec(num_iterations=30, trace="summary"),
+                    sampler, W0, problem=PROB)
+    meg = run_sweep(_spec(num_iterations=30, trace="summary", chunk_size=5,
+                          step_backend="megastep", gain_backend="pallas"),
+                    sampler, W0, problem=PROB)
+    np.testing.assert_array_equal(np.asarray(meg.trace.tx_counts),
+                                  np.asarray(ref.trace.tx_counts))
+    np.testing.assert_allclose(np.asarray(meg.trace.final_weights),
+                               np.asarray(ref.trace.final_weights),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(meg.trace.gain_mean),
+                               np.asarray(ref.trace.gain_mean),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_fused_pallas_sweep_serves_hot_path():
     """The batched-agent family kernel end-to-end inside the sweep."""
     sampler = as_param_sampler(GW, W0, num_agents=2, num_samples=10)
@@ -220,8 +299,12 @@ def test_backend_env_defaults(monkeypatch):
     from repro.experiments.store import spec_hash
     assert _spec().gain_backend is None and _spec().step_backend is None
     monkeypatch.delenv("REPRO_GAIN_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_STEP_BACKEND", raising=False)
     assert gain_dispatch.default_backend() == "reference"
     assert gain_dispatch.default_step_backend() == "reference"
+    assert spec_hash(_spec(step_backend="megastep")) != spec_hash(_spec())
+    assert (spec_hash(_spec(step_backend="megastep"))
+            != spec_hash(_spec(step_backend="fused")))
     # None-default and explicit "reference" hash identically (store back-
     # compat: every pre-existing entry keeps its hash)
     assert spec_hash(_spec()) == spec_hash(_spec(gain_backend="reference"))
