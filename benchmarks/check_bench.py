@@ -13,8 +13,12 @@ any CI box — compares a fresh ``--smoke`` run (written via
   fails the gate;
 * fresh rows of a known kind carry at least the committed kind's common
   fields (smoke rows may add fields; they may not lose them);
-* every numeric value is finite, ``us_per_call`` is non-negative and
-  ``speedup_vs_reference`` is finite and positive.
+* every numeric value is finite, ``us_per_call`` is non-negative, and
+  the ratio/latency/throughput fields (``speedup_vs_reference``, the
+  serve_load suite's ``p50_ms``/``p99_ms``/``throughput_rps`` and the
+  ``speedup_warm_vs_cold``/``speedup_batch_vs_gets`` serving ratios) are
+  finite and strictly positive — a zero p50 or rps means a load level
+  never actually ran.
 
 Numbers are NOT compared: smoke grids are tiny and this container's
 timings are noise — the gate catches schema/coverage drift, which is the
@@ -42,7 +46,12 @@ COMMITTED_DIR = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "experiments", "bench")
 
-NUMERIC_CHECKS = ("us_per_call", "speedup_vs_reference")
+NUMERIC_CHECKS = ("us_per_call",)
+# must be finite AND strictly positive wherever present: speed ratios,
+# and the serving tier's latency percentiles / throughput (serve_load)
+POSITIVE_CHECKS = ("speedup_vs_reference", "p50_ms", "p99_ms",
+                   "throughput_rps", "speedup_warm_vs_cold",
+                   "speedup_batch_vs_gets")
 
 
 def _kind(row: dict) -> tuple:
@@ -100,7 +109,7 @@ def check_suite(suite: str, committed: list[dict],
         for key, val in row.items():
             if isinstance(val, float) and not math.isfinite(val):
                 errors.append(f"{suite}: row {i} ({key}) is non-finite: {val}")
-        for key in NUMERIC_CHECKS:
+        for key in NUMERIC_CHECKS + POSITIVE_CHECKS:
             if key in row:
                 val = row[key]
                 if not isinstance(val, (int, float)) or not math.isfinite(val):
@@ -108,9 +117,8 @@ def check_suite(suite: str, committed: list[dict],
                         f"{suite}: row {i} {key}={val!r} not a finite number")
                 elif key == "us_per_call" and val < 0:
                     errors.append(f"{suite}: row {i} us_per_call={val} < 0")
-                elif key == "speedup_vs_reference" and val <= 0:
-                    errors.append(
-                        f"{suite}: row {i} speedup_vs_reference={val} <= 0")
+                elif key in POSITIVE_CHECKS and val <= 0:
+                    errors.append(f"{suite}: row {i} {key}={val} <= 0")
     return errors
 
 

@@ -44,6 +44,7 @@ from benchmarks import (
     report_regen,
     resume_query,
     roofline,
+    serve_load,
     sweep_scaling,
     sweep_step,
     theorem1_bound,
@@ -59,6 +60,7 @@ SUITES = {
     "sweep_step": sweep_step,
     "comm_savings": comm_savings,
     "resume_query": resume_query,
+    "serve_load": serve_load,
     "heterogeneity": heterogeneity,
     "report_regen": report_regen,
     "kernels": kernels_bench,
@@ -72,7 +74,8 @@ STORE_AWARE = {"fig2", "fig3", "theorem1", "comm_savings", "heterogeneity",
 
 def _derived(row: dict) -> str:
     for key in ("J_final", "rhs_bound", "overhead_pct", "savings_pct",
-                "speedup_vs_reference", "gflop_per_call", "dominant",
+                "speedup_vs_reference", "speedup_warm_vs_cold",
+                "throughput_rps", "gflop_per_call", "dominant",
                 "byte_deterministic", "artifacts"):
         if key in row:
             return f"{key}={row[key]}"
@@ -144,7 +147,8 @@ def main() -> None:
                                          "query", "panel", "lam", "arch",
                                          "shape", "mesh", "suite", "devices",
                                          "env_instances", "stage", "m",
-                                         "step_backend", "gain_backend")
+                                         "concurrency", "step_backend",
+                                         "gain_backend")
                    if k in row]
             full = label + ("[" + "/".join(sub) + "]" if sub else "")
             print(f"{full},{row.get('us_per_call', 0):.1f},{_derived(row)}",

@@ -1,0 +1,288 @@
+"""Serving-tier load benchmark: p50/p99 latency + throughput vs
+concurrent clients (ISSUE 7).
+
+Boots ``repro.experiments.serve_sweeps`` in a SUBPROCESS over a real
+``SweepStore`` and drives it closed-loop from {1, 8, 32, 128} concurrent
+keep-alive clients (smoke: {1, 8}) through a mixed query workload
+(best_lambda scalar + vector, tradeoff, pareto, curve, sweeps — derived
+from the store's own ``/sweeps`` listing, so any store works).  The
+serving subprocess must stay jax-free: every JSON response carries
+``jax_loaded`` and the bench fails if ANY response reports True — the
+serve_sweeps acceptance assertion, preserved under load.
+
+Row kinds:
+
+* ``serve_load``          — one per concurrency level: requests, p50/p99
+  latency (ms), throughput (requests/s), error count.
+* ``serve_batch``         — the same N queries as one ``POST
+  /query/batch`` round trip vs N keep-alive GETs: per-query µs both
+  ways + the batch speedup (answers asserted identical).
+* ``table_warm_vs_cold``  — in-process: the registry's precomputed
+  ``QueryTable`` path vs the pre-registry cold path (fresh store open,
+  entry load, full grid reduction per request).  The committed
+  ``speedup_warm_vs_cold`` is the acceptance row showing the
+  precomputed tables win on repeated queries.
+
+Store resolution mirrors report_regen: ``$REPRO_STORE_DIR/store`` (the
+CI resume-kill job's artifact) when populated, else the committed
+heterogeneity store — both are stores a real sweep produced; there is
+no synthetic fallback, so the bench always measures real entry shapes.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import EXP_DIR, timed
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CONCURRENCY = (1, 8, 32, 128)
+SMOKE_CONCURRENCY = (1, 8)
+
+
+def _resolve_store() -> str:
+    ci_root = os.environ.get("REPRO_STORE_DIR")
+    if ci_root:
+        root = os.path.join(ci_root, "store")
+        if os.path.isdir(root) and any(
+                os.path.isfile(os.path.join(root, h, "meta.json"))
+                for h in os.listdir(root)):
+            return root
+    het = os.path.join(EXP_DIR, "heterogeneity", "store")
+    if os.path.isdir(het):
+        return het
+    raise RuntimeError(
+        "no store to serve: set REPRO_STORE_DIR or commit "
+        "experiments/bench/heterogeneity/store")
+
+
+def _boot_server(store_root: str):
+    """Start serve_sweeps on a free port; returns (proc, host, port)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.experiments.serve_sweeps",
+         store_root, "--port", "0", "--quiet"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=REPO)
+    deadline = time.time() + 60
+    line = ""
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line and proc.poll() is not None:
+            raise RuntimeError(f"server died at boot (rc={proc.returncode})")
+        m = re.search(r"http://([\d.]+):(\d+)", line)
+        if m:
+            # drain any further output so the pipe never blocks the server
+            threading.Thread(target=proc.stdout.read, daemon=True).start()
+            return proc, m.group(1), int(m.group(2))
+    proc.kill()
+    raise RuntimeError(f"server never announced its port (last: {line!r})")
+
+
+def _workload(host: str, port: int) -> tuple[list[str], int]:
+    """Mixed query URLs derived from the served store's own listing."""
+    conn = http.client.HTTPConnection(host, port)
+    try:
+        conn.request("GET", "/sweeps")
+        listing = json.loads(conn.getresponse().read())
+    finally:
+        conn.close()
+    entries = listing["entries"]
+    if not entries:
+        raise RuntimeError("served store is empty")
+    urls = ["/sweeps"]
+    for meta in entries:
+        h = meta["spec_hash"]
+        lams = [float(l) for l in meta["spec"]["lambdas"]]
+        mid = float(np.sqrt(min(lams) * max(lams)))
+        modes = list(meta["spec"]["modes"])
+        urls += [
+            f"/query/curve?hash={h}",
+            f"/query/pareto?hash={h}",
+            f"/query/best_lambda?hash={h}&budget=0.2",
+            f"/query/best_lambda?hash={h}&budget=0.05,0.2,0.5,0.8",
+            f"/query/tradeoff?hash={h}&lam={mid:.6e}",
+        ]
+        if len(modes) > 1:
+            urls.append(f"/query/best_lambda?hash={h}&budget=0.5"
+                        f"&mode={modes[-1]}")
+        if "env_set" in meta.get("axes", []):
+            urls.append(f"/query/curve?hash={h}&sel_env_set=1")
+    return urls, len(entries)
+
+
+class _Client(threading.Thread):
+    """One closed-loop keep-alive client: fires requests back to back,
+    recording per-request latency."""
+
+    def __init__(self, host, port, urls, n_requests, offset):
+        super().__init__(daemon=True)
+        self.host, self.port = host, port
+        self.urls, self.n, self.offset = urls, n_requests, offset
+        self.latencies: list[float] = []
+        self.errors = 0
+        self.jax_loaded = False
+
+    def run(self):
+        conn = http.client.HTTPConnection(self.host, self.port, timeout=30)
+        try:
+            for i in range(self.n):
+                url = self.urls[(self.offset + i) % len(self.urls)]
+                t0 = time.perf_counter()
+                try:
+                    conn.request("GET", url)
+                    r = conn.getresponse()
+                    blob = r.read()
+                    ok = r.status == 200
+                except Exception:  # noqa: BLE001 — counted, not raised
+                    self.errors += 1
+                    conn.close()
+                    conn = http.client.HTTPConnection(self.host, self.port,
+                                                      timeout=30)
+                    continue
+                self.latencies.append(time.perf_counter() - t0)
+                if not ok:
+                    self.errors += 1
+                elif json.loads(blob).get("jax_loaded"):
+                    self.jax_loaded = True
+        finally:
+            conn.close()
+
+
+def _load_level(host, port, urls, concurrency, n_per_client) -> dict:
+    clients = [_Client(host, port, urls, n_per_client, i * 7)
+               for i in range(concurrency)]
+    t0 = time.perf_counter()
+    for c in clients:
+        c.start()
+    for c in clients:
+        c.join()
+    wall = time.perf_counter() - t0
+    lats = np.asarray([l for c in clients for l in c.latencies])
+    errors = sum(c.errors for c in clients)
+    if lats.size == 0:
+        raise RuntimeError(f"all {concurrency * n_per_client} requests "
+                           "failed")
+    if any(c.jax_loaded for c in clients):
+        raise RuntimeError("serving subprocess reported jax_loaded=True")
+    return dict(
+        bench="serve_load", concurrency=concurrency,
+        requests=int(lats.size), errors=errors,
+        us_per_call=float(lats.mean() * 1e6),
+        p50_ms=float(np.percentile(lats, 50) * 1e3),
+        p99_ms=float(np.percentile(lats, 99) * 1e3),
+        throughput_rps=float(lats.size / wall),
+        wall_s=float(wall), keep_alive=True, jax_loaded=False)
+
+
+def _batch_row(host, port, urls, reps) -> dict:
+    """N queries as one POST round trip vs N sequential keep-alive GETs."""
+    gets = [u for u in urls if u != "/sweeps"]
+    items = []
+    for u in gets:
+        path, _, qs = u.partition("?")
+        item = {"query": path[len("/query/"):]}
+        for kv in qs.split("&"):
+            k, _, v = kv.partition("=")
+            item[k] = v
+        items.append(item)
+    payload = json.dumps({"queries": items}).encode()
+
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    try:
+        def via_gets():
+            out = []
+            for u in gets:
+                conn.request("GET", u)
+                out.append(json.loads(conn.getresponse().read()))
+            return out
+
+        def via_batch():
+            conn.request("POST", "/query/batch", body=payload,
+                         headers={"Content-Type": "application/json"})
+            return json.loads(conn.getresponse().read())["results"]
+
+        seq, seq_us = timed(via_gets, reps=reps)
+        bat, bat_us = timed(via_batch, reps=reps)
+    finally:
+        conn.close()
+    if seq != bat:
+        raise RuntimeError("batch answers differ from sequential GETs")
+    return dict(
+        bench="serve_batch", queries=len(gets),
+        us_per_call=bat_us / len(gets),
+        get_us_per_query=seq_us / len(gets),
+        batch_us_per_query=bat_us / len(gets),
+        speedup_batch_vs_gets=seq_us / bat_us,
+        round_trips_saved=len(gets) - 1, jax_loaded=False)
+
+
+def _warm_vs_cold_row(store_root: str, reps) -> dict:
+    """Precomputed QueryTable lookups vs the pre-registry cold path."""
+    from repro.experiments import query as query_lib
+    from repro.experiments.registry import StoreRegistry
+    from repro.experiments.store import SweepStore
+
+    h = SweepStore(store_root).hashes()[0]
+    budgets = [0.05, 0.2, 0.5, 0.8]
+
+    def cold():
+        # what serve_sweeps did before the registry, per request: open
+        # the store, load the entry's arrays, reduce the full grid
+        s = SweepStore(store_root)
+        curve = query_lib.tradeoff_curve(s.get(h))
+        return [query_lib.best_lambda(curve, b) for b in budgets]
+
+    reg = StoreRegistry([store_root])
+    reg.table(h)                                   # registration: tables built
+
+    def warm():
+        t = reg.table(h)
+        return t.best_lambda_batch(budgets)
+
+    cold_res, cold_us = timed(cold, reps=reps)
+    warm_res, warm_us = timed(warm, reps=reps)
+    if cold_res != warm_res:
+        raise RuntimeError("warm table answers differ from the cold path")
+    return dict(
+        bench="table_warm_vs_cold", queries_per_rep=len(budgets),
+        us_per_call=warm_us, cold_us_per_call=cold_us,
+        speedup_warm_vs_cold=cold_us / warm_us,
+        entry_loads=reg.stats["entry_loads"], jax_loaded=False)
+
+
+def run(smoke: bool = False) -> list[dict]:
+    store_root = _resolve_store()
+    levels = SMOKE_CONCURRENCY if smoke else CONCURRENCY
+    n_per_client = 10 if smoke else 50
+    reps = 3 if smoke else 20
+
+    rows = []
+    proc, host, port = _boot_server(store_root)
+    try:
+        urls, n_entries = _workload(host, port)
+        # warm the server's tables + the client path once
+        _load_level(host, port, urls, 1, min(len(urls), n_per_client))
+        for c in levels:
+            rows.append(_load_level(host, port, urls, c, n_per_client))
+        rows.append(_batch_row(host, port, urls, reps))
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+    rows.append(_warm_vs_cold_row(store_root, reps))
+    for row in rows:
+        row["store_entries"] = n_entries
+        row["workload_urls"] = len(urls)
+    return rows

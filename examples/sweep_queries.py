@@ -11,7 +11,12 @@ does it cost.  This example
   3. extends the grid with extra λ points, computing only the new cells,
   4. answers budget queries from the store with zero device work
      (the same answers `python -m repro.experiments.serve_sweeps STORE`
-     serves over HTTP).
+     serves over HTTP),
+  5. moves to the serving tier: a `StoreRegistry` precomputes the
+     entry's `QueryTable` once, then a budget *vector* is one pure
+     numpy lookup — what `GET /query/best_lambda?budget=0.05,0.2,…`
+     and `POST /query/batch` answer per round trip under load
+     (benchmarks/serve_load.py).
 
   PYTHONPATH=src python examples/sweep_queries.py
 """
@@ -74,5 +79,21 @@ for budget in (0.8, 0.5, 0.2):
 print("pareto front (comm, J):",
       [(round(r["comm_rate"], 3), round(r["J"], 4))
        for r in query.pareto_front(curve)])
+
+# 4. the serving tier: register the store once, query tables forever.
+#    StoreRegistry federates any number of roots; table() precomputes
+#    every (mode, rho) curve at registration so each answer below is a
+#    pure lookup (the HTTP server routes every request through this).
+from repro.experiments import StoreRegistry  # noqa: E402 — jax-free half
+
+reg = StoreRegistry([os.path.join(ROOT, "store")])
+table = reg.table(spec_hash(wider))
+batch = table.best_lambda_batch([0.05, 0.2, 0.5, 0.8])   # one numpy pass
+print("budget vector ->",
+      [(b["comm_budget"], f"{b['lam']:.2e}") for b in batch])
+print("registry stats:", reg.stats)         # 1 entry load, then all hits
+
+store_path = os.path.normpath(os.path.join(ROOT, "store"))
 print(f"\nserve it:  PYTHONPATH=src python -m repro.experiments.serve_sweeps "
-      f"{os.path.normpath(os.path.join(ROOT, 'store'))}")
+      f"{store_path}\nthen:      GET /query/best_lambda?budget=0.05,0.2,0.5 "
+      f"| POST /query/batch")

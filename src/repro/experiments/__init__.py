@@ -4,9 +4,10 @@ store + query service.
 
 Exports resolve lazily (PEP 562): the jax-heavy engine modules
 (``sweep``, ``runtime``) only import when first touched, so the serving
-half — ``repro.experiments.store`` / ``query`` / ``serve_sweeps`` —
-stays importable without jax ever entering the process
-(tests/test_sweep_store.py asserts this in a subprocess).
+half — ``repro.experiments.store`` / ``query`` / ``registry`` /
+``serve_sweeps`` — stays importable without jax ever entering the
+process (tests/test_sweep_store.py and tests/test_registry.py assert
+this in subprocesses).
 """
 
 _EXPORTS = {
@@ -31,7 +32,10 @@ _EXPORTS = {
     "StoredSweep": "repro.experiments.store",
     "family_hash": "repro.experiments.store",
     "spec_hash": "repro.experiments.store",
+    "QueryTable": "repro.experiments.registry",
+    "StoreRegistry": "repro.experiments.registry",
     "best_lambda": "repro.experiments.query",
+    "best_lambda_batch": "repro.experiments.query",
     "pareto_front": "repro.experiments.query",
     "tradeoff_at": "repro.experiments.query",
     "tradeoff_curve": "repro.experiments.query",

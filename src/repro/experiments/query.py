@@ -151,6 +151,12 @@ def best_lambda(curve: TradeoffCurve, comm_budget: float) -> dict:
     decreases as λ grows — eq. 9's threshold gates more aggressively).
     When even the largest cached λ communicates above budget the result
     carries ``feasible=False`` with that closest point.
+
+    Feasible answers carry ``crossing_skipped``: True when the
+    budget-crossing candidate was wanted (the budget falls inside the
+    grid's comm range) but dropped because seed noise made the comm
+    curve non-monotone — the answer is then a conservative cached grid
+    point, not the exact crossing; callers can tell the two apart.
     """
     if not 0 <= comm_budget <= 1:
         raise ValueError(f"comm budget must be in [0, 1], got {comm_budget}")
@@ -165,18 +171,116 @@ def best_lambda(curve: TradeoffCurve, comm_budget: float) -> dict:
     # The budget-crossing interpolation needs comm monotone non-increasing
     # in λ (np.interp silently returns garbage on non-monotone xp); seed
     # noise can break that, in which case the cached grid points alone
-    # give the (conservative) answer.
-    if not feasible.all() and bool(np.all(np.diff(curve.comm) <= 0)):
-        lam_star = float(np.exp(np.interp(
-            comm_budget, curve.comm[::-1], np.log(curve.lambdas)[::-1])))
-        cross = tradeoff_at(curve, lam_star)
-        if cross["comm_rate"] <= comm_budget * (1 + 1e-9):
-            candidates.append(cross)
+    # give the (conservative) answer — flagged via crossing_skipped.
+    crossing_skipped = False
+    if not feasible.all():
+        if bool(np.all(np.diff(curve.comm) <= 0)):
+            # clip: exp(log λ) can overshoot the grid edge by one ulp,
+            # which tradeoff_at would refuse as extrapolation
+            lam_star = float(np.clip(np.exp(np.interp(
+                comm_budget, curve.comm[::-1], np.log(curve.lambdas)[::-1])),
+                curve.lambdas[0], curve.lambdas[-1]))
+            cross = tradeoff_at(curve, lam_star)
+            if cross["comm_rate"] <= comm_budget * (1 + 1e-9):
+                candidates.append(cross)
+            else:
+                crossing_skipped = True
+        else:
+            crossing_skipped = True
     key = ((lambda c: c["J"]) if curve.j is not None
            else (lambda c: -c["comm_rate"]))   # no J: most communicative
     best = min(candidates, key=key)
-    best.update(feasible=True, comm_budget=comm_budget)
+    best.update(feasible=True, comm_budget=comm_budget,
+                crossing_skipped=crossing_skipped)
     return best
+
+
+def best_lambda_batch(curve: TradeoffCurve,
+                      comm_budgets) -> list[dict]:
+    """``best_lambda`` over a budget *vector*, one vectorized numpy pass.
+
+    Returns one dict per budget, identical to calling ``best_lambda``
+    per budget (pinned by tests/test_registry.py) — but the feasibility
+    matrix, the masked grid argmin, and the budget-crossing
+    interpolation are each computed once for the whole vector, so a
+    B-budget batch query costs O(B·L) numpy instead of B python-level
+    candidate scans.
+    """
+    budgets = np.asarray(comm_budgets, np.float64).reshape(-1)
+    if budgets.size == 0:
+        raise ValueError("need at least one comm budget")
+    if np.any((budgets < 0) | (budgets > 1)):
+        bad = budgets[(budgets < 0) | (budgets > 1)][0]
+        raise ValueError(f"comm budget must be in [0, 1], got {bad}")
+    comm = curve.comm
+    j = curve.j
+    log_lams = np.log(curve.lambdas)
+    B = budgets.size
+    rows_idx = np.arange(B)
+
+    feas = comm[None, :] <= budgets[:, None]              # (B, L)
+    any_feas = feas.any(axis=1)
+    all_feas = feas.all(axis=1)
+
+    # best cached grid point per budget (same tie-breaking as the scalar
+    # path: first index wins, candidates ascend in λ)
+    if j is not None:
+        grid_score = np.where(feas, j[None, :], np.inf)
+        gi = np.argmin(grid_score, axis=1)
+    else:
+        grid_score = np.where(feas, comm[None, :], -np.inf)
+        gi = np.argmax(grid_score, axis=1)
+    gbest = grid_score[rows_idx, gi]
+
+    # budget-crossing interpolation for every budget at once (only valid
+    # on a monotone non-increasing comm curve, exactly as the scalar path)
+    monotone = bool(np.all(np.diff(comm) <= 0))
+    cross_ok = np.zeros(B, bool)
+    lam_star = comm_at = j_at = on_grid = None
+    if monotone:
+        lam_star = np.clip(np.exp(np.interp(budgets, comm[::-1],
+                                            log_lams[::-1])),
+                           curve.lambdas[0], curve.lambdas[-1])
+        log_star = np.log(lam_star)
+        comm_at = np.interp(log_star, log_lams, comm)
+        j_at = None if j is None else np.interp(log_star, log_lams, j)
+        on_grid = np.any(np.isclose(curve.lambdas[None, :],
+                                    lam_star[:, None], rtol=1e-6, atol=0),
+                         axis=1)
+        cross_ok = (any_feas & ~all_feas
+                    & (comm_at <= budgets * (1 + 1e-9)))
+    # the crossing wins only when strictly better under the scalar key
+    if j is not None:
+        use_cross = cross_ok & (np.where(cross_ok, j_at, np.inf) < gbest)
+    else:
+        use_cross = cross_ok & (np.where(cross_ok, comm_at, -np.inf) > gbest)
+    skipped = any_feas & ~all_feas & ~cross_ok
+
+    closest = int(np.argmin(comm))                        # infeasible fallback
+    out = []
+    for b in range(B):
+        if not any_feas[b]:
+            row = tradeoff_at(curve, float(curve.lambdas[closest]))
+            row.update(feasible=False, comm_budget=float(budgets[b]))
+        elif use_cross[b]:
+            row = dict(lam=float(lam_star[b]), mode=curve.mode,
+                       rho=curve.rho, comm_rate=float(comm_at[b]),
+                       interpolated=not bool(on_grid[b]))
+            if j is not None:
+                row["J"] = float(j_at[b])
+            row.update(feasible=True, comm_budget=float(budgets[b]),
+                       crossing_skipped=False)
+        else:
+            i = int(gi[b])
+            row = dict(lam=float(curve.lambdas[i]), mode=curve.mode,
+                       rho=curve.rho, comm_rate=float(comm[i]),
+                       interpolated=False)
+            if j is not None:
+                row["J"] = float(j[i])
+            row.update(feasible=True, comm_budget=float(budgets[b]),
+                       crossing_skipped=bool(skipped[b]))
+        out.append(row)
+    return out
 
 
 def pareto_front(curve: TradeoffCurve) -> list[dict]:

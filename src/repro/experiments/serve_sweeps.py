@@ -1,22 +1,32 @@
-"""Trigger-threshold query service over a ``SweepStore`` (DESIGN.md §8).
+"""Trigger-threshold query service over federated ``SweepStore``s
+(DESIGN.md §8).
 
-    PYTHONPATH=src python -m repro.experiments.serve_sweeps STORE_ROOT \
-        [--port 8321]
+    PYTHONPATH=src python -m repro.experiments.serve_sweeps ROOT [ROOT...] \
+        [--port 8321] [--quiet]
 
-serves JSON over stdlib HTTP (no jax, no device — queries are numpy over
-arrays already on disk):
+serves JSON over stdlib HTTP (no jax, no device — every request is a
+pure lookup into precomputed ``QueryTable``s behind a ``StoreRegistry``,
+see ``repro.experiments.registry``):
 
-    GET /sweeps                      store entries (spec payload + axes)
-    GET /query/best_lambda?budget=0.2[&hash=..&mode=..&rho_index=0]
-    GET /query/tradeoff?lam=3e-3[&hash=..&mode=..]
-    GET /query/pareto[?hash=..&mode=..]
-    GET /query/curve[?hash=..&mode=..]
+    GET  /sweeps                     entries across all federated roots
+    GET  /stats                      registry cache counters
+    GET  /query/best_lambda?budget=0.2[&hash=..&mode=..&rho_index=0]
+                                     budget may be a vector: budget=0.1,0.2
+    GET  /query/tradeoff?lam=3e-3[&hash=..&mode=..]
+    GET  /query/pareto[?hash=..&mode=..]
+    GET  /query/curve[?hash=..&mode=..]
+    POST /query/batch                {"queries": [{"query": "best_lambda",
+                                     "budget": 0.2, ...}, ...]} — a list of
+                                     queries answered in one round trip
 
-``hash`` selects a store entry (defaults to the only entry, or to the
-merged union of a single experiment family); ``mode`` defaults to the
-paper's theoretical trigger when present.  Every response carries
-``jax_loaded`` so deployments can assert the serving path never touched
-the accelerator stack (tests/test_sweep_store.py does).
+Connections are HTTP/1.1 keep-alive: a client opens one TCP connection
+and streams queries over it.  ``hash`` selects a store entry from any
+federated root (defaulting to the only entry, or to the merged union of
+a single experiment family); ``mode`` defaults to the paper's
+theoretical trigger when present.  Every response carries ``jax_loaded``
+so deployments can assert the serving path never touched the
+accelerator stack (tests/test_sweep_store.py and benchmarks/serve_load.py
+do).
 
 One-shot mode for scripts/CI (prints the JSON and exits):
 
@@ -33,72 +43,99 @@ import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.experiments import query as query_lib
-from repro.experiments.store import SweepStore
+from repro.experiments.registry import StoreRegistry
+
+QUERY_NAMES = ("best_lambda", "tradeoff", "pareto", "curve", "sweeps",
+               "stats")
 
 
-# Resolved entries cached per (store root, entry list): the store is
-# append-only, so a cache entry is valid exactly while the hash list is
-# unchanged — steady-state queries then skip all array I/O and merging.
-_entry_cache: dict[tuple, object] = {}
-
-
-def _resolve_entry(store: SweepStore, params: dict):
-    h = params.get("hash")
-    hashes = store.hashes()
-    key = (store.root, h, tuple(hashes))
-    if key in _entry_cache:
-        return _entry_cache[key]
-    if h:
-        entry = store.get(h)
-    elif len(hashes) == 1:
-        entry = store.get(hashes[0])
-    else:
-        # family membership comes from meta.json alone — no array I/O
-        # until the actual member entries are merged
-        families = {m["family_hash"] for m in store.entries()}
-        if len(families) != 1:
-            raise KeyError(
-                f"store has {len(hashes)} entries across {len(families)} "
-                "families — pass ?hash=<spec_hash> (see /sweeps)")
-        entry = store.merged(families.pop())
-    _entry_cache.clear()                    # keep at most one resolution
-    _entry_cache[key] = entry
-    return entry
-
-
-def _curve(store: SweepStore, params: dict) -> query_lib.TradeoffCurve:
-    entry = _resolve_entry(store, params)
+def _curve(registry: StoreRegistry, params: dict):
     select = {k[4:]: int(v) for k, v in params.items()
               if k.startswith("sel_")}
-    return query_lib.tradeoff_curve(
-        entry, mode=params.get("mode"),
-        rho_index=int(params.get("rho_index", 0)),
-        select=select or None)
+    table = registry.table(params.get("hash"))
+    return table, table.curve(mode=params.get("mode"),
+                              rho_index=int(params.get("rho_index", 0)),
+                              select=select or None)
 
 
-def handle_query(store: SweepStore, name: str, params: dict) -> dict:
-    """Dispatch one query; shared by the HTTP handler and ``--once``."""
+def handle_query(registry: StoreRegistry, name: str, params: dict) -> dict:
+    """Dispatch one query; shared by GET, ``/query/batch`` and ``--once``."""
     if name in ("", "sweeps"):
-        return {"query": "sweeps", "entries": store.entries(),
+        return {"query": "sweeps", "entries": registry.entries(),
                 "jax_loaded": "jax" in sys.modules}
-    curve = _curve(store, params)
+    if name == "stats":
+        return {"query": "stats", "stats": dict(registry.stats),
+                "cached_tables": registry.cached_tables(),
+                "jax_loaded": "jax" in sys.modules}
+    if name not in ("best_lambda", "tradeoff", "pareto", "curve"):
+        raise KeyError(f"unknown query {name!r} "
+                       f"(one of {' | '.join(QUERY_NAMES)})")
+    table, curve = _curve(registry, params)
     if name == "best_lambda":
-        result = query_lib.best_lambda(curve, float(params["budget"]))
+        budgets = [float(b) for b in str(params["budget"]).split(",")]
+        if len(budgets) == 1:
+            result = query_lib.best_lambda(curve, budgets[0])
+        else:                       # vectorized: one numpy pass, B answers
+            result = {"results": query_lib.best_lambda_batch(curve, budgets)}
     elif name == "tradeoff":
         result = query_lib.tradeoff_at(curve, float(params["lam"]))
     elif name == "pareto":
-        result = {"front": query_lib.pareto_front(curve)}
-    elif name == "curve":
+        select = {k[4:]: int(v) for k, v in params.items()
+                  if k.startswith("sel_")}
+        result = {"front": table.pareto_front(
+            mode=params.get("mode"),
+            rho_index=int(params.get("rho_index", 0)),
+            select=select or None)}
+    else:                                              # "curve"
         result = {"rows": curve.as_rows()}
-    else:
-        raise KeyError(f"unknown query {name!r} (best_lambda | tradeoff | "
-                       "pareto | curve | sweeps)")
     return {"query": name, "spec_hash": curve.spec_hash, "mode": curve.mode,
             "result": result, "jax_loaded": "jax" in sys.modules}
 
 
+def handle_batch(registry: StoreRegistry, payload: dict) -> dict:
+    """Answer a list of queries in one round trip.
+
+    Each item is ``{"query": <name>, ...params...}``; items fail
+    independently (an ``error`` body in that slot) so one bad query
+    never voids the rest of the batch.
+    """
+    queries = payload.get("queries")
+    if not isinstance(queries, list):
+        raise ValueError('batch body must be {"queries": [...]}')
+    results = []
+    for item in queries:
+        if not isinstance(item, dict):
+            results.append({"error": f"batch item must be an object, "
+                                     f"got {type(item).__name__}"})
+            continue
+        params = {str(k): v for k, v in item.items() if k != "query"}
+        try:
+            results.append(handle_query(registry, str(item.get("query", "")),
+                                        params))
+        except (KeyError, ValueError, IndexError) as e:
+            results.append({"error": str(e)})
+    return {"query": "batch", "count": len(results), "results": results,
+            "jax_loaded": "jax" in sys.modules}
+
+
 class _Handler(BaseHTTPRequestHandler):
-    store: SweepStore = None   # set by serve()
+    # HTTP/1.1 => persistent connections: Content-Length is always set
+    # below, so one client connection serves many queries (keep-alive).
+    protocol_version = "HTTP/1.1"
+    # headers and body flush as two small writes; without TCP_NODELAY,
+    # Nagle + delayed ACK turns every keep-alive response into a ~40 ms
+    # stall on loopback (measured by benchmarks/serve_load.py)
+    disable_nagle_algorithm = True
+    registry: StoreRegistry = None   # set by make_handler()
+    quiet = False
+
+    def _respond(self, body: dict, code: int = 200) -> None:
+        blob = json.dumps(body).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(blob)))
+        self.end_headers()
+        self.wfile.write(blob)
 
     def do_GET(self):  # noqa: N802 (stdlib API)
         parsed = urllib.parse.urlparse(self.path)
@@ -107,44 +144,71 @@ class _Handler(BaseHTTPRequestHandler):
         path = parsed.path.strip("/")
         name = path[len("query/"):] if path.startswith("query/") else path
         try:
-            body = handle_query(self.store, name, params)
-            code = 200
+            body, code = handle_query(self.registry, name, params), 200
         except (KeyError, ValueError, IndexError) as e:
             body, code = {"error": str(e)}, 400
-        blob = json.dumps(body).encode()
-        self.send_response(code)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("Content-Length", str(len(blob)))
-        self.end_headers()
-        self.wfile.write(blob)
+        self._respond(body, code)
+
+    def do_POST(self):  # noqa: N802 (stdlib API)
+        path = urllib.parse.urlparse(self.path).path.strip("/")
+        if path not in ("query/batch", "batch"):
+            self._respond({"error": f"POST {self.path}: only /query/batch "
+                                    "accepts POST"}, 404)
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(n) or b"null")
+            if not isinstance(payload, dict):
+                raise ValueError("batch body must be a JSON object")
+            body, code = handle_batch(self.registry, payload), 200
+        except (ValueError, KeyError) as e:
+            body, code = {"error": str(e)}, 400
+        self._respond(body, code)
 
     def log_message(self, fmt, *args):
-        print(f"[serve_sweeps] {fmt % args}", file=sys.stderr)
+        if not self.quiet:
+            print(f"[serve_sweeps] {fmt % args}", file=sys.stderr)
 
 
-def serve(store_root: str, port: int = 8321) -> None:
-    handler = type("Handler", (_Handler,), {"store": SweepStore(store_root)})
+def make_handler(registry, quiet: bool = False) -> type:
+    """An HTTP handler class bound to a registry (or roots / a store)."""
+    if not isinstance(registry, StoreRegistry):
+        if hasattr(registry, "root"):            # a SweepStore
+            registry = StoreRegistry([registry.root])
+        else:                                    # root str | list of roots
+            registry = StoreRegistry(registry)
+    return type("Handler", (_Handler,),
+                {"registry": registry, "quiet": quiet})
+
+
+def serve(store_roots, port: int = 8321, quiet: bool = False) -> None:
+    handler = make_handler(store_roots, quiet=quiet)
+    reg = handler.registry
     httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
-    print(f"[serve_sweeps] serving {store_root} on "
+    print(f"[serve_sweeps] serving {len(reg.hashes())} entries from "
+          f"{len(reg.stores)} root(s) on "
           f"http://127.0.0.1:{httpd.server_address[1]}", flush=True)
     httpd.serve_forever()
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("store", help="SweepStore root directory")
+    ap.add_argument("stores", nargs="+", metavar="STORE",
+                    help="SweepStore root directories (federated)")
     ap.add_argument("--port", type=int, default=8321,
                     help="bind port (0 picks a free one)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-request logging (load tests)")
     ap.add_argument("--once", default=None, metavar="QUERY",
                     help="answer 'name?k=v&…' once to stdout and exit")
     args = ap.parse_args(argv)
     if args.once is not None:
         name, _, qs = args.once.partition("?")
         params = {k: v[-1] for k, v in urllib.parse.parse_qs(qs).items()}
-        print(json.dumps(handle_query(SweepStore(args.store), name, params),
-                         indent=1, sort_keys=True))
+        print(json.dumps(handle_query(StoreRegistry(args.stores), name,
+                                      params), indent=1, sort_keys=True))
         return
-    serve(args.store, args.port)
+    serve(args.stores, args.port, quiet=args.quiet)
 
 
 if __name__ == "__main__":

@@ -69,6 +69,49 @@ def test_bad_speedup_fails(bad):
     assert errs, bad
 
 
+SERVE_COMMITTED = [
+    dict(bench="serve_load", concurrency=c, requests=50 * c, errors=0,
+         us_per_call=500.0 * c, p50_ms=0.5, p99_ms=2.0,
+         throughput_rps=1500.0, keep_alive=True, jax_loaded=False)
+    for c in (1, 8, 32, 128)
+] + [
+    dict(bench="serve_batch", queries=14, us_per_call=200.0,
+         get_us_per_query=600.0, batch_us_per_query=200.0,
+         speedup_batch_vs_gets=3.0, jax_loaded=False),
+    dict(bench="table_warm_vs_cold", us_per_call=200.0,
+         cold_us_per_call=2500.0, speedup_warm_vs_cold=12.0,
+         jax_loaded=False),
+]
+
+
+def _serve_fresh(**overrides):
+    rows = [dict(r) for r in SERVE_COMMITTED]
+    for r in rows:
+        r.update(overrides)
+    return rows
+
+
+def test_serve_load_schema_passes():
+    assert check_suite("serve_load", SERVE_COMMITTED, _serve_fresh()) == []
+
+
+@pytest.mark.parametrize("key", ["p50_ms", "p99_ms", "throughput_rps",
+                                 "speedup_warm_vs_cold",
+                                 "speedup_batch_vs_gets"])
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), -1.0, 0.0])
+def test_serve_load_latency_throughput_must_be_positive(key, bad):
+    errs = check_suite("serve_load", SERVE_COMMITTED, _serve_fresh(**{key: bad}))
+    assert any(key in e for e in errs), (key, bad)
+
+
+def test_serve_load_lost_percentiles_fail():
+    rows = _serve_fresh()
+    for r in rows:
+        r.pop("p99_ms", None)
+    errs = check_suite("serve_load", SERVE_COMMITTED, rows)
+    assert any("lost committed fields" in e and "p99_ms" in e for e in errs)
+
+
 def test_empty_fresh_fails():
     assert check_suite("sweep_step", COMMITTED, []) == [
         "sweep_step: fresh run emitted no rows"]

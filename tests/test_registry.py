@@ -1,0 +1,404 @@
+"""Serving-tier contract (ISSUE 7): ``StoreRegistry`` + ``QueryTable``
++ the batched/keep-alive transport.
+
+* registry federates many store roots behind one resolution index; the
+  thread-safe LRU of resolved tables replaces the old keep-one
+  ``_entry_cache`` (alternating between two entries must NOT reload
+  arrays every request — the counted-loads regression);
+* cache invalidation: append-only stores ⇒ a table is valid exactly
+  while the federation's hash-list snapshot is unchanged;
+* ``QueryTable`` materializes every (mode, rho) curve at registration —
+  queries are pure lookups with zero per-request grid reduction;
+* ``best_lambda_batch`` is pinned element-for-element to the scalar
+  ``best_lambda`` (including ``crossing_skipped``);
+* transport: HTTP/1.1 keep-alive, ``POST /query/batch``, and N-thread
+  hammering whose every response is byte-identical to the sequential
+  baseline;
+* the registry path stays jax-free (subprocess-asserted).
+
+Everything here is numpy + stdlib — no jax, no device, no engine run:
+entries are synthetic grids persisted through the real ``SweepStore``.
+"""
+
+import http.client
+import json
+import os
+import subprocess
+import sys
+import threading
+import urllib.error
+import urllib.request
+from http.server import ThreadingHTTPServer
+
+import numpy as np
+import pytest
+
+from repro.experiments import query
+from repro.experiments import serve_sweeps
+from repro.experiments.query import TradeoffCurve, best_lambda, \
+    best_lambda_batch
+from repro.experiments.registry import QueryTable, StoreRegistry
+from repro.experiments.store import SweepStore
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LAMS = (1e-4, 1e-3, 1e-2, 1e-1)
+COMM = (1.0, 0.6, 0.3, 0.1)
+J = (0.01, 0.02, 0.05, 0.2)
+
+
+def _put_entry(store, comm=COMM, j=J, lambdas=LAMS,
+               modes=("theoretical", "practical"), rhos=(0.9,),
+               seeds=(0, 1), eps=0.5, env_sets=0, digest="inputs-0"):
+    """Persist a synthetic (mode, lam, rho, seed) grid; returns its hash.
+
+    ``env_sets=E`` prepends a selectable leading ``env_set`` axis (the
+    shape the heterogeneity store entries have)."""
+    M, L, R, S = len(modes), len(lambdas), len(rhos), len(seeds)
+    base_c = np.asarray(comm, np.float32).reshape(1, L, 1, 1)
+    base_j = np.asarray(j, np.float32).reshape(1, L, 1, 1)
+    # per-mode offsets so modes are distinguishable but stay in [0, 1]
+    scale = (1.0 - 0.05 * np.arange(M, dtype=np.float32)).reshape(M, 1, 1, 1)
+    arrays = {
+        "trace/comm_rate": np.broadcast_to(
+            np.clip(base_c * scale, 0.0, 1.0), (M, L, R, S)).copy(),
+        "trace/j_final": np.broadcast_to(
+            base_j * (1.0 + 0.5 * (scale - 1.0)), (M, L, R, S)).copy(),
+    }
+    axes = ("mode", "lam", "rho", "seed")
+    if env_sets:
+        e = 1.0 + 0.01 * np.arange(env_sets,
+                                   dtype=np.float32).reshape(-1, 1, 1, 1, 1)
+        arrays = {
+            "trace/comm_rate": np.clip(
+                arrays["trace/comm_rate"][None] / e, 0.0, 1.0),
+            "trace/j_final": (arrays["trace/j_final"][None]
+                              * e).astype(np.float32),
+        }
+        axes = ("env_set",) + axes
+    spec = {"modes": list(modes), "lambdas": list(lambdas),
+            "rhos": list(rhos), "seeds": list(seeds), "eps": eps,
+            "num_iterations": 10, "num_agents": 2}
+    if env_sets:
+        spec["env_instances"] = env_sets
+    return store.put(spec, arrays, axes,
+                     extra={"inputs_digest": digest,
+                            "trace_kind": "summary"})
+
+
+# ------------------------------------------------------------- registry ----
+
+
+def test_registry_federates_two_roots_with_distinct_families(tmp_path):
+    h1 = _put_entry(SweepStore(tmp_path / "a"), eps=0.5)
+    h2 = _put_entry(SweepStore(tmp_path / "b"), eps=0.4,
+                    comm=(0.9, 0.5, 0.2, 0.05))
+    reg = StoreRegistry([tmp_path / "a", tmp_path / "b"])
+    assert sorted(reg.hashes()) == sorted([h1, h2])
+    roots = {e["spec_hash"]: e["store_root"] for e in reg.entries()}
+    assert roots[h1].endswith("a") and roots[h2].endswith("b")
+    # hash-addressed resolution finds the entry in whichever root holds it
+    assert reg.table(h1).spec_hash == h1
+    np.testing.assert_allclose(reg.table(h2).curve().comm,
+                               (0.9, 0.5, 0.2, 0.05), rtol=1e-6)
+    # two families, no hash: resolution must refuse loudly
+    with pytest.raises(KeyError, match="families"):
+        reg.table()
+    with pytest.raises(KeyError, match="no store entry"):
+        reg.table("deadbeef")
+
+
+def test_registry_merges_one_family_across_roots(tmp_path):
+    """Disjoint λ sub-grids of ONE experiment, living in DIFFERENT store
+    roots, resolve (with no hash) to the union-λ merge."""
+    _put_entry(SweepStore(tmp_path / "a"), lambdas=LAMS[:2], comm=COMM[:2],
+               j=J[:2])
+    _put_entry(SweepStore(tmp_path / "b"), lambdas=LAMS[2:], comm=COMM[2:],
+               j=J[2:])
+    reg = StoreRegistry([tmp_path / "a", tmp_path / "b"])
+    curve = reg.table().curve()
+    assert curve.lambdas.tolist() == list(LAMS)
+    np.testing.assert_allclose(curve.comm, COMM, rtol=1e-6)
+
+
+def test_registry_lru_alternating_entries_loads_each_once(tmp_path):
+    """The old serve_sweeps ``_entry_cache`` kept ONE resolution: two
+    clients alternating entries forced a reload + re-reduce every
+    request.  The registry LRU must load each entry's arrays exactly
+    once and serve the rest from cache."""
+    store = SweepStore(tmp_path / "s")
+    h1 = _put_entry(store, eps=0.5)
+    h2 = _put_entry(store, eps=0.4)
+    reg = StoreRegistry([tmp_path / "s"])
+    for _ in range(10):                      # the thrash pattern
+        reg.table(h1)
+        reg.table(h2)
+    assert reg.stats["entry_loads"] == 2
+    assert reg.stats["table_misses"] == 2
+    assert reg.stats["table_hits"] == 18
+    assert reg.cached_tables() == 2
+
+
+def test_registry_lru_is_bounded(tmp_path):
+    store = SweepStore(tmp_path / "s")
+    h1 = _put_entry(store, eps=0.5)
+    h2 = _put_entry(store, eps=0.4)
+    reg = StoreRegistry([tmp_path / "s"], max_tables=1)
+    reg.table(h1), reg.table(h2), reg.table(h1)
+    assert reg.cached_tables() == 1          # bounded, evicting LRU-first
+    assert reg.stats["entry_loads"] == 3     # capacity 1 thrashes honestly
+
+
+def test_registry_snapshot_invalidation_on_append(tmp_path):
+    """Append-only contract: a new entry changes the hash-list snapshot,
+    so default resolution re-resolves (here: single entry → family
+    union) instead of serving the stale table forever."""
+    store = SweepStore(tmp_path / "s")
+    _put_entry(store, lambdas=LAMS[:2], comm=COMM[:2], j=J[:2])
+    reg = StoreRegistry([tmp_path / "s"])
+    assert reg.table().curve().lambdas.tolist() == list(LAMS[:2])
+    assert reg.stats["entry_loads"] == 1
+    reg.table()                              # warm: no new load
+    assert reg.stats["entry_loads"] == 1
+    _put_entry(store, lambdas=LAMS[2:], comm=COMM[2:], j=J[2:])
+    curve = reg.table().curve()              # snapshot changed: re-resolve
+    assert curve.lambdas.tolist() == list(LAMS)
+    assert reg.stats["entry_loads"] == 2
+
+
+def test_query_table_is_pure_lookup_after_registration(tmp_path, monkeypatch):
+    """Every (mode, rho) curve + pareto front materializes at
+    registration; afterwards queries never re-reduce the grid."""
+    store = SweepStore(tmp_path / "s")
+    h = _put_entry(store, rhos=(0.9, 0.99))
+    table = QueryTable(store.get(h))
+    # unknown mode fails loudly (not a silent cache miss) ...
+    with pytest.raises(KeyError):
+        table.curve(mode="nope")
+
+    def boom(*a, **kw):
+        raise AssertionError("per-request grid reduction on the table path")
+
+    # ... and every KNOWN (mode, rho) is already materialized
+    monkeypatch.setattr(query, "tradeoff_curve", boom)
+    for mode in ("theoretical", "practical", None):
+        for ri in (0, 1):
+            c = table.curve(mode=mode, rho_index=ri)
+            assert c.rho == (0.9, 0.99)[ri]
+            assert table.pareto_front(mode=mode, rho_index=ri)
+            assert 0 <= table.best_lambda(0.5, mode=mode,
+                                          rho_index=ri)["comm_rate"] <= 1
+
+
+def test_query_table_select_variants_memoize(tmp_path):
+    store = SweepStore(tmp_path / "s")
+    h = _put_entry(store, env_sets=3)
+    table = QueryTable(store.get(h))
+    c1 = table.curve(select={"env_set": 1})
+    assert c1 is table.curve(select={"env_set": 1})   # memoized, same object
+    assert c1 is not table.curve()
+    # the select slice really is env 1, not the env average
+    entry = store.get(h)
+    want = entry.arrays["trace/comm_rate"][1, 0, :, 0, :].mean(axis=-1)
+    np.testing.assert_allclose(c1.comm, np.asarray(want, np.float64),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------- vectorized best_lambda --
+
+
+def _curve(comm, j, lambdas=LAMS):
+    return TradeoffCurve(mode="theoretical", rho=0.9,
+                         lambdas=np.asarray(lambdas, np.float64),
+                         comm=np.asarray(comm, np.float64),
+                         j=None if j is None else np.asarray(j, np.float64),
+                         spec_hash="synthetic")
+
+
+BUDGETS = (0.0, 0.02, 0.05, 0.1, 0.3, 0.32, 0.45, 0.6, 0.8, 1.0)
+
+
+@pytest.mark.parametrize("comm,j", [
+    (COMM, J),                                  # monotone, with J
+    (COMM, None),                               # monotone, no J
+    ((0.40, 0.31, 0.33, 0.10), (0.01, 0.02, 0.03, 0.2)),   # non-monotone
+    ((0.9, 0.9, 0.9, 0.9), (0.4, 0.3, 0.2, 0.1)),          # flat comm
+], ids=["monotone", "no-J", "non-monotone", "flat"])
+def test_best_lambda_batch_matches_scalar(comm, j):
+    """One vectorized pass ≡ the scalar loop, field for field — budgets
+    below/above/at the grid, on grid points, and at the extremes."""
+    c = _curve(comm, j)
+    got = best_lambda_batch(c, BUDGETS)
+    want = [best_lambda(c, b) for b in BUDGETS]
+    assert got == want
+
+
+def test_best_lambda_batch_validates():
+    c = _curve(COMM, J)
+    with pytest.raises(ValueError, match="budget"):
+        best_lambda_batch(c, [0.5, 1.5])
+    with pytest.raises(ValueError, match="at least one"):
+        best_lambda_batch(c, [])
+    assert best_lambda_batch(c, 0.45) == [best_lambda(c, 0.45)]
+
+
+# ------------------------------------------------------------ transport ----
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """Two federated roots (distinct families) behind one live server."""
+    root_a = str(tmp_path_factory.mktemp("reg_a"))
+    root_b = str(tmp_path_factory.mktemp("reg_b"))
+    h1 = _put_entry(SweepStore(root_a), eps=0.5)
+    h2 = _put_entry(SweepStore(root_b), eps=0.4,
+                    comm=(0.9, 0.5, 0.2, 0.05), j=(0.02, 0.03, 0.06, 0.3))
+    handler = serve_sweeps.make_handler([root_a, root_b], quiet=True)
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    yield {"base": f"http://127.0.0.1:{httpd.server_address[1]}",
+           "port": httpd.server_address[1], "hashes": (h1, h2),
+           "registry": handler.registry}
+    httpd.shutdown()
+
+
+def _mixed_urls(served):
+    # /stats is deliberately absent: its counters move between the
+    # baseline pass and the hammer, so it can never be byte-stable
+    h1, h2 = served["hashes"]
+    return ["/sweeps",
+            f"/query/curve?hash={h1}",
+            f"/query/curve?hash={h2}&mode=practical",
+            f"/query/pareto?hash={h1}",
+            f"/query/pareto?hash={h2}",
+            f"/query/best_lambda?hash={h1}&budget=0.45",
+            f"/query/best_lambda?hash={h2}&budget=0.25&mode=practical",
+            f"/query/best_lambda?hash={h1}&budget=0.05,0.45,0.8",
+            f"/query/tradeoff?hash={h1}&lam=3e-3",
+            f"/query/tradeoff?hash={h2}&lam=1e-2",
+            f"/query/curve?hash={h1}&rho_index=0"]
+
+
+def test_http_batch_endpoint_matches_individual_gets(served):
+    base, (h1, h2) = served["base"], served["hashes"]
+    items = [{"query": "best_lambda", "hash": h1, "budget": 0.45},
+             {"query": "best_lambda", "hash": h2, "budget": "0.1,0.3"},
+             {"query": "pareto", "hash": h2, "mode": "practical"},
+             {"query": "tradeoff", "hash": h1, "lam": 3e-3},
+             {"query": "nope"},
+             {"query": "best_lambda", "hash": h1, "budget": 7.0}]
+    req = urllib.request.Request(
+        f"{base}/query/batch",
+        data=json.dumps({"queries": items}).encode(),
+        headers={"Content-Type": "application/json"})
+    body = json.load(urllib.request.urlopen(req))
+    assert body["query"] == "batch" and body["count"] == 6
+    results = body["results"]
+    assert "unknown query" in results[4]["error"]
+    assert "budget" in results[5]["error"]
+    gets = [json.load(urllib.request.urlopen(
+        f"{base}/query/best_lambda?hash={h1}&budget=0.45")),
+        json.load(urllib.request.urlopen(
+            f"{base}/query/best_lambda?hash={h2}&budget=0.1,0.3")),
+        json.load(urllib.request.urlopen(
+            f"{base}/query/pareto?hash={h2}&mode=practical")),
+        json.load(urllib.request.urlopen(
+            f"{base}/query/tradeoff?hash={h1}&lam=3e-3"))]
+    assert results[:4] == gets                  # one round trip, same answers
+    # malformed batch bodies: loud 400, not a half-answered list
+    bad = urllib.request.Request(f"{base}/query/batch", data=b"[1,2]",
+                                 headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(bad)
+    assert e.value.code == 400
+
+
+def test_http_keep_alive_reuses_one_connection(served):
+    conn = http.client.HTTPConnection("127.0.0.1", served["port"])
+    try:
+        sock = None
+        for i, url in enumerate(_mixed_urls(served)):
+            conn.request("GET", url)
+            r = conn.getresponse()
+            body = json.loads(r.read())
+            assert r.status == 200 and "error" not in body
+            if i == 0:
+                sock = conn.sock
+            else:                    # HTTP/1.1 keep-alive: same TCP socket
+                assert conn.sock is sock
+    finally:
+        conn.close()
+
+
+def test_concurrent_hammer_is_byte_identical_to_sequential(served):
+    """N threads × mixed queries over keep-alive connections: every
+    response must be byte-identical to the sequential baseline — the
+    registry's locking never lets handler threads see a torn table."""
+    urls = _mixed_urls(served)
+    base = served["base"]
+    baseline = {u: urllib.request.urlopen(base + u).read() for u in urls}
+    errors = []
+
+    def hammer(tid):
+        conn = http.client.HTTPConnection("127.0.0.1", served["port"])
+        try:
+            for rep in range(5):
+                for u in urls[tid % len(urls):] + urls[:tid % len(urls)]:
+                    conn.request("GET", u)
+                    blob = conn.getresponse().read()
+                    if blob != baseline[u]:
+                        errors.append((tid, rep, u))
+        except Exception as e:  # noqa: BLE001 — surfaced via errors list
+            errors.append((tid, "exception", repr(e)))
+        finally:
+            conn.close()
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors[:5]
+    # steady state: every one of those requests hit the table cache
+    stats = served["registry"].stats
+    assert stats["entry_loads"] <= 4         # ≤ one load per (entry, epoch)
+
+
+def test_stats_endpoint_reports_cache_counters(served):
+    body = json.load(urllib.request.urlopen(served["base"] + "/stats"))
+    assert body["query"] == "stats"
+    assert body["stats"]["entry_loads"] >= 1
+    assert body["cached_tables"] >= 1
+
+
+# ---------------------------------------------------- serving path (jax) ----
+
+
+def test_registry_path_never_imports_jax(tmp_path):
+    """The whole serving tier — registry, tables, batch dispatch — runs
+    with jax never entering the process."""
+    root = str(tmp_path / "s")
+    _put_entry(SweepStore(root))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    code = (
+        "import sys\n"
+        "from repro.experiments.registry import StoreRegistry\n"
+        "from repro.experiments.serve_sweeps import handle_batch, handle_query\n"
+        f"reg = StoreRegistry([{root!r}])\n"
+        "t = reg.table()\n"
+        "b = t.best_lambda_batch([0.1, 0.45, 0.9])\n"
+        "assert len(b) == 3 and all(0 <= r['comm_rate'] <= 1 for r in b)\n"
+        "out = handle_batch(reg, {'queries': [\n"
+        "    {'query': 'best_lambda', 'budget': 0.45},\n"
+        "    {'query': 'pareto'}]})\n"
+        "assert out['count'] == 2 and not out['jax_loaded']\n"
+        "assert not handle_query(reg, 'stats', {})['jax_loaded']\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the serving tier'\n"
+        "print('REGISTRY-DEVICE-FREE-OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=REPO, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "REGISTRY-DEVICE-FREE-OK" in r.stdout

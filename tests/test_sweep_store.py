@@ -310,6 +310,8 @@ def test_best_lambda_interpolates_budget_crossing():
     c = query.tradeoff_curve(_synthetic_entry(COMM, J))
     best = query.best_lambda(c, 0.45)
     assert best["feasible"] and best["interpolated"]
+    assert best["crossing_skipped"] is False     # exact crossing, not a
+    # conservative grid fallback (tests/test_registry.py covers True)
     # comm is log-λ linear between (1e-3, 0.6) and (1e-2, 0.3): the 0.45
     # crossing sits at λ = 10^-2.5 with J halfway between 0.02 and 0.05
     np.testing.assert_allclose(best["lam"], 10 ** -2.5, rtol=1e-6)
@@ -348,6 +350,7 @@ def test_best_lambda_non_monotone_comm_skips_interpolation():
         _synthetic_entry((0.40, 0.31, 0.33, 0.10), (0.01, 0.02, 0.03, 0.2)))
     best = query.best_lambda(c, 0.32)
     assert best["feasible"] and not best["interpolated"]
+    assert best["crossing_skipped"] is True      # conservative, not exact
     assert best["lam"] == pytest.approx(1e-3)
     assert best["J"] == pytest.approx(0.02, rel=1e-5)
 
@@ -419,8 +422,7 @@ def test_serve_sweeps_once_cli(disk_store):
 
 
 def test_serve_sweeps_http_roundtrip(disk_store):
-    handler = type("H", (serve_sweeps._Handler,),
-                   {"store": SweepStore(disk_store)})
+    handler = serve_sweeps.make_handler(SweepStore(disk_store), quiet=True)
     httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
     t = threading.Thread(target=httpd.serve_forever, daemon=True)
     t.start()
