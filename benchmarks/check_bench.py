@@ -119,6 +119,18 @@ def check_suite(suite: str, committed: list[dict],
                     errors.append(f"{suite}: row {i} us_per_call={val} < 0")
                 elif key in POSITIVE_CHECKS and val <= 0:
                     errors.append(f"{suite}: row {i} {key}={val} <= 0")
+        # the lossy-channel invariant: the channel can only lose updates,
+        # so a delivered rate above the attempted rate is a broken row
+        # (1e-9 absorbs float32 summary-trace accumulation rounding)
+        if "delivered_rate" in row and "comm_rate" in row:
+            d, c = row["delivered_rate"], row["comm_rate"]
+            if not (isinstance(d, (int, float)) and math.isfinite(d)
+                    and isinstance(c, (int, float)) and math.isfinite(c)):
+                errors.append(f"{suite}: row {i} delivered/attempted rates "
+                              f"not finite numbers ({d!r}, {c!r})")
+            elif d > c + 1e-9:
+                errors.append(f"{suite}: row {i} delivered_rate={d} exceeds "
+                              f"attempted comm_rate={c}")
     return errors
 
 

@@ -1,0 +1,147 @@
+"""Degraded-edge channel study (EXPERIMENTS.md §Degraded edge).
+
+Every committed study so far assumed a *perfect* uplink: an agent that
+fires the trigger always delivers, instantly.  This study answers the
+lossy-edge question head on — do the theoretical trigger's comm savings
+and J guarantees survive packet loss, transmission delay, and stale
+local models, or does degradation force λ re-tuning?
+
+One sweep over a 64-instance garnet family crossed with the channel
+grid axis (``SweepSpec.channel_sets=``, DESIGN.md §10):
+
+    clean · 10%/30% uplink loss · delay d∈{1,4} · staleness s∈{1,8}
+
+for both trigger modes and a log-λ grid.  The summary trace separates
+*attempted* transmissions (``comm_rate`` — what the trigger decided,
+and what eq. 7 charges for) from *delivered* ones
+(``delivered_rate`` — what survived the channel), so the report rows
+carry both per (channel, trigger, λ) cell.  ``best_lambda`` budget
+answers per channel ask the deployment question: does the λ that meets
+a comm budget on a clean channel still meet it (at what J) when the
+channel drops 30% of updates?
+
+Results persist to a ``SweepStore`` (``experiments/bench/degraded_edge/
+store`` — the committed store-backed artifact) tagged
+``figure=degraded_edge``; the report pipeline (DESIGN.md §9) re-renders
+the frontier from the cold store with zero device computation.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import EXP_DIR
+from repro.core.algorithm1 import ParamSampler
+from repro.core.channel import ChannelSpec
+from repro.envs import family_sampler_fn, garnet_env_family, garnet_fleet_sets
+from repro.experiments import SweepSpec, SweepStore, sweep_or_load
+from repro.experiments import query as query_lib
+from repro.experiments.report import generate_report, render_degraded_edge
+
+EPS = 0.4
+RHO = 0.999
+DEFAULT_STORE = os.path.join(EXP_DIR, "degraded_edge", "store")
+COMM_BUDGET = 0.5
+
+# the channel grid: one clean control plus each degradation axis alone,
+# so every effect in the report is attributable to a single knob
+CHANNELS = (
+    ("clean", ChannelSpec()),
+    ("loss10", ChannelSpec(drop_prob=0.10)),
+    ("loss30", ChannelSpec(drop_prob=0.30)),
+    ("delay1", ChannelSpec(delay=1)),
+    ("delay4", ChannelSpec(delay=4)),
+    ("stale1", ChannelSpec(staleness=1)),
+    ("stale8", ChannelSpec(staleness=8)),
+)
+
+
+def _scale(smoke: bool) -> dict:
+    if smoke:
+        return dict(envs=8, states=10, agents=2, iters=20, samples=8,
+                    lambdas=(1e-3, 1e-1), seeds=(0,),
+                    channels=CHANNELS[:3] + CHANNELS[4:5])
+    return dict(envs=64, states=20, agents=4, iters=150, samples=10,
+                lambdas=tuple(np.logspace(-4, -1, 4)), seeds=(0, 1),
+                channels=CHANNELS)
+
+
+def run(smoke: bool = False, store=None) -> list[dict]:
+    cfg = _scale(smoke)
+    tmp = None
+    if store is None:
+        # smoke runs must not touch the committed real-scale store
+        if smoke:
+            tmp = tempfile.mkdtemp(prefix="degraded_edge_store_")
+            store = os.path.join(tmp, "store")
+        else:
+            store = DEFAULT_STORE
+    store = store if isinstance(store, SweepStore) else SweepStore(store)
+    try:
+        return _run(smoke, cfg, store)
+    finally:
+        if tmp is not None:
+            import shutil
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _run(smoke: bool, cfg: dict, store: SweepStore) -> list[dict]:
+
+    envs, fam = garnet_env_family(cfg["envs"], num_states=cfg["states"])
+    w0 = jnp.zeros(cfg["states"])
+    sampler = ParamSampler(fn=family_sampler_fn(cfg["samples"]), params=None)
+    # clean uniform-visit fleets: the channel is the only degradation axis
+    fleets = garnet_fleet_sets(envs, w0, cfg["agents"], num_junk=0)
+    labels = [name for name, _ in cfg["channels"]]
+
+    spec = SweepSpec(
+        modes=("theoretical", "practical"), lambdas=cfg["lambdas"],
+        seeds=cfg["seeds"], rhos=(RHO,), eps=EPS,
+        num_iterations=cfg["iters"], num_agents=cfg["agents"],
+        trace="summary",
+        channel_sets=tuple(c for _, c in cfg["channels"]))
+    t0 = time.perf_counter()
+    res = sweep_or_load(store, spec, sampler, w0, env_sets=fam,
+                        fleet_sets=fleets,
+                        extra={"figure": "degraded_edge",
+                               "channels": labels})
+    jax.block_until_ready(res.comm_rate)
+    runs = int(np.prod(np.asarray(res.comm_rate).shape))
+    us_per_run = (time.perf_counter() - t0) * 1e6 / runs
+    entry = store.get(spec)
+
+    # figure rows from the SAME renderer the report pipeline uses — the
+    # benchmark JSON and the regenerated report cannot drift apart
+    rows = []
+    for row in render_degraded_edge(entry)["rows"]:
+        row["us_per_call"] = us_per_run
+        rows.append(row)
+
+    # budget answers per channel: does the λ meeting the comm budget on a
+    # clean channel survive degradation, and at what J — asked of the store
+    for ci, ch in enumerate(labels):
+        for mode in entry.modes:
+            curve = query_lib.tradeoff_curve(entry, mode=mode,
+                                             select={"channel": ci})
+            best = query_lib.best_lambda(curve, COMM_BUDGET)
+            rows.append(dict(
+                bench="degraded_edge", channel=ch, mode=mode,
+                query=f"best_lambda@{COMM_BUDGET}", lam=best["lam"],
+                comm_rate=best["comm_rate"], J_final=best.get("J"),
+                feasible=best["feasible"], us_per_call=us_per_run))
+
+    # regenerate the report artifacts next to the store (the jax-free
+    # path is subprocess-asserted by benchmarks/report_regen.py)
+    out = os.path.join(os.path.dirname(store.root), "report")
+    index = generate_report(store, out)
+    rows.append(dict(bench="degraded_edge", suite="report",
+                     env_instances=cfg["envs"], channels=labels,
+                     store=store.root, report_dir=out,
+                     artifacts=len(index["artifacts"]), us_per_call=0.0))
+    return rows

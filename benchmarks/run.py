@@ -37,6 +37,7 @@ import time
 from benchmarks import (
     agents_scaling,
     comm_savings,
+    degraded_edge,
     fig2_grid_tradeoff,
     fig3_continuous,
     heterogeneity,
@@ -62,6 +63,7 @@ SUITES = {
     "resume_query": resume_query,
     "serve_load": serve_load,
     "heterogeneity": heterogeneity,
+    "degraded_edge": degraded_edge,
     "report_regen": report_regen,
     "kernels": kernels_bench,
     "roofline": roofline,
@@ -69,7 +71,7 @@ SUITES = {
 
 # suites that accept store= (persist results / reuse cached columns)
 STORE_AWARE = {"fig2", "fig3", "theorem1", "comm_savings", "heterogeneity",
-               "report_regen"}
+               "degraded_edge", "report_regen"}
 
 
 def _derived(row: dict) -> str:
@@ -143,7 +145,8 @@ def main() -> None:
                 failures += 1
                 continue
             label = row.get("bench", name)
-            sub = [str(row[k]) for k in ("regime", "fleet_class", "mode",
+            sub = [str(row[k]) for k in ("regime", "fleet_class", "channel",
+                                         "mode",
                                          "query", "panel", "lam", "arch",
                                          "shape", "mesh", "suite", "devices",
                                          "env_instances", "stage", "m",

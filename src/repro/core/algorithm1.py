@@ -33,6 +33,7 @@ from typing import Callable, NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import channel as channel_lib
 from repro.core import gain_dispatch
 from repro.core import server as server_lib
 from repro.core import vfa as vfa_lib
@@ -76,12 +77,20 @@ class ParamSampler(NamedTuple):
 
 
 class InnerTrace(NamedTuple):
-    """Per-iteration trace of one inner run (leading axis = N iterations)."""
+    """Per-iteration trace of one inner run (leading axis = N iterations).
+
+    ``alphas`` / ``comm_rate`` are the trigger's *attempted* transmissions
+    (eq. 7 accounting, channel or not); ``delivered`` is the channel-masked
+    subset that actually reached the server — populated only when the run
+    carries a lossy ``channel`` (``None`` otherwise, like the optional
+    ``SummaryTrace`` streams).
+    """
 
     weights: Array      # (N+1, n) w_0..w_N
     alphas: Array       # (N, m) transmit decisions
     gains: Array        # (N, m) evaluated gains
     comm_rate: Array    # scalar: (1/N) sum_k mean_i alpha_k^i   (eq. 7)
+    delivered: Optional[Array] = None   # (N, m) alpha * channel keep mask
 
 
 class TraceSpec(NamedTuple):
@@ -128,6 +137,11 @@ class SummaryTrace(NamedTuple):
     j_trajectory: Optional[Array]  # (N,) exact J(w_k), TraceSpec.j_trajectory
     alphas: Optional[Array]       # (N, m) when TraceSpec.alphas
     gains: Optional[Array]        # (N, m) when TraceSpec.gains
+    # channel accounting (None on the perfect-channel/default path):
+    # tx_counts/comm_rate above stay the *attempted* rates; these are the
+    # delivered subset after the channel's Bernoulli keep mask.
+    delivered_counts: Optional[Array] = None   # (m,) per-agent deliveries
+    delivered_rate: Optional[Array] = None     # scalar delivered comm rate
 
 
 FULL_TRACE = "full"
@@ -226,6 +240,8 @@ def gated_sgd_core(
     gain_backend: Optional[str] = None,
     trace: Union[str, TraceSpec] = "full",
     step_backend: Optional[str] = None,
+    channel: Optional[channel_lib.ChannelInputs] = None,
+    channel_caps: Optional[tuple[int, int]] = None,
 ) -> Union[InnerTrace, SummaryTrace]:
     """Branchless inner loop of Algorithm 1 (lines 5-9).
 
@@ -247,6 +263,14 @@ def gated_sgd_core(
     contract requires; ``"summary"`` / a ``TraceSpec`` streams O(1)-memory
     running summaries (``SummaryTrace``) so memory is independent of N —
     the policy the device-sharded sweep engine uses for big grids.
+
+    ``channel`` (with its static ring capacities ``channel_caps``; see
+    ``repro.core.channel``) switches to the lossy-edge variant: trigger
+    decisions stay the attempted transmissions, the server aggregates only
+    the delivered subset (Bernoulli keep mask, optional d-step delay ring),
+    and agents compute against s-step-stale weights.  ``channel=None``
+    (default) executes this exact function body — the perfect-channel
+    program is byte-for-byte the pre-channel one.
     """
     N = thresholds.shape[0]
     phi_matrix = terms.phi_matrix if terms is not None else None
@@ -255,6 +279,25 @@ def gated_sgd_core(
     # inside gain_dispatch: flipping the env var mid-process must not reuse
     # already-jitted callables).
     step_backend_r = gain_dispatch._resolve_step(step_backend)
+
+    if channel is not None:
+        # Static dispatch: the perfect-channel path below stays untouched
+        # (same RNG schedule, same ops — the bitwise-invariance contract).
+        if channel_caps is None:
+            raise ValueError(
+                "channel= needs the static ring capacities channel_caps="
+                "(delay_cap, stale_cap); build both via "
+                "repro.core.channel.channel_inputs(spec, num_agents)")
+        if step_backend_r == "megastep" and channel_caps[0] > 1:
+            raise NotImplementedError(
+                "step_backend='megastep' fuses the server update into the "
+                "per-step kernel, which cannot express a transmission delay "
+                "(delivered updates must land d steps later); use the "
+                "reference or fused step backend for channels with delay > 0")
+        return _channel_core(
+            rng, w0, mode_id, thresholds, tx_prob, sample_all, eps,
+            num_agents, terms, gain_backend, trace, step_backend,
+            step_backend_r, channel, channel_caps)
 
     def step_body(w, k, rng_k):
         """One gated-SGD step: (w, k, rng_k) -> (w_next, alphas, gains).
@@ -345,6 +388,162 @@ def gated_sgd_core(
         j_trajectory=j_traj,
         alphas=alphas_s,
         gains=gains_s,
+    )
+
+
+def _channel_core(
+    rng: Array,
+    w0: Array,
+    mode_id: Union[Array, int],
+    thresholds: Array,
+    tx_prob: Union[Array, float],
+    sample_all: SampleAll,
+    eps: float,
+    num_agents: int,
+    terms: Optional[ProblemTerms],
+    gain_backend: Optional[str],
+    trace: Union[str, TraceSpec],
+    step_backend: Optional[str],
+    step_backend_r: str,
+    channel: channel_lib.ChannelInputs,
+    channel_caps: tuple[int, int],
+) -> Union[InnerTrace, SummaryTrace]:
+    """Lossy-edge variant of the branchless inner loop (DESIGN.md §10).
+
+    Same per-step trigger arithmetic as ``gated_sgd_core``'s body, wrapped
+    in the channel semantics:
+
+    * **staleness** — a ring of the last ``stale_cap`` server weights; the
+      agent's whole local computation (stochastic gradients, gains, exact
+      grad for the theoretical trigger) reads ``w_{k-s}`` (clamped to
+      ``w_0`` while k < s), while the server update still applies to the
+      current ``w``.
+    * **drop** — ``delivered = alphas * Bernoulli(1 - drop_prob)``; the
+      keep mask draws from ``fold_in(rng_k, 1)`` so the agent/trigger key
+      schedule is exactly the perfect-channel one (a clean
+      ``ChannelSpec()`` reproduces the ``channel=None`` trajectory).
+    * **delay** — delivered aggregates enter a ``delay_cap`` pending ring
+      (sum + count per slot) and are applied ``d`` steps later with the
+      server's masked-mean arithmetic (eq. 6); zeros-init means nothing
+      arrives before step d, and the run's last d sends never land.
+
+    The ring capacities are static, the per-run ``delay``/``staleness``/
+    ``drop_prob`` are traced — one compiled program serves an entire
+    ``channel_sets`` grid axis.
+    """
+    N = thresholds.shape[0]
+    phi_matrix = terms.phi_matrix if terms is not None else None
+    delay_cap, stale_cap = channel_caps
+    m = num_agents
+
+    def step_body(w, stale_buf, pend_sum, pend_cnt, k, rng_k):
+        rngs = jax.random.split(rng_k, num_agents + 1)
+        keep = jax.random.bernoulli(
+            jax.random.fold_in(rng_k, 1), 1.0 - channel.drop_prob,
+            (num_agents,)).astype(jnp.float32)
+        w_stale = jnp.take(stale_buf, (k - channel.staleness) % stale_cap,
+                           axis=0)
+        phi_b, targets_b = sample_all(rngs[:-1])
+        grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
+            w_stale, phi_b, targets_b)
+        grad_j = terms.grad(w_stale) if terms is not None else None
+        if step_backend_r == "megastep":
+            # delay_cap == 1 here (checked at dispatch): the kernel's fused
+            # update IS the immediate arrival; the deliver mask rides into
+            # the kernel as one extra multiply after the threshold compare
+            alpha_rand = jax.random.bernoulli(
+                rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
+            w_next, alphas, gains = gain_dispatch.megastep(
+                mode_id, w, grads, phi_b, eps, thresholds[k], alpha_rand,
+                grad_j, phi_matrix, backend=gain_backend, deliver=keep)
+            delivered = alphas * keep
+        else:
+            gains = gain_dispatch.mode_gains(
+                mode_id, grads, phi_b, eps, grad_j, phi_matrix,
+                backend=gain_backend, step_backend=step_backend)
+            alpha_gate = should_transmit(gains, thresholds[k])
+            alpha_rand = jax.random.bernoulli(
+                rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
+            alphas = jnp.where(
+                mode_id == gain_dispatch.MODE_ALWAYS, jnp.ones(num_agents),
+                jnp.where(mode_id == gain_dispatch.MODE_NEVER,
+                          jnp.zeros(num_agents),
+                          jnp.where(mode_id == gain_dispatch.MODE_RANDOM,
+                                    alpha_rand, alpha_gate)))
+            if not isinstance(mode_id, jax.core.Tracer):
+                alphas = jax.lax.optimization_barrier(alphas)
+            delivered = alphas * keep
+            pend_sum = jax.lax.dynamic_update_index_in_dim(
+                pend_sum, jnp.einsum("m,mn->n", delivered, grads),
+                k % delay_cap, 0)
+            pend_cnt = jax.lax.dynamic_update_index_in_dim(
+                pend_cnt, jnp.sum(delivered), k % delay_cap, 0)
+            slot = (k - channel.delay) % delay_cap
+            arrived = jnp.take(pend_sum, slot, axis=0)
+            arrived_cnt = jnp.take(pend_cnt, slot, axis=0)
+            w_next = w - eps * (arrived / jnp.maximum(arrived_cnt, 1.0))
+        stale_buf = jax.lax.dynamic_update_index_in_dim(
+            stale_buf, w_next, (k + 1) % stale_cap, 0)
+        return w_next, stale_buf, pend_sum, pend_cnt, alphas, gains, delivered
+
+    rngs = jax.random.split(rng, N)
+    init_rings = (jnp.broadcast_to(w0, (stale_cap,) + w0.shape),
+                  jnp.zeros((delay_cap,) + w0.shape),
+                  jnp.zeros((delay_cap,)))
+
+    if trace == "full":
+        def step(carry, inp):
+            k, rng_k = inp
+            w_next, stale_buf, ps, pc, alphas, gains, delivered = step_body(
+                *carry, k, rng_k)
+            return (w_next, stale_buf, ps, pc), (w_next, alphas, gains,
+                                                 delivered)
+
+        (w_final, *_), (ws, alphas, gains, delivered) = jax.lax.scan(
+            step, (w0,) + init_rings, (jnp.arange(N), rngs))
+        del w_final
+        weights = jnp.concatenate([w0[None], ws], axis=0)
+        return InnerTrace(weights=weights, alphas=alphas, gains=gains,
+                          comm_rate=jnp.mean(alphas), delivered=delivered)
+
+    def step_summary(carry, inp):
+        (w, stale_buf, ps, pc, tx_counts, dl_counts,
+         gain_sum, gain_min, gain_max) = carry
+        k, rng_k = inp
+        w_next, stale_buf, ps, pc, alphas, gains, delivered = step_body(
+            w, stale_buf, ps, pc, k, rng_k)
+        carry = (w_next, stale_buf, ps, pc,
+                 tx_counts + alphas,
+                 dl_counts + delivered,
+                 gain_sum + gains,
+                 jnp.minimum(gain_min, gains),
+                 jnp.maximum(gain_max, gains))
+        ys = (terms.objective(w_next)
+              if trace.j_trajectory and terms is not None else None,
+              alphas if trace.alphas else None,
+              gains if trace.gains else None)
+        return carry, ys
+
+    init = (w0,) + init_rings + (
+        jnp.zeros((m,)), jnp.zeros((m,)), jnp.zeros((m,)),
+        jnp.full((m,), jnp.inf), jnp.full((m,), -jnp.inf))
+    carry, ys = jax.lax.scan(step_summary, init, (jnp.arange(N), rngs))
+    (w_final, _, _, _, tx_counts, dl_counts,
+     gain_sum, gain_min, gain_max) = carry
+    j_traj, alphas_s, gains_s = ys
+    return SummaryTrace(
+        final_weights=w_final,
+        comm_rate=jnp.sum(tx_counts) / (N * m),
+        tx_counts=tx_counts,
+        gain_mean=gain_sum / N,
+        gain_min=gain_min,
+        gain_max=gain_max,
+        j_final=terms.objective(w_final) if terms is not None else None,
+        j_trajectory=j_traj,
+        alphas=alphas_s,
+        gains=gains_s,
+        delivered_counts=dl_counts,
+        delivered_rate=jnp.sum(dl_counts) / (N * m),
     )
 
 

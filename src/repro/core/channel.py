@@ -1,0 +1,148 @@
+"""Lossy-edge channel model: degradation as trace-time data (DESIGN.md §10).
+
+Every committed study so far assumes a perfect uplink: an agent that fires
+the trigger always delivers, instantly, and its gains are computed against
+the server's *current* weights.  This module makes the channel itself sweep
+data, exactly like the trigger mode or lambda:
+
+* ``ChannelSpec`` — one uplink configuration, jax-free and hashable so it
+  canonicalizes through the summary store (``store.spec_payload``): a
+  per-agent (or shared) drop probability, a fixed transmission delay of
+  ``d`` steps, and a staleness of ``s`` steps (the agent's whole local
+  computation — stochastic gradient, gains, exact grad — runs against the
+  server weights from ``s`` steps ago).
+* ``ChannelInputs`` — the traced per-run form the branchless core consumes
+  (``repro.core.algorithm1.gated_sgd_core(channel=...)``); a stack of specs
+  becomes one ``ChannelInputs`` with a leading channel axis, which is how
+  ``SweepSpec.channel_sets`` rides the sweep grid.
+* ``channel_caps`` — the *static* ring-buffer capacities (max delay + 1,
+  max staleness + 1) that size the scanned pending/stale buffers; they are
+  jit statics, so one compiled program serves every channel row of a grid.
+
+Delivered-vs-attempted contract: the trigger's decision ``alpha`` is the
+*attempted* transmission; the channel applies an independent
+Bernoulli(1 - drop_prob) keep mask, and only ``delivered = alpha * keep``
+updates the server.  Traces report both, so comm-rate accounting (eq. 7)
+stays the paper's attempted rate while delivered throughput is a separate
+column.  The perfect channel is ``ChannelSpec()`` — but the *default* for
+every API is ``channel=None``, which executes the pre-channel program
+byte-for-byte (no extra RNG use, no ring buffers) and is dropped from the
+store's spec payload so committed hashes never move.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ChannelSpec(NamedTuple):
+    """One uplink channel configuration (jax-free; store-canonical).
+
+    ``drop_prob`` is a single float shared by all agents or a per-agent
+    tuple; ``delay`` holds every delivered update back ``d`` server steps
+    (an update sent at step k arrives at step k + d; the last d deliveries
+    of a run never land); ``staleness`` makes each agent compute against
+    ``w_{k-s}`` (clamped to ``w_0`` early on) while the server still applies
+    deliveries to its current weights — the async-SGD reading of a slow
+    downlink.
+    """
+
+    drop_prob: Union[float, tuple] = 0.0
+    delay: int = 0
+    staleness: int = 0
+
+
+PERFECT = ChannelSpec()
+
+
+class ChannelInputs(NamedTuple):
+    """Traced per-run channel data for the branchless core.
+
+    Built from one ``ChannelSpec`` via ``channel_inputs`` or, inside the
+    sweep engine, gathered as one row of the ``stack_channels`` stack.  The
+    same NamedTuple with a leading axis is the stacked (C, ...) form.
+    """
+
+    drop_prob: Array   # (m,) float32 per-agent uplink drop probability
+    delay: Array       # () int32 transmission delay in steps
+    staleness: Array   # () int32 gain/gradient staleness in steps
+
+
+def as_spec(channel: Union[ChannelSpec, dict, Sequence]) -> ChannelSpec:
+    """Coerce a ``ChannelSpec``, its dict form (store round trip), or a
+    plain ``(drop_prob, delay, staleness)`` sequence."""
+    if isinstance(channel, ChannelSpec):
+        spec = channel
+    elif isinstance(channel, dict):
+        spec = ChannelSpec(**channel)
+    else:
+        spec = ChannelSpec(*channel)
+    if isinstance(spec.drop_prob, list):
+        spec = spec._replace(drop_prob=tuple(spec.drop_prob))
+    return spec
+
+
+def validate_channel(channel, num_agents: Optional[int] = None) -> ChannelSpec:
+    """Validate one channel configuration; returns the coerced spec."""
+    spec = as_spec(channel)
+    probs = (spec.drop_prob if isinstance(spec.drop_prob, tuple)
+             else (spec.drop_prob,))
+    for p in probs:
+        if not isinstance(p, (int, float)) or not 0.0 <= float(p) <= 1.0:
+            raise ValueError(
+                f"channel drop_prob entries must lie in [0, 1], got {p!r}")
+    if (num_agents is not None and isinstance(spec.drop_prob, tuple)
+            and len(spec.drop_prob) != num_agents):
+        raise ValueError(
+            f"per-agent drop_prob has {len(spec.drop_prob)} entries for "
+            f"{num_agents} agents")
+    for name in ("delay", "staleness"):
+        v = getattr(spec, name)
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            raise ValueError(
+                f"channel {name} must be a non-negative int, got {v!r}")
+    return spec
+
+
+def channel_caps(channels: Sequence) -> tuple[int, int]:
+    """Static ring capacities covering every channel in the set.
+
+    Returns ``(delay_cap, stale_cap) = (max delay + 1, max staleness + 1)``
+    — jit statics sizing the scanned pending-delivery and stale-weights
+    buffers, so a whole ``channel_sets`` axis compiles to one program.
+    """
+    specs = [as_spec(c) for c in channels]
+    return (max(s.delay for s in specs) + 1,
+            max(s.staleness for s in specs) + 1)
+
+
+def _prob_row(spec: ChannelSpec, num_agents: int) -> jnp.ndarray:
+    return jnp.broadcast_to(
+        jnp.asarray(spec.drop_prob, dtype=jnp.float32), (num_agents,))
+
+
+def stack_channels(channels: Sequence, num_agents: int) -> ChannelInputs:
+    """Stack validated specs into the (C, ...) traced form for the sweep."""
+    specs = [validate_channel(c, num_agents) for c in channels]
+    return ChannelInputs(
+        drop_prob=jnp.stack([_prob_row(s, num_agents) for s in specs]),
+        delay=jnp.asarray([s.delay for s in specs], dtype=jnp.int32),
+        staleness=jnp.asarray([s.staleness for s in specs], dtype=jnp.int32),
+    )
+
+
+def channel_inputs(channel, num_agents: int
+                   ) -> tuple[ChannelInputs, tuple[int, int]]:
+    """Per-run convenience: one spec -> (traced inputs, static ring caps)."""
+    spec = validate_channel(channel, num_agents)
+    inputs = ChannelInputs(
+        drop_prob=_prob_row(spec, num_agents),
+        delay=jnp.asarray(spec.delay, dtype=jnp.int32),
+        staleness=jnp.asarray(spec.staleness, dtype=jnp.int32),
+    )
+    return inputs, channel_caps([spec])

@@ -249,6 +249,7 @@ def megastep(
     phi_matrix: Optional[Array],
     *,
     backend: Optional[str] = None,
+    deliver: Optional[Array] = None,
 ) -> tuple[Array, Array, Array]:
     """One whole gated-SGD inner step: gains + trigger + eq.-6 update.
 
@@ -266,6 +267,10 @@ def megastep(
       alpha_rand: (m,) pre-drawn f32 bernoulli decisions for random mode.
       grad_j:     (n,) exact grad J(w), or None when no model is available.
       phi_matrix: (n, n) exact second moment, or None.
+      deliver:    optional (m,) 0/1 channel keep mask (repro.core.channel):
+                  the update aggregates ``alphas * deliver`` — one extra
+                  multiply after the threshold compare — while the returned
+                  ``alphas`` stay the *attempted* transmissions.
 
     Returns ``(w_next (n,), alphas (m,), gains (m,))``.
 
@@ -284,7 +289,7 @@ def megastep(
         return _kernel_ops.megastep(
             phi_t, grads, w, ctl, alpha_rand,
             grad_j if have_model else None,
-            phi_matrix if have_model else None, eps=eps)
+            phi_matrix if have_model else None, deliver=deliver, eps=eps)
     stats = family_stats(grads, phi_t, grad_j, phi_matrix, backend=backend)
     gains = gains_from_stats(mode_id, stats, eps, phi_t.shape[1])
     gate = (gains <= -threshold).astype(jnp.float32)
@@ -299,7 +304,8 @@ def megastep(
     if not isinstance(mode_id, jax.core.Tracer):
         alphas = jax.lax.optimization_barrier(alphas)
     gf = grads.astype(jnp.float32)
-    upd = jnp.einsum("m,mn->n", alphas, gf) / jnp.maximum(jnp.sum(alphas), 1.0)
+    eff = alphas if deliver is None else alphas * deliver
+    upd = jnp.einsum("m,mn->n", eff, gf) / jnp.maximum(jnp.sum(eff), 1.0)
     return w - eps * upd, alphas, gains
 
 

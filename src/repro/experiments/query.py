@@ -124,8 +124,8 @@ def _interp_log_lam(curve: TradeoffCurve, lam: float,
 
 def tradeoff_at(curve: TradeoffCurve, lam: float) -> dict:
     """(comm, J) at λ, interpolated between cached grid points."""
-    if lam <= 0:
-        raise ValueError(f"λ must be positive, got {lam}")
+    if not np.isfinite(lam) or lam <= 0:
+        raise ValueError(f"λ must be a finite positive number, got {lam}")
     lo, hi = float(curve.lambdas[0]), float(curve.lambdas[-1])
     if not lo <= lam <= hi:
         raise ValueError(
@@ -158,8 +158,9 @@ def best_lambda(curve: TradeoffCurve, comm_budget: float) -> dict:
     curve non-monotone — the answer is then a conservative cached grid
     point, not the exact crossing; callers can tell the two apart.
     """
-    if not 0 <= comm_budget <= 1:
-        raise ValueError(f"comm budget must be in [0, 1], got {comm_budget}")
+    if not np.isfinite(comm_budget) or not 0 <= comm_budget <= 1:
+        raise ValueError(f"comm budget must be a finite number in [0, 1], "
+                         f"got {comm_budget}")
     feasible = curve.comm <= comm_budget
     if not feasible.any():
         i = int(np.argmin(curve.comm))
@@ -209,9 +210,13 @@ def best_lambda_batch(curve: TradeoffCurve,
     budgets = np.asarray(comm_budgets, np.float64).reshape(-1)
     if budgets.size == 0:
         raise ValueError("need at least one comm budget")
-    if np.any((budgets < 0) | (budgets > 1)):
-        bad = budgets[(budgets < 0) | (budgets > 1)][0]
-        raise ValueError(f"comm budget must be in [0, 1], got {bad}")
+    # ~isfinite matters: NaN compares False against both bounds, so without
+    # it a NaN budget sails through and poisons the whole vectorized pass
+    bad_mask = ~np.isfinite(budgets) | (budgets < 0) | (budgets > 1)
+    if np.any(bad_mask):
+        bad = budgets[bad_mask][0]
+        raise ValueError(f"comm budget must be a finite number in [0, 1], "
+                         f"got {bad}")
     comm = curve.comm
     j = curve.j
     log_lams = np.log(curve.lambdas)

@@ -400,12 +400,61 @@ def render_heterogeneity(entries: list[StoredSweep]) -> dict:
     return dict(figure="heterogeneity", rows=rows, svg=svg)
 
 
+def render_degraded_edge(entry: StoredSweep) -> dict:
+    """Lossy-edge channel study: attempted-vs-delivered comm rates and the
+    final J per (channel, trigger, λ) cell, envs and seeds averaged.  The
+    entry carries the ``channel`` grid axis (``SweepSpec.channel_sets=``)
+    and ``extra["channels"]`` labels; ``trace/delivered_rate`` is the
+    post-loss comm rate (comm_rate stays the trigger's *attempted* rate —
+    the delivered-vs-attempted contract, DESIGN.md §10)."""
+    labels = entry.extra.get("channels")
+    comm, j = _grid_arrays(entry)
+    dlv = entry.arrays.get("trace/delivered_rate")
+    keep = ("channel", "mode", "lam", "rho")
+    c = _mean_keep(comm, entry.axes, keep)
+    d = _mean_keep(dlv, entry.axes, keep) if dlv is not None else None
+    jm = _mean_keep(j, entry.axes, keep) if j is not None else None
+    num_ch = comm.shape[entry.axes.index("channel")]
+    env_n = (int(comm.shape[entry.axes.index("env_set")])
+             if "env_set" in entry.axes else 1)
+    rhos = [float(r) for r in entry.spec["rhos"]]
+    rows, series = [], []
+    for ci in range(num_ch):
+        ch = str(labels[ci]) if labels else str(ci)
+        for mi, mode in enumerate(entry.modes):
+            for li, lam in enumerate(entry.lambdas):
+                for ri, rho in enumerate(rhos):
+                    row = dict(bench="degraded_edge", channel=ch, mode=mode,
+                               lam=float(lam), rho=rho, env_instances=env_n,
+                               comm_rate=float(c[ci, mi, li, ri]),
+                               spec_hash=entry.spec_hash)
+                    if d is not None:
+                        row["delivered_rate"] = float(d[ci, mi, li, ri])
+                    if jm is not None:
+                        row["J_final"] = float(jm[ci, mi, li, ri])
+                        row["metric8"] = float(lam * c[ci, mi, li, ri]
+                                               + jm[ci, mi, li, ri])
+                    rows.append(row)
+            if jm is not None:
+                x = (d if d is not None else c)[ci, mi, :, 0]
+                order = np.argsort(x)
+                series.append(dict(label=f"{ch}/{mode}",
+                                   x=x[order].tolist(),
+                                   y=jm[ci, mi, :, 0][order].tolist()))
+    svg = svg_chart(series,
+                    title="Degraded edge — delivered-comm/J frontier "
+                          "per channel",
+                    xlabel="delivered comm rate", ylabel="final J (env mean)")
+    return dict(figure="degraded_edge", rows=rows, svg=svg)
+
+
 _RENDERERS = {
     "tradeoff": render_tradeoff,
     "fig2": render_fig2,
     "fig3": render_fig3,
     "theorem1": render_theorem1,
     "comm_savings": render_comm_savings,
+    "degraded_edge": render_degraded_edge,
 }
 
 

@@ -362,6 +362,45 @@ def run_sweep_resumable(
     return result
 
 
+def _lock_is_stale(store_dir: str, lock_path: str,
+                   store: Optional[Union[str, store_lib.SweepStore]]) -> bool:
+    """True iff an INCOMPLETE lock belongs to a provably *finished* sweep.
+
+    The completion sequence is: write every chunk -> commit the summary
+    store entry -> remove the lock.  A crash between the last two steps
+    leaves the lock on a sweep whose deliverable is already durable.  The
+    lock is stale only when all three completion facts hold: the lock's
+    exec hash matches the manifest (it is THIS plan's lock, not a crashed
+    resume under different statics), every manifest segment has a durable
+    chunk, and the summary store carries the manifest's spec hash with the
+    matching inputs digest.  Anything less — unreadable state included —
+    is treated as live.
+    """
+    try:
+        with open(lock_path) as f:
+            lock_hash = f.read().strip()
+        manifest_path = os.path.join(store_dir, _MANIFEST)
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        if lock_hash != manifest.get("exec_hash"):
+            return False
+        done = completed_chunks(store_dir, manifest["exec_hash"])
+        if sorted(done) != list(range(manifest["num_segments"])):
+            return False
+        root = store if store is not None else manifest.get("summary_store")
+        if root is None:
+            return False
+        s = (root if isinstance(root, store_lib.SweepStore)
+             else store_lib.SweepStore(root))
+        sh = manifest["spec_hash"]
+        if not s.has(sh):
+            return False
+        return (s.get(sh).extra.get("inputs_digest")
+                == manifest.get("inputs_digest"))
+    except (OSError, ValueError, KeyError):
+        return False
+
+
 def gc_finished(store_dir: str,
                 store: Optional[Union[str, store_lib.SweepStore]] = None,
                 ) -> dict:
@@ -373,7 +412,13 @@ def gc_finished(store_dir: str,
     dir when it is then empty) after verifying, in order:
 
     * no ``INCOMPLETE`` resume lock is present (the sweep is mid-run or
-      crashed; resuming to completion clears it) — else ``RuntimeError``;
+      crashed; resuming to completion clears it) — else ``RuntimeError``.
+      Exception: a *stale* lock.  ``run_sweep_resumable`` commits the
+      summary-store entry *before* removing the lock, so a crash in that
+      window leaves a fully-finished sweep locked forever.  When the lock
+      carries the manifest's exec hash, every manifest chunk is durable,
+      AND the summary store holds the final record with the matching
+      inputs digest, the lock is provably stale and is reclaimed;
     * the summary store (``store=``, defaulting to the root recorded in
       the manifest when the sweep ran with ``summary_store=``) holds an
       entry for the manifest's spec hash with the same inputs digest —
@@ -394,11 +439,17 @@ def gc_finished(store_dir: str,
                 "sweep this runtime finished; refusing to delete")
         return {"collected": False, "files": 0, "bytes": 0,
                 "reason": "nothing to collect"}
-    if os.path.exists(os.path.join(store_dir, _INCOMPLETE)):
-        raise RuntimeError(
-            f"{store_dir} carries the INCOMPLETE resume lock — the sweep "
-            "is running or crashed mid-run; resume it to completion (or "
-            "delete the dir manually) before collecting")
+    lock_path = os.path.join(store_dir, _INCOMPLETE)
+    if os.path.exists(lock_path):
+        if not _lock_is_stale(store_dir, lock_path, store):
+            raise RuntimeError(
+                f"{store_dir} carries the INCOMPLETE resume lock — the sweep "
+                "is running or crashed mid-run; resume it to completion (or "
+                "delete the dir manually) before collecting")
+        # crash landed between the summary-store commit and the lock
+        # removal: the final record is committed and every chunk durable,
+        # so finish the interrupted release and proceed with collection
+        os.remove(lock_path)
     with open(manifest_path) as f:
         manifest = json.load(f)
     if store is None:

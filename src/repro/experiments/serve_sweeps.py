@@ -112,7 +112,10 @@ def handle_batch(registry: StoreRegistry, payload: dict) -> dict:
         try:
             results.append(handle_query(registry, str(item.get("query", "")),
                                         params))
-        except (KeyError, ValueError, IndexError) as e:
+        except (KeyError, ValueError, IndexError, TypeError) as e:
+            # TypeError covers malformed JSON param types (lam=null,
+            # budget={...}): float(None) etc. must 400 the item, not 500
+            # the whole batch
             results.append({"error": str(e)})
     return {"query": "batch", "count": len(results), "results": results,
             "jax_loaded": "jax" in sys.modules}
@@ -161,7 +164,7 @@ class _Handler(BaseHTTPRequestHandler):
             if not isinstance(payload, dict):
                 raise ValueError("batch body must be a JSON object")
             body, code = handle_batch(self.registry, payload), 200
-        except (ValueError, KeyError) as e:
+        except (ValueError, KeyError, TypeError) as e:
             body, code = {"error": str(e)}, 400
         self._respond(body, code)
 

@@ -118,6 +118,12 @@ def spec_payload(spec) -> dict:
                                                "reference")
     if items.get("step_backend", None) == "reference":
         items.pop("step_backend", None)
+    # The perfect channel (channel_sets=None) is the pre-channel program
+    # byte-for-byte, so the default is dropped from the payload — the PR 5/6
+    # pattern again: every committed store hash stays stable, and only
+    # genuinely lossy sweeps hash apart.
+    if items.get("channel_sets", None) is None:
+        items.pop("channel_sets", None)
     return {str(k): _canon(v) for k, v in sorted(items.items())}
 
 

@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro import compat
+from repro.core import channel as channel_lib
 from repro.core import gain_dispatch
 from repro.core import vfa as vfa_lib
 from repro.core.algorithm1 import (
@@ -99,6 +100,14 @@ class SweepSpec:
     batching: str = "vmap"          # 'vmap' | 'map'
     trace: Union[str, TraceSpec] = "full"   # 'full' | 'summary' | TraceSpec
     chunk_size: Optional[int] = None
+    # Lossy-edge channel axis (repro.core.channel): a tuple of ChannelSpec
+    # rows adds a leading "channel" grid axis — every row of the grid runs
+    # under each channel (drop probability / delay / staleness as traced
+    # data; the ring capacities covering the whole set are jit statics).
+    # None (default) is the perfect channel: the pre-channel program runs
+    # byte-for-byte and the field is dropped from the store's spec payload,
+    # so committed hashes never move.
+    channel_sets: Optional[tuple] = None
     # Experiment label, part of the spec (and store) identity.  Sweeps whose
     # difference lives in *inputs* the spec cannot see — e.g. two fleet
     # compositions over the same grid (heterogeneity studies) — must carry
@@ -123,6 +132,20 @@ class SweepSpec:
                 f"step_backend must be one of {gain_dispatch.STEP_BACKENDS}, "
                 f"got {self.step_backend!r}")
         resolve_trace(self.trace)   # validates
+        if self.channel_sets is not None:
+            if not self.channel_sets:
+                raise ValueError(
+                    "channel_sets must be a non-empty tuple of ChannelSpec "
+                    "rows (or None for the perfect channel)")
+            coerced = tuple(channel_lib.validate_channel(c, self.num_agents)
+                            for c in self.channel_sets)
+            object.__setattr__(self, "channel_sets", coerced)
+            if (self.step_backend == "megastep"
+                    and max(c.delay for c in coerced) > 0):
+                raise ValueError(
+                    "step_backend='megastep' fuses the server update into "
+                    "the per-step kernel and cannot express a channel delay "
+                    "> 0; use the reference or fused step backend")
         if self.chunk_size is not None:
             if self.batching != "vmap":
                 raise ValueError("chunk_size only applies to batching='vmap' "
@@ -183,19 +206,22 @@ class _RunInputs(NamedTuple):
     tx_probs: Array             # (G,)
     set_idx: Optional[Array]    # (G,) index into the param-set stack, or None
     env_idx: Optional[Array]    # (G,) index into the env-family stack, or None
+    chan_idx: Optional[Array] = None   # (G,) index into the channel stack
 
 
 _EXEC_STATICS = ("sampler_fn", "eps", "num_agents", "gain_backend",
                  "step_backend", "batching", "share_params", "fleet_by_env",
-                 "per_run_terms", "trace", "chunk_size", "mesh")
+                 "per_run_terms", "trace", "chunk_size", "channel_caps",
+                 "mesh")
 
 
 def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
-                     env_terms, shared_terms, *, sampler_fn, eps, num_agents,
-                     gain_backend, step_backend, batching, share_params,
-                     fleet_by_env, per_run_terms, trace, chunk_size, mesh):
+                     env_terms, shared_terms, channel_stack, *, sampler_fn,
+                     eps, num_agents, gain_backend, step_backend, batching,
+                     share_params, fleet_by_env, per_run_terms, trace,
+                     chunk_size, channel_caps, mesh):
     def block(per_run, w0, shared_params, param_stack, env_stack, env_terms,
-              shared_terms):
+              shared_terms, channel_stack):
         """Execute a (shard-local) block of runs; leading axis = runs."""
 
         def one(run: _RunInputs):
@@ -208,6 +234,8 @@ def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
                       jax.tree.map(lambda x: x[run.set_idx], param_stack))
             terms = (jax.tree.map(lambda x: x[run.env_idx], env_terms)
                      if per_run_terms else shared_terms)
+            chan = (jax.tree.map(lambda x: x[run.chan_idx], channel_stack)
+                    if channel_stack is not None else None)
             if env_stack is not None:
                 env = jax.tree.map(lambda x: x[run.env_idx], env_stack)
                 sample_all = lambda rngs: jax.vmap(
@@ -218,7 +246,8 @@ def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
                 run.keys, w0, run.mode_ids, run.thresholds, run.tx_probs,
                 sample_all, eps, num_agents, terms=terms,
                 gain_backend=gain_backend, trace=trace,
-                step_backend=step_backend)
+                step_backend=step_backend, channel=chan,
+                channel_caps=channel_caps)
 
         if batching == "map":
             return jax.lax.map(one, per_run)
@@ -234,7 +263,7 @@ def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
 
     if mesh is None:
         return block(per_run, w0, shared_params, param_stack, env_stack,
-                     env_terms, shared_terms)
+                     env_terms, shared_terms, channel_stack)
     axis = mesh.axis_names[0]
     # pallas_call has no shard_map replication rule on jax <= 0.4, so the
     # kernel-backed gain paths must skip the check; the sweep is pure batch
@@ -243,10 +272,10 @@ def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
     check_vma = (gain_backend or gain_dispatch.default_backend()) != "pallas"
     sharded = compat.shard_map(
         block, mesh=mesh,
-        in_specs=(PartitionSpec(axis),) + (PartitionSpec(),) * 6,
+        in_specs=(PartitionSpec(axis),) + (PartitionSpec(),) * 7,
         out_specs=PartitionSpec(axis), check_vma=check_vma)
     return sharded(per_run, w0, shared_params, param_stack, env_stack,
-                   env_terms, shared_terms)
+                   env_terms, shared_terms, channel_stack)
 
 
 _sweep_exec = functools.partial(jax.jit, static_argnames=_EXEC_STATICS)(
@@ -292,6 +321,8 @@ class SweepPlan(NamedTuple):
     padded_runs: int             # Gp: multiple of device count x chunk size
     env_indices: Optional[np.ndarray]   # (G,) env index per run, unpadded
     fleet_by_env: bool = False   # param_stack is zipped with the env axis
+    channel_stack: object = None  # stacked ChannelInputs (C, ...), or None
+    channel_caps: object = None   # static (delay_cap, stale_cap), or None
 
     @property
     def num_devices(self) -> int:
@@ -366,6 +397,9 @@ def plan_sweep(
         P = int(jax.tree.leaves(param_sets)[0].shape[0])
         gs += (P,)
         axes += ("param_set",)
+    if spec.channel_sets is not None:
+        gs += (len(spec.channel_sets),)
+        axes += ("channel",)
     gs += (M, L, R, S)
     axes += BASE_AXES
     G = math.prod(gs)
@@ -374,6 +408,8 @@ def plan_sweep(
     mi, li, ri, si = grid[-4], grid[-3], grid[-2], grid[-1]
     ei = grid[0] if env_sets is not None else None
     pi = grid[1 if env_sets is not None else 0] if not share_params else None
+    # channel is always the innermost leading axis (right before the base 4)
+    ci = grid[len(gs) - 5] if spec.channel_sets is not None else None
 
     # Pad the flattened run axis so it divides evenly over devices and
     # chunks; padding runs recompute existing cells and are dropped by
@@ -403,13 +439,20 @@ def plan_sweep(
         env_stack = jax.tree.map(jnp.asarray, env_sets.params)
         if env_terms is not None:
             env_terms = jax.tree.map(jnp.asarray, env_terms)
+    channel_stack = channel_caps = None
+    if spec.channel_sets is not None:
+        channel_stack = channel_lib.stack_channels(
+            spec.channel_sets, spec.num_agents)
+        channel_caps = channel_lib.channel_caps(spec.channel_sets)
 
     per_run = _RunInputs(
         keys=keys, mode_ids=mode_ids, thresholds=thresholds,
         tx_probs=tx_probs,
         set_idx=None if share_params else jnp.asarray(pi[pad], jnp.int32),
         env_idx=(jnp.asarray(ei[pad], jnp.int32)
-                 if env_sets is not None else None))
+                 if env_sets is not None else None),
+        chan_idx=(jnp.asarray(ci[pad], jnp.int32)
+                  if spec.channel_sets is not None else None))
 
     return SweepPlan(
         spec=spec, per_run=per_run, w0=jnp.asarray(w0),
@@ -419,14 +462,16 @@ def plan_sweep(
         shared_terms=None if env_terms is not None else terms,
         sampler_fn=sampler.fn, mesh=mesh, gs=gs, axes=axes,
         num_runs=G, padded_runs=Gp, env_indices=ei,
-        fleet_by_env=fleet_sets is not None)
+        fleet_by_env=fleet_sets is not None,
+        channel_stack=channel_stack, channel_caps=channel_caps)
 
 
 def _exec_args(plan: SweepPlan, per_run: _RunInputs,
                chunk_size: Optional[int]):
     spec = plan.spec
     args = (per_run, plan.w0, plan.shared_params, plan.param_stack,
-            plan.env_stack, plan.env_terms, plan.shared_terms)
+            plan.env_stack, plan.env_terms, plan.shared_terms,
+            plan.channel_stack)
     kwargs = dict(
         sampler_fn=plan.sampler_fn, eps=spec.eps,
         num_agents=spec.num_agents, gain_backend=spec.gain_backend,
@@ -435,7 +480,7 @@ def _exec_args(plan: SweepPlan, per_run: _RunInputs,
         fleet_by_env=plan.fleet_by_env,
         per_run_terms=plan.env_terms is not None,
         trace=resolve_trace(spec.trace), chunk_size=chunk_size,
-        mesh=plan.mesh)
+        channel_caps=plan.channel_caps, mesh=plan.mesh)
     return args, kwargs
 
 

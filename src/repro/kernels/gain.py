@@ -90,6 +90,11 @@ _MODE_RANDOM, _MODE_ALWAYS, _MODE_NEVER = 3, 4, 5
 
 _BLOCKS_ENV = "REPRO_KERNEL_BLOCKS"
 
+# every block constant _block() can resolve; an env override naming
+# anything else is a typo that would otherwise silently do nothing
+_KNOWN_BLOCKS = ("block_t", "block_n", "block_m",
+                 "family_block_t", "family_block_n", "megastep_block_m")
+
 
 def env_blocks() -> dict[str, int]:
     """Parse ``REPRO_KERNEL_BLOCKS`` into a name->int override map."""
@@ -103,7 +108,17 @@ def env_blocks() -> dict[str, int]:
             raise ValueError(
                 f"{_BLOCKS_ENV} entries must be name=int, got {item!r}")
         name, _, val = item.partition("=")
-        out[name.strip()] = int(val)
+        name = name.strip()
+        if name not in _KNOWN_BLOCKS:
+            raise ValueError(
+                f"{_BLOCKS_ENV}: unknown block name {name!r} "
+                f"(valid names: {', '.join(_KNOWN_BLOCKS)})")
+        try:
+            out[name] = int(val)
+        except ValueError:
+            raise ValueError(
+                f"{_BLOCKS_ENV}: {name}={val.strip()!r} is not an "
+                "integer") from None
     return out
 
 
@@ -295,9 +310,9 @@ def gain_family_stats(phi: Array, g: Array,
 # ---------------------------------------------------------------------------
 
 
-def _megastep_kernel(with_model: bool, pm_batched: bool, eps: float,
-                     num_samples: int, num_agents: int, block_m: int,
-                     *refs):
+def _megastep_kernel(with_model: bool, with_deliver: bool, pm_batched: bool,
+                     eps: float, num_samples: int, num_agents: int,
+                     block_m: int, *refs):
     """Kernel body: one whole gated-SGD step, grid (R, m-blk, T-tile, n-tile).
 
     Tiles accumulate exactly like ``_family_kernel`` (projection scratch per
@@ -309,15 +324,21 @@ def _megastep_kernel(with_model: bool, pm_batched: bool, eps: float,
     run-wide scratch row; the last agent block of each run writes
     ``w_next = w - eps * upd / max(cnt, 1)`` (eq. 6).  Per-run control
     scalars ride in as a (R, 2) ``[threshold, mode_id]`` array.
+
+    ``with_deliver`` adds the lossy-channel keep mask (repro.core.channel):
+    the gated-update accumulation aggregates ``alphas * deliver`` — one
+    extra multiply after the threshold compare — while the alphas output
+    stays the attempted transmissions.
     """
+    refs = list(refs)
+    (phi_ref, gcol_ref, gfull_ref, ctl_ref, arand_ref, w_ref) = refs[:6]
+    refs = refs[6:]
+    dlv_ref = refs.pop(0) if with_deliver else None
     if with_model:
-        (phi_ref, gcol_ref, gfull_ref, ctl_ref, arand_ref, w_ref,
-         gj_ref, pm_ref, wout_ref, aout_ref, gout_ref,
-         proj_ref, stats_ref, upd_ref, cnt_ref) = refs
-    else:
-        (phi_ref, gcol_ref, gfull_ref, ctl_ref, arand_ref, w_ref,
-         wout_ref, aout_ref, gout_ref,
-         proj_ref, stats_ref, upd_ref, cnt_ref) = refs
+        gj_ref, pm_ref = refs[:2]
+        refs = refs[2:]
+    (wout_ref, aout_ref, gout_ref,
+     proj_ref, stats_ref, upd_ref, cnt_ref) = refs
     ai = pl.program_id(1)
     ti = pl.program_id(2)
     ni = pl.program_id(3)
@@ -390,10 +411,12 @@ def _megastep_kernel(with_model: bool, pm_batched: bool, eps: float,
         alphas = alphas * (idx < num_agents).astype(jnp.float32)
         gout_ref[...] = gains[None]
         aout_ref[...] = alphas[None]
+        # channel keep mask: only delivered transmissions enter the update
+        eff = alphas * dlv_ref[0] if with_deliver else alphas
         gfull = gfull_ref[0].astype(jnp.float32)                # (BM, n_pad)
-        upd_ref[...] += jnp.dot(alphas[None, :], gfull,
+        upd_ref[...] += jnp.dot(eff[None, :], gfull,
                                 preferred_element_type=jnp.float32)
-        cnt_ref[...] += jnp.sum(alphas)[None, None]
+        cnt_ref[...] += jnp.sum(eff)[None, None]
 
     @pl.when(jnp.logical_and(ai == na - 1, last))
     def _write_weights():
@@ -406,6 +429,7 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
                   alpha_rand: Array,
                   grad_j: Optional[Array] = None,
                   phi_matrix: Optional[Array] = None,
+                  deliver: Optional[Array] = None,
                   *, eps: float, interpret: bool = True,
                   block_m: Optional[int] = None,
                   block_t: Optional[int] = None,
@@ -422,6 +446,9 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
       grad_j:     (R, n) exact grad J(w), or None when no model is given.
       phi_matrix: (n, n) grid-shared — or (R, n, n) per-run — exact second
                   moment Phi, or None.
+      deliver:    optional (R, m) 0/1 channel keep mask; when given, the
+                  gated update aggregates ``alphas * deliver`` while the
+                  alphas output stays the attempted transmissions.
 
     Returns ``(w_next (R, n), alphas (R, m), gains (R, m))`` — everything
     Algorithm 1's step emits after the gradients: eq. 13/15/Remark-4 gains
@@ -444,6 +471,8 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
         phi = jnp.pad(phi, ((0, 0), (0, pad_m), (0, pad_t), (0, pad_n)))
         g = jnp.pad(g, ((0, 0), (0, pad_m), (0, pad_n)))
         alpha_rand = jnp.pad(alpha_rand, ((0, 0), (0, pad_m)))
+        if deliver is not None:
+            deliver = jnp.pad(deliver, ((0, 0), (0, pad_m)))
     if pad_n:
         w = jnp.pad(w, ((0, 0), (0, pad_n)))
         if with_model:
@@ -462,6 +491,10 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
         pl.BlockSpec((1, np_), lambda r, a, t, i: (r, 0)),
     ]
     operands = [phi, g, g, ctl, alpha_rand, w]
+    with_deliver = deliver is not None
+    if with_deliver:
+        in_specs.append(pl.BlockSpec((1, bm), lambda r, a, t, i: (r, a)))
+        operands.append(deliver)
     pm_batched = with_model and phi_matrix.ndim == 3
     if with_model:
         in_specs.append(pl.BlockSpec((1, bn), lambda r, a, t, i: (r, i)))
@@ -473,8 +506,8 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
                 pl.BlockSpec((bn, np_), lambda r, a, t, i: (i, 0)))
         operands += [grad_j, phi_matrix]
     w_next, alphas, gains = pl.pallas_call(
-        functools.partial(_megastep_kernel, with_model, pm_batched, eps,
-                          T, m, bm),
+        functools.partial(_megastep_kernel, with_model, with_deliver,
+                          pm_batched, eps, T, m, bm),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -499,9 +532,9 @@ def megastep_call(phi: Array, g: Array, w: Array, ctl: Array,
 
 
 @functools.lru_cache(maxsize=None)
-def _megastep_batched(with_model: bool, eps: float, interpret: bool,
-                      block_m: Optional[int], block_t: Optional[int],
-                      block_n: Optional[int]):
+def _megastep_batched(with_model: bool, with_deliver: bool, eps: float,
+                      interpret: bool, block_m: Optional[int],
+                      block_t: Optional[int], block_n: Optional[int]):
     """Per-run megastep with a ``custom_vmap`` rule that turns the sweep
     engine's vmap over runs into the kernel's leading grid axis.
 
@@ -511,18 +544,40 @@ def _megastep_batched(with_model: bool, eps: float, interpret: bool,
     axis — R runs x m agents in the same program, never a kernel per run.
     A grid-shared ``phi_matrix`` (the common case) stays unbatched all the
     way into the kernel's BlockSpecs instead of being broadcast R times.
+    ``with_deliver`` adds the channel keep mask as a batched (m,) operand
+    right after ``alpha_rand`` (same shape, same batching rule).
     """
     kw = dict(eps=eps, interpret=interpret, block_m=block_m,
               block_t=block_t, block_n=block_n)
 
-    def _call(phi, g, w, ctl, arand, grad_j=None, phi_matrix=None):
-        return megastep_call(phi, g, w, ctl, arand, grad_j, phi_matrix, **kw)
+    def _call(phi, g, w, ctl, arand, deliver=None, grad_j=None,
+              phi_matrix=None):
+        return megastep_call(phi, g, w, ctl, arand, grad_j, phi_matrix,
+                             deliver, **kw)
 
-    if with_model:
+    if with_model and with_deliver:
+        @jax.custom_batching.custom_vmap
+        def step(phi, g, w, ctl, arand, deliver, grad_j, phi_matrix):
+            out = _call(phi[None], g[None], w[None], ctl[None], arand[None],
+                        deliver[None], grad_j[None], phi_matrix)
+            return jax.tree.map(lambda x: x[0], out)
+
+        @step.def_vmap
+        def _rule(axis_size, in_batched, phi, g, w, ctl, arand, deliver,
+                  grad_j, phi_matrix):
+            def up(x, b):
+                return x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+            args = [up(a, b) for a, b in zip(
+                (phi, g, w, ctl, arand, deliver, grad_j), in_batched[:7])]
+            # phi_matrix: batched => (R, n, n) per-run slabs; unbatched =>
+            # shared (n, n), streamed once for every run's grid programs
+            out = _call(*args, phi_matrix)
+            return out, (True, True, True)
+    elif with_model:
         @jax.custom_batching.custom_vmap
         def step(phi, g, w, ctl, arand, grad_j, phi_matrix):
             out = _call(phi[None], g[None], w[None], ctl[None], arand[None],
-                        grad_j[None], phi_matrix)
+                        None, grad_j[None], phi_matrix)
             return jax.tree.map(lambda x: x[0], out)
 
         @step.def_vmap
@@ -531,10 +586,25 @@ def _megastep_batched(with_model: bool, eps: float, interpret: bool,
             def up(x, b):
                 return x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
             args = [up(a, b) for a, b in zip(
-                (phi, g, w, ctl, arand, grad_j), in_batched[:6])]
+                (phi, g, w, ctl, arand), in_batched[:5])]
+            args += [None, up(grad_j, in_batched[5])]
             # phi_matrix: batched => (R, n, n) per-run slabs; unbatched =>
             # shared (n, n), streamed once for every run's grid programs
             out = _call(*args, phi_matrix)
+            return out, (True, True, True)
+    elif with_deliver:
+        @jax.custom_batching.custom_vmap
+        def step(phi, g, w, ctl, arand, deliver):
+            out = _call(phi[None], g[None], w[None], ctl[None], arand[None],
+                        deliver[None])
+            return jax.tree.map(lambda x: x[0], out)
+
+        @step.def_vmap
+        def _rule(axis_size, in_batched, phi, g, w, ctl, arand, deliver):
+            def up(x, b):
+                return x if b else jnp.broadcast_to(x, (axis_size,) + x.shape)
+            out = _call(*[up(a, b) for a, b in zip(
+                (phi, g, w, ctl, arand, deliver), in_batched)])
             return out, (True, True, True)
     else:
         @jax.custom_batching.custom_vmap
@@ -556,6 +626,7 @@ def _megastep_batched(with_model: bool, eps: float, interpret: bool,
 def megastep(phi: Array, g: Array, w: Array, ctl: Array, alpha_rand: Array,
              grad_j: Optional[Array] = None,
              phi_matrix: Optional[Array] = None,
+             deliver: Optional[Array] = None,
              *, eps: float, interpret: bool = True,
              block_m: Optional[int] = None, block_t: Optional[int] = None,
              block_n: Optional[int] = None) -> tuple[Array, Array, Array]:
@@ -564,9 +635,13 @@ def megastep(phi: Array, g: Array, w: Array, ctl: Array, alpha_rand: Array,
     Shapes are ``megastep_call``'s without the leading run axis; vmapping
     this function batches the *kernel grid*, not the call.
     """
+    with_model = grad_j is not None and phi_matrix is not None
     step = _megastep_batched(
-        grad_j is not None and phi_matrix is not None, eps, interpret,
+        with_model, deliver is not None, eps, interpret,
         block_m, block_t, block_n)
-    if grad_j is None or phi_matrix is None:
-        return step(phi, g, w, ctl, alpha_rand)
-    return step(phi, g, w, ctl, alpha_rand, grad_j, phi_matrix)
+    args = (phi, g, w, ctl, alpha_rand)
+    if deliver is not None:
+        args += (deliver,)
+    if with_model:
+        args += (grad_j, phi_matrix)
+    return step(*args)

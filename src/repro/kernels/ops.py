@@ -53,11 +53,13 @@ def gain_family_stats(phi: Array, g: Array, grad_j=None,
 
 @functools.partial(jax.jit, static_argnames=("eps",))
 def megastep(phi: Array, g: Array, w: Array, ctl: Array, alpha_rand: Array,
-             grad_j=None, phi_matrix=None, *,
+             grad_j=None, phi_matrix=None, deliver=None, *,
              eps: float) -> tuple[Array, Array, Array]:
     """One whole gated-SGD inner step (stats + gains + trigger + eq.-6
-    update) in a single kernel; vmapping over runs batches the grid."""
-    return _megastep(phi, g, w, ctl, alpha_rand, grad_j, phi_matrix,
+    update) in a single kernel; vmapping over runs batches the grid.
+    ``deliver`` is the optional (m,) lossy-channel keep mask — the update
+    aggregates ``alphas * deliver``; alphas stay the attempted decisions."""
+    return _megastep(phi, g, w, ctl, alpha_rand, grad_j, phi_matrix, deliver,
                      eps=eps, interpret=_default_interpret())
 
 

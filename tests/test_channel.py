@@ -1,0 +1,338 @@
+"""Lossy-edge channel model contract (ISSUE 8, DESIGN.md §10):
+
+* a clean ``ChannelSpec()`` row reproduces the ``channel=None`` sweep
+  bitwise — the perfect-channel default is invariant under the channel
+  machinery (the fold_in drop draw never perturbs the agent/trigger key
+  schedule);
+* attempted vs delivered separate exactly: ``alphas`` stay the
+  trigger's decisions, ``delivered = alphas * keep``, and the summary
+  counts are the full trace's column sums;
+* delay holds the server weights for exactly d steps; staleness changes
+  the trajectory only after its window;
+* the fused and megastep step backends agree with the reference oracle
+  under a channel (megastep: drop/staleness in-kernel, delay refused);
+* crash-resume over a channel-axis grid stays bitwise identical;
+* hash stability: the committed store hashes re-derive byte-identically
+  and a ``channel_sets=None`` spec hashes as if the field never existed.
+"""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import ParamSampler
+from repro.core.channel import (
+    ChannelSpec,
+    as_spec,
+    channel_caps,
+    stack_channels,
+    validate_channel,
+)
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments.runtime import run_sweep_resumable
+from repro.experiments.store import SweepStore, spec_hash, spec_payload
+
+EPS = 0.5
+N = 40
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+# the committed heterogeneity store's entry hashes (ISSUE 8 acceptance:
+# the channel field must not move ANY committed hash)
+HET_HASHES = (
+    "17ca6a3b1a27a13f42b7676ab1f9774f6b2c20cb088e716d888c7c8c0cdbacf9",
+    "73a0b01d1be8484bcdcd8b29818a4c60ece30d294b713553d80dd253714d2a0b",
+)
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical"), lambdas=(1e-3, 1e-1),
+                seeds=(0, 1), rhos=(RHO,), eps=EPS, num_iterations=N,
+                num_agents=2)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+def _bitwise(got, ref, fields=("weights", "alphas", "comm_rate")):
+    for name in fields:
+        a = np.asarray(getattr(got, name))
+        b = np.asarray(getattr(ref, name))
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+# ---------------------------------------------------- spec validation ----
+
+
+def test_channel_spec_coercion_and_validation():
+    assert as_spec({"drop_prob": 0.1, "delay": 2}) == ChannelSpec(0.1, 2, 0)
+    assert as_spec(ChannelSpec(0.2)) == ChannelSpec(0.2)
+    per_agent = validate_channel(ChannelSpec(drop_prob=[0.1, 0.3]), 2)
+    assert per_agent.drop_prob == (0.1, 0.3)
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        validate_channel(ChannelSpec(drop_prob=1.5))
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        validate_channel(ChannelSpec(drop_prob=-0.1))
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        validate_channel(ChannelSpec(drop_prob="lossy"))
+    with pytest.raises(ValueError, match="2 agents"):
+        validate_channel(ChannelSpec(drop_prob=(0.1, 0.2, 0.3)), 2)
+    with pytest.raises(ValueError, match="non-negative"):
+        validate_channel(ChannelSpec(delay=-1))
+    with pytest.raises(ValueError, match="int"):
+        validate_channel(ChannelSpec(staleness=True))
+
+
+def test_sweep_spec_channel_sets_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        _spec(channel_sets=())
+    with pytest.raises(ValueError, match="megastep.*delay|delay.*megastep"):
+        _spec(step_backend="megastep",
+              channel_sets=(ChannelSpec(delay=1),))
+    # drop/staleness are fine under megastep — only delay is fused away
+    _spec(step_backend="megastep",
+          channel_sets=(ChannelSpec(drop_prob=0.5, staleness=2),))
+
+
+def test_channel_caps_and_stacking():
+    chans = (ChannelSpec(), ChannelSpec(drop_prob=0.3, delay=2, staleness=5))
+    assert channel_caps(chans) == (3, 6)
+    stack = stack_channels(chans, num_agents=2)
+    assert stack.drop_prob.shape == (2, 2)
+    np.testing.assert_allclose(np.asarray(stack.drop_prob[1]), [0.3, 0.3])
+    assert np.asarray(stack.delay).tolist() == [0, 2]
+    assert np.asarray(stack.staleness).tolist() == [0, 5]
+
+
+# ------------------------------------------- perfect-channel invariance ----
+
+
+def test_clean_channel_bitwise_equals_no_channel_full_trace():
+    """A clean ChannelSpec() row IS the perfect channel — bitwise."""
+    sampler = _sampler()
+    ref = run_sweep(_spec(trace="full"), sampler, W0, problem=PROB)
+    got = run_sweep(_spec(trace="full", channel_sets=(ChannelSpec(),)),
+                    sampler, W0, problem=PROB)
+    assert got.axes == ("channel",) + ref.axes
+    for name in ("weights", "alphas", "gains", "comm_rate"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.trace, name))[0],
+            np.asarray(getattr(ref.trace, name)), err_msg=name)
+    # nothing dropped: every attempted transmission is delivered
+    np.testing.assert_array_equal(np.asarray(got.trace.delivered[0]),
+                                  np.asarray(got.trace.alphas[0]))
+
+
+def test_clean_channel_bitwise_equals_no_channel_summary():
+    sampler = _sampler()
+    ref = run_sweep(_spec(trace="summary"), sampler, W0, problem=PROB)
+    got = run_sweep(_spec(trace="summary", channel_sets=(ChannelSpec(),)),
+                    sampler, W0, problem=PROB)
+    for name in ("final_weights", "tx_counts", "comm_rate", "j_final"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.trace, name))[0],
+            np.asarray(getattr(ref.trace, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(got.trace.delivered_counts),
+                                  np.asarray(got.trace.tx_counts))
+    np.testing.assert_array_equal(np.asarray(got.trace.delivered_rate),
+                                  np.asarray(got.trace.comm_rate))
+
+
+# -------------------------------------------------- drop semantics --------
+
+
+def test_drop_all_attempts_but_delivers_nothing():
+    """p_drop=1: the trigger still fires (attempted > 0) but the server
+    never receives an update — weights stay frozen at w0."""
+    spec = _spec(trace="full", modes=("always", "theoretical"),
+                 channel_sets=(ChannelSpec(drop_prob=1.0),))
+    res = run_sweep(spec, _sampler(), W0, problem=PROB)
+    delivered = np.asarray(res.trace.delivered)
+    alphas = np.asarray(res.trace.alphas)
+    weights = np.asarray(res.trace.weights)
+    assert delivered.sum() == 0.0
+    assert alphas[0, 0].sum() == alphas[0, 0].size     # "always" attempts all
+    np.testing.assert_array_equal(weights, np.zeros_like(weights))
+
+
+def test_drop_delivered_is_masked_attempted_and_counts_agree():
+    chans = (ChannelSpec(drop_prob=0.5),)
+    full = run_sweep(_spec(trace="full", channel_sets=chans),
+                     _sampler(), W0, problem=PROB)
+    alphas = np.asarray(full.trace.alphas)
+    delivered = np.asarray(full.trace.delivered)
+    # delivered is a {keep} mask over attempted: never new, never negative
+    assert np.all((delivered == 0.0) | (delivered == alphas))
+    assert np.all(delivered <= alphas)
+    assert 0 < delivered.sum() < alphas.sum()
+    # the summary trace's counts are exactly the full trace's column sums
+    summ = run_sweep(_spec(trace="summary", channel_sets=chans),
+                     _sampler(), W0, problem=PROB)
+    np.testing.assert_allclose(np.asarray(summ.trace.tx_counts),
+                               alphas.sum(axis=-2), rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(summ.trace.delivered_counts),
+                               delivered.sum(axis=-2), rtol=0, atol=1e-5)
+
+
+def test_per_agent_drop_probabilities():
+    """Per-agent (p_0=0, p_1=1): agent 0's updates all land, agent 1's
+    never do — on the same trigger decisions."""
+    spec = _spec(trace="full", modes=("always",), lambdas=(1e-3,),
+                 seeds=(0,), channel_sets=(ChannelSpec(drop_prob=(0.0, 1.0)),))
+    res = run_sweep(spec, _sampler(), W0, problem=PROB)
+    delivered = np.asarray(res.trace.delivered)[0, 0, 0, 0, 0]   # (N, m)
+    np.testing.assert_array_equal(delivered[:, 0], np.ones(N))
+    np.testing.assert_array_equal(delivered[:, 1], np.zeros(N))
+
+
+# -------------------------------------------- delay / staleness -----------
+
+
+def test_delay_holds_weights_for_exactly_d_steps():
+    d = 3
+    spec = _spec(trace="full", modes=("always",), lambdas=(1e-3,),
+                 seeds=(0,), step_backend="reference",
+                 channel_sets=(ChannelSpec(delay=d),))
+    res = run_sweep(spec, _sampler(), W0, problem=PROB)
+    weights = np.asarray(res.trace.weights)[0, 0, 0, 0, 0]   # (N+1, n)
+    # step-0's update arrives at step d: w_0..w_d are w0, w_{d+1} moves
+    np.testing.assert_array_equal(weights[:d + 1],
+                                  np.zeros_like(weights[:d + 1]))
+    assert np.any(weights[d + 1] != 0.0)
+
+
+def test_staleness_changes_trajectory_only_after_onset():
+    s = 2
+    base = dict(trace="full", modes=("theoretical",), lambdas=(1e-3,),
+                seeds=(0,), step_backend="reference")
+    clean = run_sweep(_spec(channel_sets=(ChannelSpec(),), **base),
+                      _sampler(), W0, problem=PROB)
+    stale = run_sweep(_spec(channel_sets=(ChannelSpec(staleness=s),), **base),
+                      _sampler(), W0, problem=PROB)
+    wc = np.asarray(clean.trace.weights)[0, 0, 0, 0, 0]
+    ws = np.asarray(stale.trace.weights)[0, 0, 0, 0, 0]
+    # at k=0 the stale ring reads w0 == the live weights, so the first
+    # update is bit-identical; from k=1 the agent sees w_{k-s} (clamped
+    # to w0) instead of w_k and the trajectories diverge
+    np.testing.assert_array_equal(ws[:2], wc[:2])
+    assert np.any(ws != wc)
+
+
+# ------------------------------------------------ backend parity ----------
+
+
+@pytest.mark.parametrize("backend", ["fused", "megastep"])
+def test_step_backend_parity_under_channel(backend):
+    """The lossy-channel reference path is the oracle; fused/megastep
+    agree bitwise on decisions, deliveries and weights (megastep: no
+    delay — it fuses the server update into the step kernel)."""
+    chans = (ChannelSpec(drop_prob=0.3, staleness=1),
+             ChannelSpec(drop_prob=0.3, delay=2))
+    if backend == "megastep":
+        chans = chans[:1]
+    sampler = _sampler()
+    ref = run_sweep(_spec(trace="full", channel_sets=chans,
+                          step_backend="reference"),
+                    sampler, W0, problem=PROB)
+    got = run_sweep(_spec(trace="full", channel_sets=chans,
+                          step_backend=backend),
+                    sampler, W0, problem=PROB)
+    for name in ("weights", "alphas", "delivered", "comm_rate"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.trace, name)),
+            np.asarray(getattr(ref.trace, name)), err_msg=name)
+    np.testing.assert_allclose(np.asarray(got.trace.gains),
+                               np.asarray(ref.trace.gains), rtol=1e-5)
+
+
+def test_megastep_refuses_delay_at_trace_time(monkeypatch):
+    """Env-resolved megastep (spec says None) is caught at trace time."""
+    monkeypatch.setenv("REPRO_STEP_BACKEND", "megastep")
+    spec = _spec(trace="summary", channel_sets=(ChannelSpec(delay=2),))
+    with pytest.raises(NotImplementedError, match="delay"):
+        run_sweep(spec, _sampler(), W0, problem=PROB)
+
+
+# -------------------------------------------------- crash resume ----------
+
+
+def test_crash_resume_bitwise_with_channel_axis(tmp_path):
+    """Kill after 1 chunk and resume: the channel grid axis rides the
+    resumable runtime bitwise (delivered counts included)."""
+    spec = _spec(trace="summary", chunk_size=4, step_backend="reference",
+                 channel_sets=(ChannelSpec(),
+                               ChannelSpec(drop_prob=0.3, delay=1)))
+    d = str(tmp_path / "s")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    for f in sorted(os.listdir(d))[2:]:
+        if f.startswith("chunk_"):
+            os.remove(os.path.join(d, f))
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    assert got.axes == ref.axes
+    for name in type(ref.trace)._fields:
+        a, b = getattr(got.trace, name), getattr(ref.trace, name)
+        if b is None:
+            assert a is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"trace.{name}")
+
+
+# ------------------------------------------------- hash stability ---------
+
+
+def test_channel_sets_none_is_absent_from_payload():
+    spec = _spec()
+    payload = spec_payload(spec)
+    assert "channel_sets" not in payload
+    # and a spec that never heard of the field hashes identically
+    legacy = {k: v for k, v in dataclasses.asdict(spec).items()
+              if k != "channel_sets"}
+    assert spec_hash(legacy) == spec_hash(spec)
+    # a real channel row DOES shape the hash
+    lossy = _spec(channel_sets=(ChannelSpec(drop_prob=0.3),))
+    assert "channel_sets" in spec_payload(lossy)
+    assert spec_hash(lossy) != spec_hash(spec)
+    # dict / JSON round-trip keeps the lossy hash stable
+    clean_row = _spec(channel_sets=(ChannelSpec(),))
+    assert spec_hash(clean_row) != spec_hash(spec)
+
+
+def test_committed_heterogeneity_hashes_rederive():
+    """The committed store's entry hashes re-derive byte-identically from
+    their stored spec payloads — the channel field moved nothing."""
+    store = SweepStore(os.path.join(REPO, "experiments", "bench",
+                                    "heterogeneity", "store"))
+    hashes = sorted(store.hashes())
+    assert hashes == sorted(HET_HASHES)
+    for h in hashes:
+        assert spec_hash(store.get(h).spec) == h
+
+
+def test_committed_degraded_edge_store_rederives():
+    """The new channel-axis artifact: spec hash stable, delivered rates
+    present and bounded by the attempted rates."""
+    store = SweepStore(os.path.join(REPO, "experiments", "bench",
+                                    "degraded_edge", "store"))
+    hashes = store.hashes()
+    assert len(hashes) == 1
+    entry = store.get(hashes[0])
+    assert spec_hash(entry.spec) == hashes[0]
+    assert "channel" in entry.axes
+    att = entry.arrays["trace/comm_rate"]
+    dlv = entry.arrays["trace/delivered_rate"]
+    assert np.all(np.isfinite(att)) and np.all(np.isfinite(dlv))
+    assert np.all(dlv <= att + 1e-6)

@@ -135,3 +135,21 @@ def test_cli_end_to_end(tmp_path):
     missing = subprocess.run(cmd + ["nope"], capture_output=True, text=True)
     assert missing.returncode == 1
     assert "no committed JSON" in missing.stdout
+
+
+def test_delivered_rate_must_not_exceed_attempted():
+    """The degraded-edge channel invariant: a channel only loses updates,
+    so delivered_rate > comm_rate flags a broken row on either side of a
+    float32 rounding hair."""
+    committed = [dict(bench="degraded_edge", channel="loss30",
+                      us_per_call=1.0, comm_rate=0.8, delivered_rate=0.56)]
+    good = [dict(committed[0])]
+    assert check_suite("degraded_edge", committed, good) == []
+    rounding = [dict(committed[0], comm_rate=0.8, delivered_rate=0.8 + 1e-12)]
+    assert check_suite("degraded_edge", committed, rounding) == []
+    bad = [dict(committed[0], comm_rate=0.5, delivered_rate=0.56)]
+    errs = check_suite("degraded_edge", committed, bad)
+    assert any("exceeds" in e for e in errs)
+    nan = [dict(committed[0], delivered_rate=float("nan"))]
+    errs = check_suite("degraded_edge", committed, nan)
+    assert errs
