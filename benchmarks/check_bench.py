@@ -48,10 +48,12 @@ COMMITTED_DIR = os.path.join(
 
 NUMERIC_CHECKS = ("us_per_call",)
 # must be finite AND strictly positive wherever present: speed ratios,
-# and the serving tier's latency percentiles / throughput (serve_load)
+# the serving tier's latency percentiles / throughput (serve_load), and
+# the TD linear-speedup study's error ratios (td_speedup)
 POSITIVE_CHECKS = ("speedup_vs_reference", "p50_ms", "p99_ms",
                    "throughput_rps", "speedup_warm_vs_cold",
-                   "speedup_batch_vs_gets")
+                   "speedup_batch_vs_gets",
+                   "tail_error", "error_x_m", "speedup_vs_m1")
 
 
 def _kind(row: dict) -> tuple:
@@ -131,6 +133,34 @@ def check_suite(suite: str, committed: list[dict],
             elif d > c + 1e-9:
                 errors.append(f"{suite}: row {i} delivered_rate={d} exceeds "
                               f"attempted comm_rate={c}")
+    errors += _check_td_speedup(suite, fresh)
+    return errors
+
+
+def _check_td_speedup(suite: str, fresh: list[dict]) -> list[str]:
+    """Linear-speedup sanity: per trigger mode, ``speedup_vs_m1`` must be
+    nondecreasing in m.  Both smoke and real grids are deterministic and
+    comfortably monotone (the real study shows ~m× speedup); a fleet size
+    whose error stopped improving means the m-agent averaging path broke.
+    The 1e-3 relative slack only absorbs float/platform jitter."""
+    by_mode: dict = {}
+    for i, row in enumerate(fresh):
+        if row.get("bench") == "td_speedup" and "speedup_vs_m1" in row:
+            if not isinstance(row.get("m"), int):
+                return [f"{suite}: row {i} td_speedup has no integer m"]
+            by_mode.setdefault(row.get("mode", ""), []).append(
+                (row["m"], row["speedup_vs_m1"]))
+    errors = []
+    for mode, pts in sorted(by_mode.items()):
+        pts.sort()
+        for (m0, s0), (m1, s1) in zip(pts, pts[1:]):
+            if not (isinstance(s0, (int, float)) and isinstance(s1, (int, float))):
+                errors.append(f"{suite}: td_speedup {mode} speedups not "
+                              f"numeric ({s0!r}, {s1!r})")
+            elif s1 < s0 * (1 - 1e-3):
+                errors.append(
+                    f"{suite}: td_speedup {mode} speedup not m-monotone: "
+                    f"m={m1} gives {s1} < m={m0}'s {s0}")
     return errors
 
 

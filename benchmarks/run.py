@@ -48,6 +48,7 @@ from benchmarks import (
     serve_load,
     sweep_scaling,
     sweep_step,
+    td_speedup,
     theorem1_bound,
 )
 from benchmarks.common import save_rows
@@ -64,6 +65,7 @@ SUITES = {
     "serve_load": serve_load,
     "heterogeneity": heterogeneity,
     "degraded_edge": degraded_edge,
+    "td_speedup": td_speedup,
     "report_regen": report_regen,
     "kernels": kernels_bench,
     "roofline": roofline,
@@ -71,12 +73,35 @@ SUITES = {
 
 # suites that accept store= (persist results / reuse cached columns)
 STORE_AWARE = {"fig2", "fig3", "theorem1", "comm_savings", "heterogeneity",
-               "degraded_edge", "report_regen"}
+               "degraded_edge", "td_speedup", "report_regen"}
+
+
+def resolve_suites(only):
+    """Validate a ``--only`` value into a list of suite names.
+
+    ``None`` means every suite.  Names are comma-separated; surrounding
+    whitespace is tolerated.  An unknown name — or a value with no names
+    at all, like ``--only ""`` (which previously fell through and silently
+    ran EVERYTHING) — raises ``ValueError`` naming the offender and the
+    valid choices.
+    """
+    if only is None:
+        return list(SUITES)
+    names = [n.strip() for n in only.split(",") if n.strip()]
+    if not names:
+        raise ValueError("--only given but named no suite "
+                         f"(choose from {', '.join(SUITES)})")
+    for name in names:
+        if name not in SUITES:
+            raise ValueError(f"unknown suite {name!r} "
+                             f"(choose from {', '.join(SUITES)})")
+    return names
 
 
 def _derived(row: dict) -> str:
     for key in ("J_final", "rhs_bound", "overhead_pct", "savings_pct",
                 "speedup_vs_reference", "speedup_warm_vs_cold",
+                "speedup_vs_m1",
                 "throughput_rps", "gflop_per_call", "dominant",
                 "byte_deterministic", "artifacts"):
         if key in row:
@@ -104,12 +129,10 @@ def main() -> None:
                     help="regenerate figure artifacts from this SweepStore "
                          "via the jax-free report pipeline; no device work")
     args = ap.parse_args()
-    only = args.only.split(",") if args.only else None
-    if only:
-        for name in only:
-            if name not in SUITES:
-                ap.error(f"unknown suite {name!r} "
-                         f"(choose from {', '.join(SUITES)})")
+    try:
+        only = None if args.only is None else resolve_suites(args.only)
+    except ValueError as e:
+        ap.error(str(e))
     if args.from_store:
         if only not in (None, ["report_regen"]):
             ap.error("--from-store regenerates through the report pipeline; "
@@ -139,7 +162,7 @@ def main() -> None:
             # subprocess suites report crashes as error rows rather than
             # raising — surface them and fail the run (the CI smoke gate
             # must go red when a suite never actually executed)
-            if "error" in row:
+            if isinstance(row.get("error"), str):
                 print(f"{row.get('bench', name)},ERROR,{row['error'][:200]}",
                       flush=True)
                 failures += 1

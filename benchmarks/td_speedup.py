@@ -1,0 +1,125 @@
+"""Federated TD(0) linear-speedup study (EXPERIMENTS.md §Markovian
+sampling).
+
+The paper's central claim for federated stochastic approximation is a
+*linear speedup*: m agents averaging their TD(0) updates drive the
+stationary-weighted error E‖w − w*‖²_D down ~m× faster than one agent.
+This study measures that frontier on the second workload — genuinely
+Markovian garnet chains (``sampling="markov"``, DESIGN.md §11) rather
+than i.i.d. resampling — for m ∈ {1, 4, 16, 64}.
+
+Design notes that make the trend measurable:
+
+* γ = 0.8 — the TD contraction rate scales like 2·ε·d_min·(1 − γ); at
+  the garnet default γ = 0.95 burn-in dominates any affordable horizon
+  and every fleet size reads the same transient.
+* error = tail mean of the streamed ``j_trajectory`` over the last 25%
+  of iterations (envs and seeds averaged).  J under constant-ε TD is a
+  heavy-tailed stationary process — endpoint ``j_final`` snapshots are
+  noise; the time average is the estimator with an m-scaling variance.
+* per-agent noise (``noise_scale``) dominates the gradient so the
+  variance floor — the thing averaging m agents divides — is what the
+  tail error measures.
+
+One ``sweep_or_load`` (ONE jitted call) per m — ``num_agents`` is part
+of the spec hash, so each fleet size is its own store entry, tagged
+``figure=td_speedup`` and rendered as a single cross-entry artifact by
+``report.render_td_speedup`` (error and error×m vs m; linear speedup ==
+the error×m series collapsing onto a constant).  The committed store
+lives at ``experiments/bench/td_speedup/store``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import EXP_DIR
+from repro.core.algorithm1 import ParamSampler, TraceSpec
+from repro.core.td import td_env_family, td_family_sampler_fn, td_init_states
+from repro.experiments import SweepSpec, SweepStore, sweep_or_load
+from repro.experiments.report import generate_report, render_td_speedup
+
+GAMMA = 0.8
+EPS = 0.1
+NOISE_SCALE = 4.0       # per-agent gradient noise — the floor m divides
+RHO = 0.999
+LAM = 1e-3
+TAIL_FRAC = 0.25
+DEFAULT_STORE = os.path.join(EXP_DIR, "td_speedup", "store")
+
+
+def _scale(smoke: bool) -> dict:
+    if smoke:
+        return dict(envs=2, states=8, agents=(1, 4, 16), iters=800,
+                    samples=4, seeds=(0, 1))
+    return dict(envs=6, states=10, agents=(1, 4, 16, 64), iters=6000,
+                samples=8, seeds=(0, 1, 2))
+
+
+def run(smoke: bool = False, store=None) -> list[dict]:
+    cfg = _scale(smoke)
+    tmp = None
+    if store is None:
+        # smoke runs must not touch the committed real-scale store
+        if smoke:
+            tmp = tempfile.mkdtemp(prefix="td_speedup_store_")
+            store = os.path.join(tmp, "store")
+        else:
+            store = DEFAULT_STORE
+    store = store if isinstance(store, SweepStore) else SweepStore(store)
+    try:
+        return _run(cfg, store)
+    finally:
+        if tmp is not None:
+            import shutil
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _run(cfg: dict, store: SweepStore) -> list[dict]:
+    envs, fam = td_env_family(cfg["envs"], num_states=cfg["states"],
+                              gamma=GAMMA)
+    w0 = jnp.zeros(cfg["states"])
+    fn = td_family_sampler_fn(cfg["samples"])
+
+    entries, us_per_call = [], {}
+    for m in cfg["agents"]:
+        params = envs[0].agent_params(w0, m, noise_scale=NOISE_SCALE)
+        sampler = ParamSampler(fn=fn, params=params)
+        spec = SweepSpec(
+            modes=("always", "theoretical"), lambdas=(LAM,), rhos=(RHO,),
+            seeds=cfg["seeds"], eps=EPS, num_iterations=cfg["iters"],
+            num_agents=m, sampling="markov",
+            trace=TraceSpec(j_trajectory=True))
+        t0 = time.perf_counter()
+        res = sweep_or_load(store, spec, sampler, w0, env_sets=fam,
+                            state_init_fn=td_init_states,
+                            extra={"figure": "td_speedup", "m": m,
+                                   "gamma": GAMMA,
+                                   "noise_scale": NOISE_SCALE,
+                                   "tail_frac": TAIL_FRAC})
+        jax.block_until_ready(res.comm_rate)
+        runs = int(np.prod(np.asarray(res.comm_rate).shape))
+        us_per_call[m] = (time.perf_counter() - t0) * 1e6 / runs
+        entries.append(store.get(spec))
+
+    # figure rows from the SAME renderer the report pipeline uses — the
+    # benchmark JSON and the regenerated report cannot drift apart
+    rows = []
+    for row in render_td_speedup(entries)["rows"]:
+        row["us_per_call"] = us_per_call[row["m"]]
+        rows.append(row)
+
+    # regenerate the report artifacts next to the store (jax-free path)
+    out = os.path.join(os.path.dirname(store.root), "report")
+    index = generate_report(store, out)
+    rows.append(dict(bench="td_speedup", suite="report",
+                     env_instances=cfg["envs"], agents=list(cfg["agents"]),
+                     store=store.root, report_dir=out,
+                     artifacts=len(index["artifacts"]), us_per_call=0.0))
+    return rows

@@ -31,6 +31,16 @@ from repro.core.gain import (  # noqa: F401
     theoretical_gain,
 )
 from repro.core.server import aggregate, server_update  # noqa: F401
+from repro.core.td import (  # noqa: F401
+    run_td,
+    stationary_distribution,
+    td_env_family,
+    td_family_sampler_fn,
+    td_fixed_point,
+    td_init_states,
+    td_problem_terms,
+    td_sample_all,
+)
 from repro.core.trigger import (  # noqa: F401
     TriggerConfig,
     check_assumption_2,

@@ -49,6 +49,13 @@ Sampler = Callable[[Array], tuple[Array, Array]]
 MODES = gain_dispatch.MODES
 MODE_IDS = {name: i for i, name in enumerate(MODES)}
 
+# fold_in tag deriving a run's sampler-state init key from its run key
+# ("TD" in ASCII).  Shared by every caller that initializes stateful
+# sampler chains (repro.core.td.run_td, the sweep engine's markov path),
+# so per-run and in-sweep trajectories stay bitwise identical.  Never a
+# wider jax.random.split — widening a split changes every derived key.
+SAMPLER_STATE_FOLD = 0x5444
+
 
 class ParamSampler(NamedTuple):
     """A single sampling *function* plus stacked per-agent parameters.
@@ -225,6 +232,16 @@ class GatedSGDConfig:
 # ---------------------------------------------------------------------------
 
 SampleAll = Callable[[Array], tuple[Array, Array]]   # (m,) rngs -> (m,T,n),(m,T)
+# Stateful (Markovian) form, selected by passing sampler_state= to the core:
+# (state, w, (m,) rngs) -> (state', (m,T,n), (m,T)).  ``state`` is an
+# arbitrary pytree with per-agent leading axes (e.g. the (m,) chain-state
+# indices of a federated TD(0) run, repro.core.td); it threads through the
+# scan carry exactly like the channel rings — capacities/shapes static,
+# contents traced.  The sampler sees the weights the *agent* sees (``w``,
+# or ``w_{k-s}`` on the lossy-channel path), which is what lets TD(0)
+# bootstrap its targets from the live local model.
+StatefulSampleAll = Callable[[object, Array, Array],
+                             tuple[object, Array, Array]]
 
 
 def gated_sgd_core(
@@ -233,7 +250,7 @@ def gated_sgd_core(
     mode_id: Union[Array, int],
     thresholds: Array,
     tx_prob: Union[Array, float],
-    sample_all: SampleAll,
+    sample_all: Union[SampleAll, StatefulSampleAll],
     eps: float,
     num_agents: int,
     terms: Optional[ProblemTerms] = None,
@@ -242,6 +259,7 @@ def gated_sgd_core(
     step_backend: Optional[str] = None,
     channel: Optional[channel_lib.ChannelInputs] = None,
     channel_caps: Optional[tuple[int, int]] = None,
+    sampler_state: Optional[object] = None,
 ) -> Union[InnerTrace, SummaryTrace]:
     """Branchless inner loop of Algorithm 1 (lines 5-9).
 
@@ -271,6 +289,15 @@ def gated_sgd_core(
     and agents compute against s-step-stale weights.  ``channel=None``
     (default) executes this exact function body — the perfect-channel
     program is byte-for-byte the pre-channel one.
+
+    ``sampler_state`` (default ``None``) switches the sampler contract to
+    the stateful ``StatefulSampleAll`` form: ``sample_all(state, w, rngs)
+    -> (state', phi_b, targets_b)``, with the state pytree threaded through
+    the scan carry.  This is the Markovian-sampling hook (DESIGN.md §11):
+    a federated TD(0) agent carries its current chain state and bootstraps
+    targets from the weights it locally observes.  ``None`` is an empty
+    pytree in the carry, so every pre-existing stateless program — and
+    every committed spec hash — stays byte-identical.
     """
     N = thresholds.shape[0]
     phi_matrix = terms.phi_matrix if terms is not None else None
@@ -297,16 +324,23 @@ def gated_sgd_core(
         return _channel_core(
             rng, w0, mode_id, thresholds, tx_prob, sample_all, eps,
             num_agents, terms, gain_backend, trace, step_backend,
-            step_backend_r, channel, channel_caps)
+            step_backend_r, channel, channel_caps, sampler_state)
 
-    def step_body(w, k, rng_k):
-        """One gated-SGD step: (w, k, rng_k) -> (w_next, alphas, gains).
+    stateful = sampler_state is not None
+
+    def step_body(w, st, k, rng_k):
+        """One gated-SGD step: (w, st, k, rng_k) -> (w_next, st', ...).
 
         Shared verbatim by the full and summary scans so both trace
-        policies execute identical per-step arithmetic.
+        policies execute identical per-step arithmetic.  ``st`` is the
+        sampler-state pytree (``None`` — an empty carry — on the
+        stateless/i.i.d. path).
         """
         rngs = jax.random.split(rng_k, num_agents + 1)
-        phi_b, targets_b = sample_all(rngs[:-1])
+        if stateful:
+            st, phi_b, targets_b = sample_all(st, w, rngs[:-1])
+        else:
+            phi_b, targets_b = sample_all(rngs[:-1])
         grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
             w, phi_b, targets_b)
         grad_j = terms.grad(w) if terms is not None else None
@@ -316,9 +350,10 @@ def gated_sgd_core(
             # the reference path so RNG streams match bitwise
             alpha_rand = jax.random.bernoulli(
                 rngs[-1], tx_prob, (num_agents,)).astype(jnp.float32)
-            return gain_dispatch.megastep(
+            w_next, alphas, gains = gain_dispatch.megastep(
                 mode_id, w, grads, phi_b, eps, thresholds[k], alpha_rand,
                 grad_j, phi_matrix, backend=gain_backend)
+            return w_next, st, alphas, gains
         gains = gain_dispatch.mode_gains(
             mode_id, grads, phi_b, eps, grad_j, phi_matrix,
             backend=gain_backend, step_backend=step_backend)
@@ -338,18 +373,19 @@ def gated_sgd_core(
         if not isinstance(mode_id, jax.core.Tracer):
             alphas = jax.lax.optimization_barrier(alphas)
         w_next = server_lib.server_update(w, grads, alphas, eps)
-        return w_next, alphas, gains
+        return w_next, st, alphas, gains
 
     rngs = jax.random.split(rng, N)
 
     if trace == "full":
-        def step(w, inp):
+        def step(carry, inp):
+            w, st = carry
             k, rng_k = inp
-            w_next, alphas, gains = step_body(w, k, rng_k)
-            return w_next, (w_next, alphas, gains)
+            w_next, st, alphas, gains = step_body(w, st, k, rng_k)
+            return (w_next, st), (w_next, alphas, gains)
 
-        w_final, (ws, alphas, gains) = jax.lax.scan(
-            step, w0, (jnp.arange(N), rngs))
+        (w_final, _), (ws, alphas, gains) = jax.lax.scan(
+            step, (w0, sampler_state), (jnp.arange(N), rngs))
         del w_final
         weights = jnp.concatenate([w0[None], ws], axis=0)
         comm_rate = jnp.mean(alphas)
@@ -357,10 +393,10 @@ def gated_sgd_core(
                           comm_rate=comm_rate)
 
     def step_summary(carry, inp):
-        w, tx_counts, gain_sum, gain_min, gain_max = carry
+        w, st, tx_counts, gain_sum, gain_min, gain_max = carry
         k, rng_k = inp
-        w_next, alphas, gains = step_body(w, k, rng_k)
-        carry = (w_next,
+        w_next, st, alphas, gains = step_body(w, st, k, rng_k)
+        carry = (w_next, st,
                  tx_counts + alphas,
                  gain_sum + gains,
                  jnp.minimum(gain_min, gains),
@@ -372,9 +408,9 @@ def gated_sgd_core(
         return carry, ys
 
     m = num_agents
-    init = (w0, jnp.zeros((m,)), jnp.zeros((m,)),
+    init = (w0, sampler_state, jnp.zeros((m,)), jnp.zeros((m,)),
             jnp.full((m,), jnp.inf), jnp.full((m,), -jnp.inf))
-    (w_final, tx_counts, gain_sum, gain_min, gain_max), ys = jax.lax.scan(
+    (w_final, _, tx_counts, gain_sum, gain_min, gain_max), ys = jax.lax.scan(
         step_summary, init, (jnp.arange(N), rngs))
     j_traj, alphas_s, gains_s = ys
     return SummaryTrace(
@@ -407,6 +443,7 @@ def _channel_core(
     step_backend_r: str,
     channel: channel_lib.ChannelInputs,
     channel_caps: tuple[int, int],
+    sampler_state: Optional[object] = None,
 ) -> Union[InnerTrace, SummaryTrace]:
     """Lossy-edge variant of the branchless inner loop (DESIGN.md §10).
 
@@ -435,15 +472,21 @@ def _channel_core(
     phi_matrix = terms.phi_matrix if terms is not None else None
     delay_cap, stale_cap = channel_caps
     m = num_agents
+    stateful = sampler_state is not None
 
-    def step_body(w, stale_buf, pend_sum, pend_cnt, k, rng_k):
+    def step_body(w, st, stale_buf, pend_sum, pend_cnt, k, rng_k):
         rngs = jax.random.split(rng_k, num_agents + 1)
         keep = jax.random.bernoulli(
             jax.random.fold_in(rng_k, 1), 1.0 - channel.drop_prob,
             (num_agents,)).astype(jnp.float32)
         w_stale = jnp.take(stale_buf, (k - channel.staleness) % stale_cap,
                            axis=0)
-        phi_b, targets_b = sample_all(rngs[:-1])
+        if stateful:
+            # the stateful sampler sees what the *agent* sees: the s-step-
+            # stale weights drive the TD bootstrap, matching the gains/grads
+            st, phi_b, targets_b = sample_all(st, w_stale, rngs[:-1])
+        else:
+            phi_b, targets_b = sample_all(rngs[:-1])
         grads = jax.vmap(vfa_lib.stochastic_gradient, in_axes=(None, 0, 0))(
             w_stale, phi_b, targets_b)
         grad_j = terms.grad(w_stale) if terms is not None else None
@@ -484,7 +527,8 @@ def _channel_core(
             w_next = w - eps * (arrived / jnp.maximum(arrived_cnt, 1.0))
         stale_buf = jax.lax.dynamic_update_index_in_dim(
             stale_buf, w_next, (k + 1) % stale_cap, 0)
-        return w_next, stale_buf, pend_sum, pend_cnt, alphas, gains, delivered
+        return (w_next, st, stale_buf, pend_sum, pend_cnt,
+                alphas, gains, delivered)
 
     rngs = jax.random.split(rng, N)
     init_rings = (jnp.broadcast_to(w0, (stale_cap,) + w0.shape),
@@ -494,25 +538,26 @@ def _channel_core(
     if trace == "full":
         def step(carry, inp):
             k, rng_k = inp
-            w_next, stale_buf, ps, pc, alphas, gains, delivered = step_body(
-                *carry, k, rng_k)
-            return (w_next, stale_buf, ps, pc), (w_next, alphas, gains,
-                                                 delivered)
+            (w_next, st, stale_buf, ps, pc,
+             alphas, gains, delivered) = step_body(*carry, k, rng_k)
+            return (w_next, st, stale_buf, ps, pc), (w_next, alphas, gains,
+                                                     delivered)
 
         (w_final, *_), (ws, alphas, gains, delivered) = jax.lax.scan(
-            step, (w0,) + init_rings, (jnp.arange(N), rngs))
+            step, (w0, sampler_state) + init_rings, (jnp.arange(N), rngs))
         del w_final
         weights = jnp.concatenate([w0[None], ws], axis=0)
         return InnerTrace(weights=weights, alphas=alphas, gains=gains,
                           comm_rate=jnp.mean(alphas), delivered=delivered)
 
     def step_summary(carry, inp):
-        (w, stale_buf, ps, pc, tx_counts, dl_counts,
+        (w, st, stale_buf, ps, pc, tx_counts, dl_counts,
          gain_sum, gain_min, gain_max) = carry
         k, rng_k = inp
-        w_next, stale_buf, ps, pc, alphas, gains, delivered = step_body(
-            w, stale_buf, ps, pc, k, rng_k)
-        carry = (w_next, stale_buf, ps, pc,
+        (w_next, st, stale_buf, ps, pc,
+         alphas, gains, delivered) = step_body(w, st, stale_buf, ps, pc,
+                                               k, rng_k)
+        carry = (w_next, st, stale_buf, ps, pc,
                  tx_counts + alphas,
                  dl_counts + delivered,
                  gain_sum + gains,
@@ -524,11 +569,11 @@ def _channel_core(
               gains if trace.gains else None)
         return carry, ys
 
-    init = (w0,) + init_rings + (
+    init = (w0, sampler_state) + init_rings + (
         jnp.zeros((m,)), jnp.zeros((m,)), jnp.zeros((m,)),
         jnp.full((m,), jnp.inf), jnp.full((m,), -jnp.inf))
     carry, ys = jax.lax.scan(step_summary, init, (jnp.arange(N), rngs))
-    (w_final, _, _, _, tx_counts, dl_counts,
+    (w_final, _, _, _, _, tx_counts, dl_counts,
      gain_sum, gain_min, gain_max) = carry
     j_traj, alphas_s, gains_s = ys
     return SummaryTrace(

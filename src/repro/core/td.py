@@ -1,0 +1,258 @@
+"""Federated TD(0) under Markovian sampling (DESIGN.md §11).
+
+The paper's value-function setting draws i.i.d. samples from a fixed visit
+distribution and regresses onto *frozen* Bellman targets; the realistic
+edge regime is Markovian: each agent walks its own chain and bootstraps
+targets from the weights it currently holds.  Khodadadian et al.
+(PAPERS.md, arXiv 2206.10185) prove federated TD/Q-learning under Markov
+noise keeps the m-agent linear speedup — exactly the regime the trigger
+rules were built for.
+
+This module makes TD(0) a workload of the *existing* engine rather than a
+second engine:
+
+* the TD(0) semi-gradient IS ``vfa.stochastic_gradient`` evaluated on a
+  bootstrapped batch — with tabular features ``phi = e_s`` and targets
+  ``c(s) + gamma * w[s']`` the least-squares gradient
+  ``(2/T) Phi^T (Phi w - y)`` reduces to the classic TD(0) update
+  direction, so the trigger / transmit / aggregate machinery of
+  ``gated_sgd_core`` composes unchanged (all six gain modes, every step
+  backend, ``channel_sets=``);
+* the only genuinely new ingredient is *state*: each agent carries its
+  current chain position through the scan, threaded exactly like the PR 8
+  channel rings (shapes static, contents traced) via the core's
+  ``sampler_state=`` hook;
+* per-agent chain parameters (initial-state distribution, target-noise
+  scale) ride in the same stacked param pytrees the i.i.d. samplers use —
+  ``garnet_fleet_sets`` fleets work verbatim, their ``"v"`` row is simply
+  ignored because TD bootstraps from the live weights.
+
+Exact quantities: for uniform-policy chain ``P`` with costs ``c`` the TD
+fixed point is ``w* = (I - gamma P)^{-1} c`` and the natural error metric
+is the stationary-weighted distance ``J(w) = (w - w*)^T D (w - w*)`` with
+``D = diag(d)``, ``d`` the stationary distribution of ``P``.  Expanding
+gives ``ProblemTerms(phi_matrix=D, bvec=D w*, c0=w*^T D w*)`` — so
+``J(w*) = 0`` (``j_final`` is *directly* the squared error, what the
+linear-speedup study plots) and ``grad J = 2 D (w - w*)`` gives the
+theoretical trigger a well-defined exact gradient.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithm1 import (
+    MODE_IDS,
+    SAMPLER_STATE_FOLD,
+    GatedSGDConfig,
+    InnerTrace,
+    ProblemTerms,
+    SummaryTrace,
+    TraceSpec,
+    gated_sgd_core,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Markov chain samplers (the stateful counterpart of envs.family_sampler_fn).
+# ---------------------------------------------------------------------------
+
+
+def td_family_sampler_fn(num_samples: int):
+    """One agent's T-step chain walk with TD(0)-bootstrapped targets.
+
+    ``fn(env_params, agent_params, w, state, rng) ->
+    (state', phi_t (T, S), targets_t (T,))`` — the stateful family form the
+    sweep engine vmaps when ``SweepSpec(sampling="markov")``.  Chain
+    convention (mirrors ``family_sampler_fn`` so i.i.d. and Markov runs
+    are comparable on the same env family):
+
+    * actions are uniform (the evaluation policy), so the state chain is
+      ``P_pi = P.mean(axis=1)`` sampled action-first;
+    * features are tabular indicators ``phi(s) = e_s``;
+    * targets bootstrap from the weights the agent currently observes:
+      ``c(s) + gamma * w[s'] + noise_scale * N(0, 1)``;
+    * ``state`` is the agent's scalar chain position; the walk continues
+      where the last batch ended — samples are Markovian *across*
+      iterations, not just within a batch.
+
+    ``agent_params`` is the same pytree the i.i.d. samplers use
+    (``visit_logits`` seeds the chain via ``td_init_states``;
+    ``noise_scale`` models a noisy edge agent; ``"v"`` is ignored).
+    """
+
+    def fn(env_params, params, w, state, rng):
+        P, c = env_params["P"], env_params["c"]          # (S, A, S), (S,)
+        S, A = P.shape[0], P.shape[1]
+
+        def step(s, r):
+            r_a, r_n = jax.random.split(r)
+            a = jax.random.randint(r_a, (), 0, A)
+            s_next = jax.random.categorical(r_n, jnp.log(P[s, a] + 1e-30))
+            return s_next, (s, s_next)
+
+        r_walk, r_t = jax.random.split(rng)
+        state_out, (xs, xs_next) = jax.lax.scan(
+            step, state, jax.random.split(r_walk, num_samples))
+        targets = (c[xs] + env_params["gamma"] * w[xs_next]
+                   + params["noise_scale"]
+                   * jax.random.normal(r_t, (num_samples,)))
+        return state_out, jax.nn.one_hot(xs, S), targets
+
+    return fn
+
+
+def td_sample_all(env_params, params, num_samples: int):
+    """The whole fleet's stateful batched sampler (core ``StatefulSampleAll``).
+
+    Vmaps ``td_family_sampler_fn`` over stacked agent params / chain states
+    / rngs with the env and the server weights shared — the exact closure
+    the sweep engine builds per run, exposed so per-run callers (tests,
+    ``run_td``) produce bitwise-identical trajectories.
+    """
+    fam = td_family_sampler_fn(num_samples)
+
+    def sample_all(state, w, rngs):
+        return jax.vmap(fam, in_axes=(None, 0, None, 0, 0))(
+            env_params, params, w, state, rngs)
+
+    return sample_all
+
+
+def td_init_states(params, rng: Array) -> Array:
+    """(m,) initial chain states, one categorical draw per agent.
+
+    Each agent's chain starts from its own ``visit_logits`` distribution
+    (zeros == uniform), so heterogeneous fleets start heterogeneous walks.
+    This is the engine's ``state_init_fn`` contract:
+    ``(agent_params, rng) -> state pytree`` with per-agent leading axes;
+    the sweep derives ``rng`` as ``fold_in(run_key, SAMPLER_STATE_FOLD)``.
+    """
+    logits = params["visit_logits"]                      # (m, S)
+    rngs = jax.random.split(rng, logits.shape[0])
+    return jax.vmap(jax.random.categorical)(rngs, logits)
+
+
+# ---------------------------------------------------------------------------
+# Exact TD quantities (host numpy — seeding/analysis, never traced).
+# ---------------------------------------------------------------------------
+
+
+def stationary_distribution(P_pi: np.ndarray) -> np.ndarray:
+    """Stationary distribution of a row-stochastic chain: d = d P_pi.
+
+    Solved as the linear system ``(P_pi^T - I) d = 0`` with the last row
+    replaced by the normalization ``sum d = 1`` — exact for the small
+    tabular chains this repo sweeps (GARNET chains under the uniform
+    policy are irreducible with probability 1).
+    """
+    P_pi = np.asarray(P_pi, np.float64)
+    S = P_pi.shape[0]
+    A = P_pi.T - np.eye(S)
+    A[-1, :] = 1.0
+    b = np.zeros(S)
+    b[-1] = 1.0
+    return np.linalg.solve(A, b)
+
+
+def td_fixed_point(env) -> np.ndarray:
+    """w* = (I - gamma P_pi)^{-1} c under the uniform policy."""
+    P_pi = np.asarray(env.transition_matrix(), np.float64).mean(axis=1)
+    S = P_pi.shape[0]
+    c = np.asarray(env.cost_vector(), np.float64)
+    return np.linalg.solve(np.eye(S) - env.gamma * P_pi, c)
+
+
+def td_problem_terms(env) -> ProblemTerms:
+    """Stationary-weighted squared error to the TD fixed point as terms.
+
+    ``J(w) = (w - w*)^T D (w - w*)`` expanded into the quadratic
+    ``ProblemTerms`` form: ``phi_matrix = D``, ``bvec = D w*``,
+    ``c0 = w*^T D w*`` — so ``objective(w*) == 0``, ``j_final`` IS the
+    squared error, and ``grad(w) = 2 D (w - w*)`` drives the theoretical
+    trigger.
+    """
+    P_pi = np.asarray(env.transition_matrix(), np.float64).mean(axis=1)
+    d = stationary_distribution(P_pi)
+    wstar = td_fixed_point(env)
+    D = np.diag(d)
+    return ProblemTerms(
+        phi_matrix=jnp.asarray(D, jnp.float32),
+        bvec=jnp.asarray(D @ wstar, jnp.float32),
+        c0=jnp.float32(wstar @ D @ wstar),
+    )
+
+
+def td_env_family(num_instances: int, **kwargs):
+    """GARNET chains stacked as a sweep env axis with exact TD terms.
+
+    Returns ``(envs, EnvFamily)`` like ``garnet_env_family``, but the
+    family terms are the TD fixed-point terms above (per instance), not
+    the one-Bellman-update regression terms — ``j_final`` across the
+    family reads directly as squared distance to each chain's own w*.
+    """
+    from repro.envs.base import EnvFamily, stack_env_family
+    from repro.envs.garnet import garnet_family
+
+    envs = garnet_family(num_instances, **kwargs)
+    fam = stack_env_family(
+        envs, np.zeros(envs[0].num_states, np.float32), with_terms=False)
+    terms = jax.tree.map(
+        lambda *leaves: jnp.stack(leaves), *[td_problem_terms(e) for e in envs])
+    return envs, EnvFamily(params=fam.params, terms=terms)
+
+
+# ---------------------------------------------------------------------------
+# Per-run convenience wrapper (the run_gated_sgd of the TD workload).
+# ---------------------------------------------------------------------------
+
+
+def run_td(
+    rng: Array,
+    w0: Array,
+    env,
+    cfg: GatedSGDConfig,
+    num_samples: int,
+    agent_params=None,
+    trace: Union[str, TraceSpec] = "full",
+    channel=None,
+    channel_caps: Optional[tuple[int, int]] = None,
+) -> Union[InnerTrace, SummaryTrace]:
+    """One federated TD(0) inner run on a single tabular env.
+
+    Chain states initialize from ``fold_in(rng, SAMPLER_STATE_FOLD)`` —
+    the same derivation the sweep engine uses per run, so a ``run_td``
+    call and the matching sweep cell are bitwise identical on the
+    ``batching="map"`` path (tests/test_td.py).  ``agent_params`` defaults
+    to the env's homogeneous fleet; exact TD terms are always attached
+    (they cost one small host solve and make ``j_final`` the squared
+    error to w*).
+    """
+    params = (env.agent_params(w0, cfg.num_agents)
+              if agent_params is None else agent_params)
+    sample_all = td_sample_all(env.env_params(), params, num_samples)
+    states = td_init_states(params, jax.random.fold_in(
+        rng, SAMPLER_STATE_FOLD))
+    return gated_sgd_core(
+        rng, w0,
+        mode_id=MODE_IDS[cfg.mode],
+        thresholds=cfg.trigger.schedule(),
+        tx_prob=cfg.random_tx_prob,
+        sample_all=sample_all,
+        eps=cfg.eps,
+        num_agents=cfg.num_agents,
+        terms=td_problem_terms(env),
+        gain_backend=cfg.gain_backend,
+        trace=trace,
+        step_backend=cfg.step_backend,
+        channel=channel,
+        channel_caps=channel_caps,
+        sampler_state=states,
+    )

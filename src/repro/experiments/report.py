@@ -448,6 +448,54 @@ def render_degraded_edge(entry: StoredSweep) -> dict:
     return dict(figure="degraded_edge", rows=rows, svg=svg)
 
 
+def render_td_speedup(entries: list[StoredSweep]) -> dict:
+    """Cross-entry linear-speedup study for federated TD(0): one store
+    entry per fleet size m (``num_agents`` is part of the spec hash), each
+    carrying a streamed ``trace/j_trajectory``.  The error estimate is the
+    tail mean of J over the last ``extra["tail_frac"]`` of iterations
+    (endpoint snapshots of the heavy-tailed J process are too noisy to
+    show the 1/m trend), envs and seeds averaged.  Linear speedup reads
+    two ways in the rows: ``speedup_vs_m1`` ~ m and ``error_x_m``
+    collapsing to a constant across m."""
+    ents = sorted(entries, key=lambda e: int(e.extra["m"]))
+    ms, err = [], {}                       # err[mode] -> [per-m tail error]
+    modes = ents[0].modes if ents else ()
+    for e in ents:
+        m = int(e.extra["m"])
+        jt = np.asarray(e.arrays["trace/j_trajectory"], np.float64)
+        tail_frac = float(e.extra.get("tail_frac", 0.25))
+        n = jt.shape[-1]
+        tail = jt[..., n - max(1, int(round(tail_frac * n))):].mean(axis=-1)
+        per_mode = _mean_keep(tail, e.axes, ("mode",))
+        ms.append(m)
+        for mi, mode in enumerate(e.modes):
+            err.setdefault(mode, []).append(float(per_mode[mi]))
+    rows, series = [], []
+    for mode in modes:
+        base = err[mode][0] * ms[0]        # m-normalized baseline error
+        for i, m in enumerate(ms):
+            e_m = err[mode][i]
+            rows.append(dict(
+                bench="td_speedup", m=m, mode=mode, tail_error=e_m,
+                error_x_m=e_m * m, speedup_vs_m1=base / (e_m * ms[0]),
+                env_instances=int(ents[i].arrays["trace/comm_rate"].shape[
+                    ents[i].axes.index("env_set")])
+                if "env_set" in ents[i].axes else 1,
+                spec_hash=ents[i].spec_hash))
+        series.append(dict(label=f"{mode} error", x=ms, y=err[mode]))
+    for mode in modes:
+        series.append(dict(label=f"{mode} error×m", x=ms,
+                           y=[e * m for e, m in zip(err[mode], ms)]))
+    if ms:
+        ideal = [err[modes[0]][0] * ms[0] / m for m in ms]
+        series.append(dict(label="ideal 1/m", x=ms, y=ideal))
+    svg = svg_chart(series,
+                    title="Federated TD(0) — tail error vs fleet size m",
+                    xlabel="agents m", ylabel="tail-mean J",
+                    xlog=True, ylog=True)
+    return dict(figure="td_speedup", rows=rows, svg=svg)
+
+
 _RENDERERS = {
     "tradeoff": render_tradeoff,
     "fig2": render_fig2,
@@ -455,6 +503,14 @@ _RENDERERS = {
     "theorem1": render_theorem1,
     "comm_savings": render_comm_savings,
     "degraded_edge": render_degraded_edge,
+}
+
+# figure tags whose entries render as ONE cross-entry artifact (the spec
+# hash differs per member — fleet class, num_agents — so they cannot be
+# single-entry artifacts); keyed by the hash of their sorted spec hashes
+_GROUPED = {
+    "heterogeneity": render_heterogeneity,
+    "td_speedup": render_td_speedup,
 }
 
 
@@ -481,17 +537,17 @@ def generate_report(store: SweepStore, out_dir: str) -> dict:
     """Regenerate every figure artifact a store backs; returns the index.
 
     One JSON (rows) + one SVG (chart) per artifact, named
-    ``<figure>-<spec_hash16>``; entries tagged ``heterogeneity`` are
-    grouped into a single cross-entry frontier artifact keyed by the hash
-    of their sorted spec hashes.  Output depends only on store contents —
+    ``<figure>-<spec_hash16>``; entries with a ``_GROUPED`` figure tag
+    (heterogeneity, td_speedup) render as a single cross-entry artifact
+    per tag, keyed by the hash of their sorted spec hashes.  Output
+    depends only on store contents —
     no timestamps, sorted keys — so regeneration is byte-deterministic
     (tests/test_report.py).
     """
     os.makedirs(out_dir, exist_ok=True)
     entries = [store.get(h) for h in store.hashes()]
-    groups = [e for e in entries if e.extra.get("figure") == "heterogeneity"]
     singles = [e for e in entries
-               if e.extra.get("figure") != "heterogeneity"]
+               if e.extra.get("figure") not in _GROUPED]
     artifacts = []
 
     def emit(art: dict, key: str, spec_hash: str, extra_meta: dict):
@@ -507,13 +563,14 @@ def generate_report(store: SweepStore, out_dir: str) -> dict:
     for e in singles:
         emit(render_entry(e), e.spec_hash[:16], e.spec_hash,
              {"spec": e.spec})
-    if groups:
-        key = hashlib.sha256(
-            "".join(sorted(e.spec_hash for e in groups)).encode()
-        ).hexdigest()[:16]
-        emit(render_heterogeneity(groups), key,
-             ",".join(sorted(e.spec_hash for e in groups)),
-             {"members": sorted(e.spec_hash for e in groups)})
+    for fig in sorted(_GROUPED):
+        group = [e for e in entries if e.extra.get("figure") == fig]
+        if not group:
+            continue
+        members = sorted(e.spec_hash for e in group)
+        key = hashlib.sha256("".join(members).encode()).hexdigest()[:16]
+        emit(_GROUPED[fig](group), key, ",".join(members),
+             {"members": members})
     artifacts.sort(key=lambda a: (a["figure"], a["spec_hash"]))
     index = {"store": os.path.abspath(store.root),
              "entries": len(entries), "artifacts": artifacts,

@@ -236,6 +236,7 @@ def run_sweep_resumable(
     env_sets=None,
     fleet_sets=None,
     mesh=None,
+    state_init_fn=None,
     summary_store: Optional[Union[str, store_lib.SweepStore]] = None,
     on_chunk=None,
 ) -> SweepResult:
@@ -266,7 +267,8 @@ def run_sweep_resumable(
     resume lock ``gc_finished`` refuses to collect past.
     """
     plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
-                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh)
+                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh,
+                      state_init_fn=state_init_fn)
     sh = store_lib.spec_hash(spec)
     in_digest = inputs_digest(sampler, w0, problem=problem,
                               param_sets=param_sets, env_sets=env_sets,
@@ -562,6 +564,7 @@ def run_sweep_extend(
     env_sets=None,
     fleet_sets=None,
     mesh=None,
+    state_init_fn=None,
     store_dir: Optional[str] = None,
     extra: Optional[dict] = None,
 ) -> SweepResult:
@@ -592,12 +595,14 @@ def run_sweep_extend(
             result = run_sweep_resumable(
                 sub, sampler, w0, problem, store_dir=store_dir,
                 param_sets=param_sets, env_sets=env_sets,
-                fleet_sets=fleet_sets, mesh=mesh)
+                fleet_sets=fleet_sets, mesh=mesh,
+                state_init_fn=state_init_fn)
         else:
             from repro.experiments.sweep import run_sweep
             result = run_sweep(sub, sampler, w0, problem,
                                param_sets=param_sets, env_sets=env_sets,
-                               fleet_sets=fleet_sets, mesh=mesh)
+                               fleet_sets=fleet_sets, mesh=mesh,
+                               state_init_fn=state_init_fn)
         store_result(store, sub, result, inputs_digest_=in_digest,
                      extra=extra)
         if store_dir is not None:
@@ -626,6 +631,7 @@ def sweep_or_load(
     env_sets=None,
     fleet_sets=None,
     mesh=None,
+    state_init_fn=None,
     store_dir: Optional[str] = None,
     extra: Optional[dict] = None,
 ) -> SweepResult:
@@ -656,4 +662,5 @@ def sweep_or_load(
     return run_sweep_extend(store, spec, sampler, w0, problem,
                             param_sets=param_sets, env_sets=env_sets,
                             fleet_sets=fleet_sets, mesh=mesh,
+                            state_init_fn=state_init_fn,
                             store_dir=store_dir, extra=extra)

@@ -124,6 +124,13 @@ def spec_payload(spec) -> dict:
     # genuinely lossy sweeps hash apart.
     if items.get("channel_sets", None) is None:
         items.pop("channel_sets", None)
+    # sampling="iid" is the stateless pre-TD program byte-for-byte (the
+    # sampler state rides the scan carry as an *empty* pytree), so the
+    # default is dropped — same hash-stability rule as channel_sets/
+    # step_backend: committed hashes never move, and only genuinely
+    # Markovian sweeps hash apart.
+    if items.get("sampling", "iid") == "iid":
+        items.pop("sampling", None)
     return {str(k): _canon(v) for k, v in sorted(items.items())}
 
 

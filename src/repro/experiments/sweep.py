@@ -51,6 +51,7 @@ from repro.core import vfa as vfa_lib
 from repro.core.algorithm1 import (
     MODE_IDS,
     MODES,
+    SAMPLER_STATE_FOLD,
     InnerTrace,
     ParamSampler,
     ProblemTerms,
@@ -108,6 +109,16 @@ class SweepSpec:
     # byte-for-byte and the field is dropped from the store's spec payload,
     # so committed hashes never move.
     channel_sets: Optional[tuple] = None
+    # Sampling regime (DESIGN.md §11): "iid" (default) draws every batch
+    # fresh from the agents' visit distributions — the stateless sampler
+    # contract.  "markov" threads per-agent sampler state (e.g. TD(0)
+    # chain positions) through the inner scan via the core's
+    # ``sampler_state=`` hook; the sampler fn then takes
+    # ``(env, params, w, state, rng)`` (family form) or
+    # ``(params, w, state, rng)`` and ``run_sweep`` needs a
+    # ``state_init_fn``.  The default is dropped from the store's spec
+    # payload, so pre-existing committed hashes never move.
+    sampling: str = "iid"
     # Experiment label, part of the spec (and store) identity.  Sweeps whose
     # difference lives in *inputs* the spec cannot see — e.g. two fleet
     # compositions over the same grid (heterogeneity studies) — must carry
@@ -146,6 +157,9 @@ class SweepSpec:
                     "step_backend='megastep' fuses the server update into "
                     "the per-step kernel and cannot express a channel delay "
                     "> 0; use the reference or fused step backend")
+        if self.sampling not in ("iid", "markov"):
+            raise ValueError(
+                f"sampling must be 'iid' or 'markov', got {self.sampling!r}")
         if self.chunk_size is not None:
             if self.batching != "vmap":
                 raise ValueError("chunk_size only applies to batching='vmap' "
@@ -212,14 +226,14 @@ class _RunInputs(NamedTuple):
 _EXEC_STATICS = ("sampler_fn", "eps", "num_agents", "gain_backend",
                  "step_backend", "batching", "share_params", "fleet_by_env",
                  "per_run_terms", "trace", "chunk_size", "channel_caps",
-                 "mesh")
+                 "sampling", "state_init_fn", "mesh")
 
 
 def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
                      env_terms, shared_terms, channel_stack, *, sampler_fn,
                      eps, num_agents, gain_backend, step_backend, batching,
                      share_params, fleet_by_env, per_run_terms, trace,
-                     chunk_size, channel_caps, mesh):
+                     chunk_size, channel_caps, sampling, state_init_fn, mesh):
     def block(per_run, w0, shared_params, param_stack, env_stack, env_terms,
               shared_terms, channel_stack):
         """Execute a (shard-local) block of runs; leading axis = runs."""
@@ -236,18 +250,33 @@ def _sweep_exec_impl(per_run, w0, shared_params, param_stack, env_stack,
                      if per_run_terms else shared_terms)
             chan = (jax.tree.map(lambda x: x[run.chan_idx], channel_stack)
                     if channel_stack is not None else None)
+            markov = sampling == "markov"
             if env_stack is not None:
                 env = jax.tree.map(lambda x: x[run.env_idx], env_stack)
-                sample_all = lambda rngs: jax.vmap(
-                    sampler_fn, in_axes=(None, 0, 0))(env, params, rngs)
+                if markov:
+                    sample_all = lambda st, w, rngs: jax.vmap(
+                        sampler_fn, in_axes=(None, 0, None, 0, 0))(
+                            env, params, w, st, rngs)
+                else:
+                    sample_all = lambda rngs: jax.vmap(
+                        sampler_fn, in_axes=(None, 0, 0))(env, params, rngs)
+            elif markov:
+                sample_all = lambda st, w, rngs: jax.vmap(
+                    sampler_fn, in_axes=(0, None, 0, 0))(params, w, st, rngs)
             else:
                 sample_all = lambda rngs: jax.vmap(sampler_fn)(params, rngs)
+            # per-run chain-state init from the run key's fold_in-derived
+            # stream — inside the jit, so resumed/segmented executions
+            # rebuild the identical state (the same derivation run_td uses;
+            # per-run <-> sweep stays bitwise on the map path)
+            state = (state_init_fn(params, jax.random.fold_in(
+                run.keys, SAMPLER_STATE_FOLD)) if markov else None)
             return gated_sgd_core(
                 run.keys, w0, run.mode_ids, run.thresholds, run.tx_probs,
                 sample_all, eps, num_agents, terms=terms,
                 gain_backend=gain_backend, trace=trace,
                 step_backend=step_backend, channel=chan,
-                channel_caps=channel_caps)
+                channel_caps=channel_caps, sampler_state=state)
 
         if batching == "map":
             return jax.lax.map(one, per_run)
@@ -323,6 +352,11 @@ class SweepPlan(NamedTuple):
     fleet_by_env: bool = False   # param_stack is zipped with the env axis
     channel_stack: object = None  # stacked ChannelInputs (C, ...), or None
     channel_caps: object = None   # static (delay_cap, stale_cap), or None
+    # sampler-state initializer for spec.sampling="markov": a *stable*
+    # (module-level) jax-pure fn (agent_params, rng) -> state pytree with
+    # per-agent leading axes — it rides through jit as a static, so a fresh
+    # lambda per call would defeat the compile cache.  None on iid sweeps.
+    state_init_fn: object = None
 
     @property
     def num_devices(self) -> int:
@@ -354,9 +388,20 @@ def plan_sweep(
     env_sets: Optional[object] = None,
     fleet_sets: Optional[object] = None,
     mesh=None,
+    state_init_fn=None,
 ) -> SweepPlan:
     """Flatten the requested grid into a ``SweepPlan`` (see ``run_sweep``
     for the argument semantics)."""
+    if spec.sampling == "markov" and state_init_fn is None:
+        raise ValueError(
+            "sampling='markov' threads per-agent sampler state through the "
+            "inner scan and needs state_init_fn=(agent_params, rng) -> "
+            "state (e.g. repro.core.td.td_init_states)")
+    if spec.sampling == "iid" and state_init_fn is not None:
+        raise ValueError(
+            "state_init_fn was given but spec.sampling is 'iid' — the "
+            "stateless sampler contract has no state to initialize; set "
+            "SweepSpec(sampling='markov') for stateful (Markovian) sweeps")
     terms = (problem if isinstance(problem, ProblemTerms)
              else ProblemTerms.from_problem(problem) if problem is not None
              else None)
@@ -463,7 +508,8 @@ def plan_sweep(
         sampler_fn=sampler.fn, mesh=mesh, gs=gs, axes=axes,
         num_runs=G, padded_runs=Gp, env_indices=ei,
         fleet_by_env=fleet_sets is not None,
-        channel_stack=channel_stack, channel_caps=channel_caps)
+        channel_stack=channel_stack, channel_caps=channel_caps,
+        state_init_fn=state_init_fn)
 
 
 def _exec_args(plan: SweepPlan, per_run: _RunInputs,
@@ -480,7 +526,8 @@ def _exec_args(plan: SweepPlan, per_run: _RunInputs,
         fleet_by_env=plan.fleet_by_env,
         per_run_terms=plan.env_terms is not None,
         trace=resolve_trace(spec.trace), chunk_size=chunk_size,
-        channel_caps=plan.channel_caps, mesh=plan.mesh)
+        channel_caps=plan.channel_caps, sampling=spec.sampling,
+        state_init_fn=plan.state_init_fn, mesh=plan.mesh)
     return args, kwargs
 
 
@@ -570,6 +617,7 @@ def run_sweep(
     env_sets: Optional[object] = None,
     fleet_sets: Optional[object] = None,
     mesh=None,
+    state_init_fn=None,
 ) -> SweepResult:
     """Execute the whole grid as one jitted call.
 
@@ -602,6 +650,13 @@ def run_sweep(
                   ``shard_map``, padded to a multiple of the device count
                   (and of ``chunk_size``); per-run results are unchanged —
                   bitwise for ``batching="map"``.
+      state_init_fn: required iff ``spec.sampling == "markov"``: a stable
+                  (module-level) jax-pure ``(agent_params, rng) -> state``
+                  building each run's initial sampler-state pytree (e.g.
+                  ``repro.core.td.td_init_states`` drawing per-agent chain
+                  starts); the rng is derived per run inside the jit as
+                  ``fold_in(run_key, SAMPLER_STATE_FOLD)``, so segmented /
+                  resumed executions rebuild identical states.
 
     Returns a SweepResult whose leaves carry the grid shape
     ``([E,] [P,] M, L, R, S)`` and whose ``axes`` names those axes.
@@ -612,7 +667,8 @@ def run_sweep(
     ``SweepResult`` after a crash.
     """
     plan = plan_sweep(spec, sampler, w0, problem, param_sets=param_sets,
-                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh)
+                      env_sets=env_sets, fleet_sets=fleet_sets, mesh=mesh,
+                      state_init_fn=state_init_fn)
     return finalize_sweep(plan, exec_plan(plan))
 
 

@@ -1,0 +1,56 @@
+"""Benchmark harness CLI (benchmarks.run): suite selection (ISSUE 9).
+
+``--only`` used to fall through silently on an empty value — ``--only
+""`` is falsy, so the harness ran EVERY suite, the opposite of what the
+flag asked for.  ``resolve_suites`` now rejects that (and any unknown
+name) with an error naming the offender and the valid choices."""
+
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.run import SUITES, resolve_suites
+
+
+def test_none_means_every_suite():
+    assert resolve_suites(None) == list(SUITES)
+
+
+def test_single_and_multiple_names_resolve_in_order():
+    assert resolve_suites("fig2") == ["fig2"]
+    assert resolve_suites("kernels,fig2") == ["kernels", "fig2"]
+
+
+def test_whitespace_and_trailing_commas_are_tolerated():
+    assert resolve_suites(" fig2 , td_speedup ,") == ["fig2", "td_speedup"]
+
+
+def test_unknown_suite_raises_naming_it_and_the_choices():
+    with pytest.raises(ValueError) as e:
+        resolve_suites("fig2,nope")
+    assert "'nope'" in str(e.value)
+    assert "fig2" in str(e.value)          # the valid choices are listed
+
+
+def test_empty_only_raises_instead_of_running_everything():
+    for value in ("", " ", ",", " , "):
+        with pytest.raises(ValueError, match="named no suite"):
+            resolve_suites(value)
+
+
+def test_td_speedup_is_a_registered_store_aware_suite():
+    from benchmarks.run import STORE_AWARE
+    assert "td_speedup" in SUITES
+    assert "td_speedup" in STORE_AWARE
+
+
+def test_cli_rejects_unknown_and_empty_only():
+    """End to end: argparse exits 2 before any suite imports run work."""
+    for bad in ("nope", ""):
+        p = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", bad],
+            capture_output=True, text=True, env=None,
+            cwd=None)
+        assert p.returncode == 2, (bad, p.stdout, p.stderr)
+        assert "suite" in p.stderr

@@ -37,6 +37,8 @@ from repro.experiments import SweepSpec, run_sweep
 from repro.experiments.runtime import run_sweep_resumable
 from repro.experiments.store import SweepStore, spec_hash, spec_payload
 
+from parity import assert_sweep_parity
+
 EPS = 0.5
 N = 40
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -249,12 +251,7 @@ def test_step_backend_parity_under_channel(backend):
     got = run_sweep(_spec(trace="full", channel_sets=chans,
                           step_backend=backend),
                     sampler, W0, problem=PROB)
-    for name in ("weights", "alphas", "delivered", "comm_rate"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(got.trace, name)),
-            np.asarray(getattr(ref.trace, name)), err_msg=name)
-    np.testing.assert_allclose(np.asarray(got.trace.gains),
-                               np.asarray(ref.trace.gains), rtol=1e-5)
+    assert_sweep_parity(got, ref, bitwise_weights=True, label=backend)
 
 
 def test_megastep_refuses_delay_at_trace_time(monkeypatch):

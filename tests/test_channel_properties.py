@@ -1,0 +1,210 @@
+"""Property tests for the lossy-channel ring arithmetic (ISSUE 9).
+
+The channel semantics in ``repro.core.algorithm1`` (DESIGN.md §10) hang
+on two pieces of modular-index arithmetic:
+
+* the **pending-delivery ring** — write slot ``k % delay_cap``, apply
+  slot ``(k - delay) % delay_cap`` — must apply each send exactly once,
+  exactly ``delay`` steps after it was sent, never before step
+  ``delay``, and silently drop the run's last ``delay`` sends;
+* the **stale-weights ring** — read ``(k - s) % stale_cap``, write
+  ``w_{k+1}`` at ``(k + 1) % stale_cap`` — must hand the agent exactly
+  ``w_{k-s}`` (clamped to ``w_0`` while ``k < s``).
+
+Pure-python mirrors of that indexing are checked exhaustively over every
+(delay, capacity, horizon) corner — the contract holds iff
+``cap >= delay + 1``, which is precisely what ``channel_caps`` sizes —
+and hypothesis widens the fuzz when the optional dev dep is installed
+(PR 1 convention; the container without it still runs every
+deterministic case).  Whole-run checks then pin the observable contract
+on the real jitted core: ``delivered <= attempted`` everywhere, a
+drop-everything channel freezes the server (making staleness
+unobservable — bitwise), and delay ``d`` holds the first weight change
+back exactly ``d`` steps.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import GatedSGDConfig
+from repro.core.channel import ChannelSpec, channel_caps, channel_inputs
+from repro.core.td import td_env_family
+from repro.core.trigger import TriggerConfig
+from repro.envs.garnet import GarnetMDP
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # optional dev dep, see pyproject [dev]
+    HAS_HYPOTHESIS = False
+
+
+# ------------------------------------------------------ index mirrors -----
+# Pure-python mirrors of the ring indexing in _gated_sgd_core's channel
+# step body (write k % delay_cap / apply (k - delay) % delay_cap; read
+# (k - s) % stale_cap / write (k + 1) % stale_cap).  Slots carry step
+# tokens (send step + 1; 0 = the zeros-init empty slot) so "which send
+# landed when" is read straight off the applied sequence.
+
+
+def pending_ring_applied(n, delay, delay_cap):
+    ring = [0] * delay_cap
+    out = []
+    for k in range(n):
+        ring[k % delay_cap] = k + 1              # send of step k
+        out.append(ring[(k - delay) % delay_cap])
+    return out
+
+
+def stale_ring_reads(n, staleness, stale_cap):
+    buf = [0] * stale_cap                        # w_0 everywhere
+    out = []
+    for k in range(n):
+        out.append(buf[(k - staleness) % stale_cap])
+        buf[(k + 1) % stale_cap] = k + 1         # w_{k+1}
+    return out
+
+
+def _check_pending(n, delay, cap):
+    applied = pending_ring_applied(n, delay, cap)
+    # exactly the send from `delay` steps ago, zeros (nothing) before that
+    assert applied == [k + 1 - delay if k >= delay else 0 for k in range(n)]
+    # each send applied at most once; the last `delay` sends never land
+    landed = [a for a in applied if a > 0]
+    assert len(landed) == len(set(landed))
+    assert set(landed) == set(range(1, max(n - delay, 0) + 1))
+
+
+def _check_stale(n, s, cap):
+    reads = stale_ring_reads(n, s, cap)
+    assert reads == [max(k - s, 0) for k in range(n)]
+
+
+@pytest.mark.parametrize("delay,extra", list(
+    itertools.product(range(5), range(3))))
+def test_pending_ring_exactly_once_after_exactly_delay(delay, extra):
+    for n in (1, 2, 7, 23):
+        _check_pending(n, delay, delay + 1 + extra)
+
+
+@pytest.mark.parametrize("s,extra", list(
+    itertools.product(range(5), range(3))))
+def test_stale_ring_reads_exactly_w_k_minus_s(s, extra):
+    for n in (1, 2, 7, 23):
+        _check_stale(n, s, s + 1 + extra)
+
+
+def test_channel_caps_size_the_rings_minimally():
+    """``channel_caps`` returns exactly the smallest capacities the ring
+    contract needs (max + 1), covering every channel in the set."""
+    specs = [ChannelSpec(), ChannelSpec(delay=3, staleness=1),
+             ChannelSpec(drop_prob=0.5, delay=1, staleness=4)]
+    delay_cap, stale_cap = channel_caps(specs)
+    assert (delay_cap, stale_cap) == (4, 5)
+    for spec in specs:
+        assert spec.delay < delay_cap and spec.staleness < stale_cap
+        _check_pending(17, spec.delay, delay_cap)
+        _check_stale(17, spec.staleness, stale_cap)
+
+
+def test_undersized_ring_breaks_the_contract():
+    """Sanity on the mirror itself: cap == delay (one too small) makes a
+    send overwrite its predecessor before application — the property the
+    ``+ 1`` in ``channel_caps`` exists to rule out."""
+    with pytest.raises(AssertionError):
+        _check_pending(8, 2, 2)
+    with pytest.raises(AssertionError):
+        _check_stale(8, 2, 2)
+
+
+if HAS_HYPOTHESIS:
+
+    @given(delay=st.integers(0, 8), extra=st.integers(0, 5),
+           n=st.integers(1, 80))
+    @settings(max_examples=150, deadline=None)
+    def test_pending_ring_property_fuzz(delay, extra, n):
+        _check_pending(n, delay, delay + 1 + extra)
+
+    @given(s=st.integers(0, 8), extra=st.integers(0, 5),
+           n=st.integers(1, 80))
+    @settings(max_examples=150, deadline=None)
+    def test_stale_ring_property_fuzz(s, extra, n):
+        _check_stale(n, s, s + 1 + extra)
+
+
+# ------------------------------------------------- whole-run contract -----
+
+ENV = td_env_family(1, num_states=6)[0][0]
+W0 = jnp.zeros(6)
+M, T, N = 3, 4, 12
+
+
+def _cfg(mode="always", **kw):
+    base = dict(trigger=TriggerConfig(lam=1e-2, rho=0.999,
+                                      num_iterations=N),
+                eps=0.3, num_agents=M, mode=mode, random_tx_prob=0.4,
+                step_backend="reference")
+    base.update(kw)
+    return GatedSGDConfig(**base)
+
+
+def _run(spec, mode="always", seed=0, **kw):
+    from repro.core.td import run_td
+    chan, caps = channel_inputs(spec, M)
+    return run_td(jax.random.key(seed), W0, ENV, _cfg(mode, **kw), T,
+                  channel=chan, channel_caps=caps)
+
+
+@pytest.mark.parametrize("i", range(4))
+def test_delivered_never_exceeds_attempted_fuzz(i):
+    """Seeded random (drop, delay, staleness, mode) draws: the channel
+    can only lose sends, and comm_rate stays the ATTEMPTED rate."""
+    rng = np.random.default_rng(100 + i)
+    spec = ChannelSpec(drop_prob=float(rng.uniform(0, 1)),
+                       delay=int(rng.integers(0, 3)),
+                       staleness=int(rng.integers(0, 3)))
+    mode = ("always", "practical", "norm", "random")[i]
+    tr = _run(spec, mode=mode, seed=int(rng.integers(2 ** 16)))
+    alphas, delivered = np.asarray(tr.alphas), np.asarray(tr.delivered)
+    assert np.all(delivered <= alphas)
+    np.testing.assert_allclose(float(tr.comm_rate), alphas.mean(),
+                               rtol=1e-6)
+
+
+def test_lossless_channel_delivers_every_attempt():
+    tr = _run(ChannelSpec(drop_prob=0.0, delay=2, staleness=1))
+    np.testing.assert_array_equal(np.asarray(tr.delivered),
+                                  np.asarray(tr.alphas))
+
+
+def test_full_drop_freezes_server_and_hides_staleness():
+    """drop_prob=1: nothing lands, so the server never moves — and with
+    w frozen at w_0, the stale ring's w_{k-s} is w_0 for every s: gains
+    and decisions are BITWISE invariant to staleness."""
+    tr = _run(ChannelSpec(drop_prob=1.0))
+    assert np.asarray(tr.delivered).sum() == 0
+    np.testing.assert_array_equal(np.asarray(tr.weights),
+                                  np.broadcast_to(np.asarray(W0),
+                                                  tr.weights.shape))
+    stale = _run(ChannelSpec(drop_prob=1.0, staleness=2))
+    np.testing.assert_array_equal(np.asarray(stale.gains),
+                                  np.asarray(tr.gains))
+    np.testing.assert_array_equal(np.asarray(stale.alphas),
+                                  np.asarray(tr.alphas))
+
+
+@pytest.mark.parametrize("delay", [0, 1, 3])
+def test_delay_holds_first_weight_change_back_exactly_delay_steps(delay):
+    """On the real core: with every step attempting and nothing dropped,
+    the first server update lands at exactly step ``delay`` — weights
+    stay w_0 through index ``delay`` and move at ``delay + 1``."""
+    tr = _run(ChannelSpec(delay=delay))
+    w = np.asarray(tr.weights)            # (N+1, n); w[0] == w0
+    w0 = np.asarray(W0)
+    for k in range(delay + 1):
+        np.testing.assert_array_equal(w[k], w0, err_msg=f"k={k}")
+    assert not np.array_equal(w[delay + 1], w0)

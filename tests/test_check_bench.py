@@ -137,6 +137,48 @@ def test_cli_end_to_end(tmp_path):
     assert "no committed JSON" in missing.stdout
 
 
+TD_COMMITTED = [
+    dict(bench="td_speedup", m=m, mode=mode, tail_error=0.3 / m,
+         error_x_m=0.3, speedup_vs_m1=float(m), us_per_call=1.0,
+         spec_hash="x" * 64)
+    for mode in ("always", "theoretical") for m in (1, 4, 16)
+]
+
+
+def test_td_speedup_schema_passes():
+    assert check_suite("td_speedup", TD_COMMITTED,
+                       [dict(r) for r in TD_COMMITTED]) == []
+
+
+@pytest.mark.parametrize("key", ["tail_error", "error_x_m", "speedup_vs_m1"])
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), -1.0, 0.0])
+def test_td_speedup_error_ratios_must_be_positive(key, bad):
+    rows = [dict(r) for r in TD_COMMITTED]
+    rows[0][key] = bad
+    errs = check_suite("td_speedup", TD_COMMITTED, rows)
+    assert any(key in e for e in errs), (key, bad)
+
+
+def test_td_speedup_must_be_m_monotone_per_mode():
+    """Per trigger mode, speedup_vs_m1 must be nondecreasing in m —
+    averaging more agents can't make the tail error worse."""
+    rows = [dict(r) for r in TD_COMMITTED]
+    # break monotonicity in one mode only: m=16 slower than m=4
+    broken = next(r for r in rows if r["mode"] == "always" and r["m"] == 16)
+    broken["speedup_vs_m1"] = 2.0
+    errs = check_suite("td_speedup", TD_COMMITTED, rows)
+    assert any("not m-monotone" in e and "always" in e for e in errs)
+    assert not any("theoretical" in e for e in errs)
+    # float jitter on an otherwise-flat pair is absorbed
+    rows = [dict(r) for r in TD_COMMITTED]
+    for r in rows:
+        if r["m"] == 16:
+            r["speedup_vs_m1"] = next(
+                x["speedup_vs_m1"] for x in rows
+                if x["mode"] == r["mode"] and x["m"] == 4) * (1 - 1e-4)
+    assert check_suite("td_speedup", TD_COMMITTED, rows) == []
+
+
 def test_delivered_rate_must_not_exceed_attempted():
     """The degraded-edge channel invariant: a channel only loses updates,
     so delivered_rate > comm_rate flags a broken row on either side of a

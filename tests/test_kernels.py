@@ -17,6 +17,8 @@ from repro.kernels.gain import (
 from repro.kernels.ssd_scan import ssd_chunk_tiles, ssd_chunked_pallas
 from repro.models.ssm import ssd_chunked
 
+from parity import assert_megastep_outputs
+
 
 @pytest.mark.parametrize("T,n", [(10, 6), (100, 25), (257, 130), (1024, 512)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -117,13 +119,7 @@ def test_megastep_kernel_all_modes_vs_oracle(rng, m, T, n, bm):
                             block_m=bm)
         want = jax.vmap(lambda p, gg, ww, c, ar, j: ref.megastep_ref(
             p, gg, ww, c, ar, j, pm, eps=0.5))(phi, g, w, ctl, arand, gj)
-        np.testing.assert_array_equal(np.asarray(got[1]),
-                                      np.asarray(want[1]), f"mode {mode}")
-        for name, a, b in zip(("w_next", "gains"),
-                              (got[0], got[2]), (want[0], want[2])):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-5, atol=1e-5,
-                                       err_msg=f"mode {mode} {name}")
+        assert_megastep_outputs(got, want, label=f"mode {mode}")
 
 
 def test_megastep_kernel_model_free_variant(rng):
@@ -135,9 +131,7 @@ def test_megastep_kernel_model_free_variant(rng):
     got = megastep_call(phi, g, w, ctl, arand, eps=0.5)
     want = jax.vmap(lambda p, gg, ww, c, ar: ref.megastep_ref(
         p, gg, ww, c, ar, eps=0.5))(phi, g, w, ctl, arand)
-    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
-    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
-                               rtol=1e-5, atol=1e-5)
+    assert_megastep_outputs(got, want, label="model-free", check_gains=False)
 
 
 def test_megastep_run_axis_bitwise_vs_per_run(rng):

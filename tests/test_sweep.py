@@ -26,9 +26,10 @@ from repro.envs import (
 )
 from repro.experiments import SweepSpec, matched_random_probs, run_sweep
 
+from parity import ALL_MODES, assert_run_parity, assert_sweep_parity
+
 EPS = 0.5
 N = 60
-ALL_MODES = ("theoretical", "practical", "norm", "random", "always", "never")
 
 GW = GridWorld()
 PROB = GW.vfa_problem(np.zeros(GW.num_states))
@@ -113,11 +114,7 @@ def test_sweep_pallas_backend_serves_hot_path():
         for b in ("reference", "pallas")
     ]
     ref, pal = (run_sweep(s, sampler, W0, problem=PROB) for s in specs)
-    np.testing.assert_allclose(np.asarray(pal.trace.gains),
-                               np.asarray(ref.trace.gains),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(pal.trace.alphas),
-                                  np.asarray(ref.trace.alphas))
+    assert_sweep_parity(pal, ref, label="pallas-gain")
 
 
 @pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
@@ -138,26 +135,7 @@ def test_fused_step_backend_parity_per_run_all_modes(gain_backend):
                 GatedSGDConfig(**cfg, step_backend="fused",
                                gain_backend=gain_backend),
                 problem=PROB, trace=trace)
-            w_ref = np.asarray(ref.weights[-1])
-            w_fus = np.asarray(fus.weights[-1] if trace == "full"
-                               else fus.final_weights)
-            np.testing.assert_allclose(w_fus, w_ref, rtol=1e-5, atol=1e-5,
-                                       err_msg=f"{mode}/{trace}")
-            # identical transmit decisions; the comm RATE may differ in the
-            # last ulp (mean lowers as sum*(1/N) or sum/N depending on how
-            # the surrounding program fuses)
-            np.testing.assert_allclose(float(fus.comm_rate),
-                                       float(ref.comm_rate), rtol=1e-6)
-            if trace == "full":
-                np.testing.assert_array_equal(np.asarray(fus.alphas),
-                                              np.asarray(ref.alphas), mode)
-                np.testing.assert_allclose(np.asarray(fus.gains),
-                                           np.asarray(ref.gains),
-                                           rtol=1e-5, atol=1e-5, err_msg=mode)
-            else:
-                np.testing.assert_array_equal(
-                    np.asarray(fus.tx_counts),
-                    np.asarray(ref.alphas).sum(axis=0), mode)
+            assert_run_parity(fus, ref, label=f"{mode}/{trace}")
 
 
 def test_fused_step_backend_parity_inside_sweep():
@@ -168,16 +146,7 @@ def test_fused_step_backend_parity_inside_sweep():
     ref = run_sweep(_spec(num_iterations=30), sampler, W0, problem=PROB)
     fus = run_sweep(_spec(num_iterations=30, step_backend="fused"),
                     sampler, W0, problem=PROB)
-    np.testing.assert_allclose(np.asarray(fus.trace.gains),
-                               np.asarray(ref.trace.gains),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(fus.trace.alphas),
-                                  np.asarray(ref.trace.alphas))
-    np.testing.assert_allclose(np.asarray(fus.trace.weights),
-                               np.asarray(ref.trace.weights),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(fus.j_final),
-                               np.asarray(ref.j_final), rtol=1e-4, atol=1e-5)
+    assert_sweep_parity(fus, ref, label="fused")
 
 
 def test_fused_step_backend_parity_summary_sweep():
@@ -187,14 +156,7 @@ def test_fused_step_backend_parity_summary_sweep():
                     sampler, W0, problem=PROB)
     fus = run_sweep(_spec(num_iterations=30, trace="summary",
                           step_backend="fused"), sampler, W0, problem=PROB)
-    np.testing.assert_array_equal(np.asarray(fus.trace.tx_counts),
-                                  np.asarray(ref.trace.tx_counts))
-    np.testing.assert_allclose(np.asarray(fus.trace.final_weights),
-                               np.asarray(ref.trace.final_weights),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(fus.trace.gain_mean),
-                               np.asarray(ref.trace.gain_mean),
-                               rtol=1e-5, atol=1e-5)
+    assert_sweep_parity(fus, ref, label="fused-summary")
 
 
 @pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
@@ -215,23 +177,7 @@ def test_megastep_backend_parity_per_run_all_modes(gain_backend):
                 GatedSGDConfig(**cfg, step_backend="megastep",
                                gain_backend=gain_backend),
                 problem=PROB, trace=trace)
-            w_ref = np.asarray(ref.weights[-1])
-            w_meg = np.asarray(meg.weights[-1] if trace == "full"
-                               else meg.final_weights)
-            np.testing.assert_allclose(w_meg, w_ref, rtol=1e-5, atol=1e-5,
-                                       err_msg=f"{mode}/{trace}")
-            np.testing.assert_allclose(float(meg.comm_rate),
-                                       float(ref.comm_rate), rtol=1e-6)
-            if trace == "full":
-                np.testing.assert_array_equal(np.asarray(meg.alphas),
-                                              np.asarray(ref.alphas), mode)
-                np.testing.assert_allclose(np.asarray(meg.gains),
-                                           np.asarray(ref.gains),
-                                           rtol=1e-5, atol=1e-5, err_msg=mode)
-            else:
-                np.testing.assert_array_equal(
-                    np.asarray(meg.tx_counts),
-                    np.asarray(ref.alphas).sum(axis=0), mode)
+            assert_run_parity(meg, ref, label=f"{mode}/{trace}")
 
 
 @pytest.mark.parametrize("gain_backend", ["reference", "pallas"])
@@ -245,16 +191,7 @@ def test_megastep_parity_inside_sweep(gain_backend):
     meg = run_sweep(_spec(num_iterations=30, step_backend="megastep",
                           gain_backend=gain_backend),
                     sampler, W0, problem=PROB)
-    np.testing.assert_allclose(np.asarray(meg.trace.gains),
-                               np.asarray(ref.trace.gains),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(meg.trace.alphas),
-                                  np.asarray(ref.trace.alphas))
-    np.testing.assert_allclose(np.asarray(meg.trace.weights),
-                               np.asarray(ref.trace.weights),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(meg.j_final),
-                               np.asarray(ref.j_final), rtol=1e-4, atol=1e-5)
+    assert_sweep_parity(meg, ref, label=f"megastep+{gain_backend}")
 
 
 def test_megastep_parity_summary_chunked_sweep():
@@ -266,14 +203,7 @@ def test_megastep_parity_summary_chunked_sweep():
     meg = run_sweep(_spec(num_iterations=30, trace="summary", chunk_size=5,
                           step_backend="megastep", gain_backend="pallas"),
                     sampler, W0, problem=PROB)
-    np.testing.assert_array_equal(np.asarray(meg.trace.tx_counts),
-                                  np.asarray(ref.trace.tx_counts))
-    np.testing.assert_allclose(np.asarray(meg.trace.final_weights),
-                               np.asarray(ref.trace.final_weights),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(meg.trace.gain_mean),
-                               np.asarray(ref.trace.gain_mean),
-                               rtol=1e-5, atol=1e-5)
+    assert_sweep_parity(meg, ref, label="megastep-chunked")
 
 
 def test_fused_pallas_sweep_serves_hot_path():
@@ -284,11 +214,7 @@ def test_fused_pallas_sweep_serves_hot_path():
                    gain_backend=gb)
              for sb, gb in (("reference", "reference"), ("fused", "pallas"))]
     ref, fus = (run_sweep(s, sampler, W0, problem=PROB) for s in specs)
-    np.testing.assert_allclose(np.asarray(fus.trace.gains),
-                               np.asarray(ref.trace.gains),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(fus.trace.alphas),
-                                  np.asarray(ref.trace.alphas))
+    assert_sweep_parity(fus, ref, label="fused+pallas")
 
 
 def test_backend_env_defaults(monkeypatch):

