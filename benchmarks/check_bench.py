@@ -134,6 +134,7 @@ def check_suite(suite: str, committed: list[dict],
                 errors.append(f"{suite}: row {i} delivered_rate={d} exceeds "
                               f"attempted comm_rate={c}")
     errors += _check_td_speedup(suite, fresh)
+    errors += _check_chaos(suite, fresh)
     return errors
 
 
@@ -161,6 +162,52 @@ def _check_td_speedup(suite: str, fresh: list[dict]) -> list[str]:
                 errors.append(
                     f"{suite}: td_speedup {mode} speedup not m-monotone: "
                     f"m={m1} gives {s1} < m={m0}'s {s0}")
+    return errors
+
+
+# fault sites every chaos run (smoke included) must cover — a site that
+# stops emitting rows means its injection point or recovery path is dead
+CHAOS_REQUIRED_SITES = ("ckpt.write", "store.commit", "runtime.unlock",
+                        "registry.load", "serve.request")
+
+
+def _check_chaos(suite: str, fresh: list[dict]) -> list[str]:
+    """Chaos-matrix invariants (ISSUE 10): every required fault site has a
+    row, every durability cell recovered bitwise with finite positive
+    recovery time, every injected crash actually crashed, and every
+    serving cell kept the healthy hashes answering 200."""
+    rows = [(i, r) for i, r in enumerate(fresh)
+            if r.get("bench") in ("chaos", "chaos_serving")]
+    if not rows:
+        return []
+    errors = []
+    sites = {r.get("site") for _, r in rows}
+    for site in CHAOS_REQUIRED_SITES:
+        if site not in sites:
+            errors.append(f"{suite}: no chaos row for fault site {site!r}")
+    for i, r in rows:
+        cell = f"row {i} ({r.get('site')}:{r.get('kind')})"
+        if r["bench"] == "chaos":
+            if r.get("recovered_bitwise") is not True:
+                errors.append(f"{suite}: {cell} recovered_bitwise is not "
+                              f"True: {r.get('recovered_bitwise')!r}")
+            rec = r.get("recovery_s")
+            if not (isinstance(rec, (int, float)) and math.isfinite(rec)
+                    and rec > 0):
+                errors.append(f"{suite}: {cell} recovery_s={rec!r} not a "
+                              "finite positive number")
+            if r.get("crashed") and r.get("faulted_rc") == 0:
+                errors.append(f"{suite}: {cell} claims crashed but "
+                              "faulted_rc=0")
+        else:
+            if r.get("healthy_kept_serving") is not True:
+                errors.append(f"{suite}: {cell} healthy hash stopped "
+                              "serving during the fault")
+            status = r.get("poisoned_status")
+            if status not in (200, 503):
+                errors.append(f"{suite}: {cell} poisoned_status={status!r} "
+                              "is neither a structured 503 nor a recovered "
+                              "200 (unstructured failure)")
     return errors
 
 

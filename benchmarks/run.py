@@ -36,6 +36,7 @@ import time
 
 from benchmarks import (
     agents_scaling,
+    chaos,
     comm_savings,
     degraded_edge,
     fig2_grid_tradeoff,
@@ -69,6 +70,7 @@ SUITES = {
     "report_regen": report_regen,
     "kernels": kernels_bench,
     "roofline": roofline,
+    "chaos": chaos,
 }
 
 # suites that accept store= (persist results / reuse cached columns)
@@ -169,7 +171,7 @@ def main() -> None:
                 continue
             label = row.get("bench", name)
             sub = [str(row[k]) for k in ("regime", "fleet_class", "channel",
-                                         "mode",
+                                         "mode", "site", "kind",
                                          "query", "panel", "lam", "arch",
                                          "shape", "mesh", "suite", "devices",
                                          "env_instances", "stage", "m",

@@ -43,6 +43,8 @@ import time
 import numpy as np
 
 from benchmarks.common import EXP_DIR, timed
+from repro.experiments.client import (QueryServiceClient, RetryError,
+                                      RetryPolicy)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -125,7 +127,15 @@ def _workload(host: str, port: int) -> tuple[list[str], int]:
 
 class _Client(threading.Thread):
     """One closed-loop keep-alive client: fires requests back to back,
-    recording per-request latency."""
+    recording per-request latency.
+
+    Built on ``QueryServiceClient``, so transient connection errors are
+    retried with backoff (and counted as ``transient_retries``) while
+    non-200 responses are counted as ``response_errors`` — the retry
+    path must never be allowed to mask real serving failures, so the two
+    are reported as separate benchmark columns (``errors`` keeps its
+    committed meaning: requests that produced no 200 answer at all).
+    """
 
     def __init__(self, host, port, urls, n_requests, offset):
         super().__init__(daemon=True)
@@ -133,32 +143,31 @@ class _Client(threading.Thread):
         self.urls, self.n, self.offset = urls, n_requests, offset
         self.latencies: list[float] = []
         self.errors = 0
+        self.transient_retries = 0
+        self.response_errors = 0
         self.jax_loaded = False
 
     def run(self):
-        conn = http.client.HTTPConnection(self.host, self.port, timeout=30)
+        client = QueryServiceClient(self.host, self.port, timeout=30,
+                                    policy=RetryPolicy(seed=self.offset))
         try:
             for i in range(self.n):
                 url = self.urls[(self.offset + i) % len(self.urls)]
                 t0 = time.perf_counter()
                 try:
-                    conn.request("GET", url)
-                    r = conn.getresponse()
-                    blob = r.read()
-                    ok = r.status == 200
-                except Exception:  # noqa: BLE001 — counted, not raised
-                    self.errors += 1
-                    conn.close()
-                    conn = http.client.HTTPConnection(self.host, self.port,
-                                                      timeout=30)
+                    status, body = client.get(url)
+                except RetryError:
+                    self.errors += 1     # retries exhausted: a real failure
                     continue
                 self.latencies.append(time.perf_counter() - t0)
-                if not ok:
+                if status != 200:
                     self.errors += 1
-                elif json.loads(blob).get("jax_loaded"):
+                    self.response_errors += 1
+                elif body.get("jax_loaded"):
                     self.jax_loaded = True
         finally:
-            conn.close()
+            self.transient_retries = client.stats["transient_retries"]
+            client.close()
 
 
 def _load_level(host, port, urls, concurrency, n_per_client) -> dict:
@@ -180,6 +189,8 @@ def _load_level(host, port, urls, concurrency, n_per_client) -> dict:
     return dict(
         bench="serve_load", concurrency=concurrency,
         requests=int(lats.size), errors=errors,
+        transient_retries=sum(c.transient_retries for c in clients),
+        response_errors=sum(c.response_errors for c in clients),
         us_per_call=float(lats.mean() * 1e6),
         p50_ms=float(np.percentile(lats, 50) * 1e3),
         p99_ms=float(np.percentile(lats, 99) * 1e3),

@@ -14,6 +14,7 @@ hosts; on this CPU container everything is single-process anyway).
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -23,9 +24,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
+
 PyTree = Any
 
-_RESERVED = ("__dtypes__", "__meta__")
+_RESERVED = ("__dtypes__", "__meta__", "__checksums__")
+
+
+class CorruptCheckpointError(ValueError):
+    """The checkpoint file is unreadable or fails its checksums.
+
+    Distinct from the plain ``ValueError`` strictness errors (key set /
+    shape / dtype disagreeing with the ``like`` template): corruption
+    means the *bytes* are wrong — the resumable runtime quarantines the
+    file and recomputes the chunk; a template mismatch means the *caller*
+    is wrong and must not be silently recomputed away.
+    """
 
 
 def _escape(part: str) -> str:
@@ -59,58 +73,125 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     return out
 
 
-def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+def _sha256(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def fsync_dir(dirname: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    fd = os.open(dirname or ".", os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(path: str, tree: PyTree, metadata: dict | None = None,
+         durable: bool = False) -> None:
+    """Atomic checkpoint write: temp file -> checksum sidecar -> rename.
+
+    Per-array sha256 checksums are computed from the *in-memory* arrays
+    before any byte reaches disk and stored in the ``__checksums__``
+    sidecar, so on-disk corruption (torn write, bit rot) can never be
+    blessed into the manifest — ``restore`` re-derives and compares.
+    ``durable=True`` additionally fsyncs the containing directory after
+    the rename (rename alone does not guarantee the entry survives a
+    crash); off by default so tests stay fast.
+    """
     flat = _flatten(tree)
     dtypes = {k: str(v.dtype) for k, v in flat.items()}
     payload = {}
     for k, v in flat.items():
         payload[k] = v.view(np.uint16) if v.dtype == jnp.bfloat16 else v
+    checksums = {k: _sha256(v) for k, v in payload.items()}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, __dtypes__=json.dumps(dtypes),
-                 __meta__=json.dumps(metadata or {}), **payload)
-    os.replace(tmp, path)
+    with faults.scope("ckpt.write") as fs:
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __dtypes__=json.dumps(dtypes),
+                     __meta__=json.dumps(metadata or {}),
+                     __checksums__=json.dumps(checksums), **payload)
+        fs.mangle(tmp)
+    with faults.scope("ckpt.rename"):
+        os.replace(tmp, path)
+    if durable:
+        with faults.scope("ckpt.fsync"):
+            fsync_dir(os.path.dirname(path))
 
 
 def load_metadata(path: str) -> dict:
     """Read just the metadata sidecar (cheap: no array decompression)."""
-    with np.load(path, allow_pickle=False) as z:
-        return json.loads(str(z["__meta__"]))
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            return json.loads(str(z["__meta__"]))
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint {path} metadata unreadable: {e!r}") from e
+
+
+def _read_raw(path: str) -> tuple[dict, dict, dict | None, dict]:
+    """Decode the npz container; any failure here means corrupt bytes.
+
+    npz members carry zip CRC32s, so torn writes and most bit flips
+    surface as decode errors inside this function; the sha256 sidecar
+    (when present) catches the remainder — a container that decodes
+    fine but holds wrong bytes.
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            dtypes = json.loads(str(z["__dtypes__"]))
+            meta = json.loads(str(z["__meta__"]))
+            checksums = (json.loads(str(z["__checksums__"]))
+                         if "__checksums__" in z.files else None)
+            raw = {k: z[k] for k in set(z.files) - set(_RESERVED)}
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint {path} unreadable (torn or corrupt): {e!r}") from e
+    if checksums is not None:
+        for k, arr in raw.items():
+            want = checksums.get(k)
+            got = _sha256(arr)
+            if got != want:
+                raise CorruptCheckpointError(
+                    f"checkpoint {path} fails checksum for {k!r}: "
+                    f"stored {want}, recomputed {got}")
+    return dtypes, meta, checksums, raw
 
 
 def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
     """Restore into the structure of ``like``.
 
-    Strict: raises with the offending keys when the checkpoint and the
-    ``like`` template disagree on the key set, on any shape, or on any
-    dtype (bf16 round-trips through its uint16 storage view).
+    Strict on two independent axes: corrupt *bytes* (unreadable npz or
+    checksum mismatch) raise ``CorruptCheckpointError`` so the runtime
+    can quarantine-and-recompute, while a readable checkpoint whose key
+    set, shapes or dtypes disagree with the ``like`` template raises a
+    plain ``ValueError`` — caller error, never recomputed away (bf16
+    round-trips through its uint16 storage view).
     """
-    with np.load(path, allow_pickle=False) as z:
-        dtypes = json.loads(str(z["__dtypes__"]))
-        meta = json.loads(str(z["__meta__"]))
-        flat_like = _flatten(like)
-        stored = set(z.files) - set(_RESERVED)
-        missing = sorted(set(flat_like) - stored)
-        extra = sorted(stored - set(flat_like))
-        if missing or extra:
+    dtypes, meta, _, raw = _read_raw(path)
+    flat_like = _flatten(like)
+    stored = set(raw)
+    missing = sorted(set(flat_like) - stored)
+    extra = sorted(stored - set(flat_like))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the `like` template: "
+            f"missing from checkpoint {missing}, "
+            f"unexpected in checkpoint {extra}")
+    restored = {}
+    for k, ref in flat_like.items():
+        if dtypes.get(k) != str(ref.dtype):
             raise ValueError(
-                f"checkpoint {path} does not match the `like` template: "
-                f"missing from checkpoint {missing}, "
-                f"unexpected in checkpoint {extra}")
-        restored = {}
-        for k, ref in flat_like.items():
-            if dtypes[k] != str(ref.dtype):
-                raise ValueError(
-                    f"dtype mismatch for {k!r}: checkpoint stores "
-                    f"{dtypes[k]}, `like` expects {ref.dtype}")
-            arr = z[k]
-            if dtypes[k] == "bfloat16":
-                arr = arr.view(jnp.bfloat16)
-            if arr.shape != ref.shape:
-                raise ValueError(f"shape mismatch for {k!r}: checkpoint has "
-                                 f"{arr.shape}, `like` expects {ref.shape}")
-            restored[k] = arr
+                f"dtype mismatch for {k!r}: checkpoint stores "
+                f"{dtypes.get(k)}, `like` expects {ref.dtype}")
+        arr = raw[k]
+        if dtypes[k] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if arr.shape != ref.shape:
+            raise ValueError(f"shape mismatch for {k!r}: checkpoint has "
+                             f"{arr.shape}, `like` expects {ref.shape}")
+        restored[k] = arr
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
     keys = ["/".join(_key_part(p) for p in path)
             for path, _ in leaves_with_path]

@@ -37,8 +37,27 @@ import threading
 from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
+from repro import faults
 from repro.experiments import query as query_lib
-from repro.experiments.store import StoredSweep, SweepStore
+from repro.experiments.store import (StoreCorruptError, StoredSweep,
+                                     SweepStore)
+
+
+class EntryUnavailableError(Exception):
+    """One spec hash cannot be served right now — corrupt bytes, vanished
+    store directory, or transient I/O during the load.
+
+    Deliberately NOT a ``KeyError``: a hash nobody ever stored is a
+    client error (400), a hash the federation *advertised* but cannot
+    load is a server-side degradation (503 + per-hash reason) that must
+    leave every other entry serving.
+    """
+
+    def __init__(self, spec_hash: Optional[str], reason: str):
+        super().__init__(f"entry {spec_hash or '<default>'} unavailable: "
+                         f"{reason}")
+        self.spec_hash = spec_hash
+        self.reason = reason
 
 
 def _select_key(select: Optional[dict]) -> tuple:
@@ -148,6 +167,24 @@ class StoreRegistry:
 
     # --------------------------------------------------------- resolution --
 
+    def _get_checked(self, s: SweepStore, h: str) -> StoredSweep:
+        """Load one entry with checksums verified; failures degrade to a
+        per-hash ``EntryUnavailableError`` instead of tearing the caller
+        down (the registration-time verification the checksums exist for).
+        """
+        try:
+            with faults.scope("registry.load"):
+                return s.get(h, verify=True)
+        except StoreCorruptError as e:
+            raise EntryUnavailableError(h, e.reason) from e
+        except KeyError as e:
+            # advertised in the snapshot, gone by load time (store dir
+            # deleted after registration): server-side degradation
+            raise EntryUnavailableError(
+                h, f"entry vanished after registration: {e}") from e
+        except OSError as e:
+            raise EntryUnavailableError(h, f"store I/O failed: {e!r}") from e
+
     def _load_entry(self, spec_hash: Optional[str],
                     snap: tuple) -> StoredSweep:
         with self._lock:
@@ -155,14 +192,18 @@ class StoreRegistry:
         if spec_hash:
             for s in self.stores:
                 if s.has(spec_hash):
-                    return s.get(spec_hash)
+                    return self._get_checked(s, spec_hash)
+            if any(h == spec_hash for _, h in snap):
+                raise EntryUnavailableError(
+                    spec_hash, "entry vanished after registration")
             raise KeyError(f"no store entry {spec_hash} in any federated "
                            "root (see /sweeps)")
         if not snap:
             raise KeyError("federation is empty — no store entries yet")
         if len(snap) == 1:
             root, h = snap[0]
-            return next(s for s in self.stores if s.root == root).get(h)
+            return self._get_checked(
+                next(s for s in self.stores if s.root == root), h)
         # several entries, no hash: serve the merged union iff they form
         # one family (membership from meta.json alone — arrays load only
         # for the actual merge)
@@ -174,13 +215,39 @@ class StoreRegistry:
                 "families — pass ?hash=<spec_hash> (see /sweeps)")
         fh = families.pop()
         members: dict[str, StoredSweep] = {}
-        for s in self.stores:                    # dedupe mirrored roots
-            for e in s.family(fh):
-                members.setdefault(e.spec_hash, e)
+        try:
+            for s in self.stores:                # dedupe mirrored roots
+                for e in s.family(fh):           # verified loads
+                    members.setdefault(e.spec_hash, e)
+        except StoreCorruptError as e:
+            raise EntryUnavailableError(e.spec_hash, e.reason) from e
+        except OSError as e:
+            raise EntryUnavailableError(None,
+                                        f"store I/O failed: {e!r}") from e
         entries = list(members.values())
         if len(entries) == 1:
             return entries[0]
         return self.stores[0].merge(entries)
+
+    def evict(self, spec_hash: Optional[str] = None) -> int:
+        """Drop cached tables touching ``spec_hash`` (all when None).
+
+        The serving path calls this when an entry turns unavailable:
+        stale tables resolved under an older snapshot must not keep
+        answering for bytes that are gone or corrupt.  Returns the number
+        of tables dropped.
+        """
+        with self._lock:
+            if spec_hash is None:
+                n = len(self._tables)
+                self._tables.clear()
+                return n
+            drop = [k for k in self._tables
+                    if k[1] == spec_hash
+                    or any(h == spec_hash for _, h in k[0])]
+            for k in drop:
+                del self._tables[k]
+            return len(drop)
 
     def table(self, spec_hash: Optional[str] = None) -> QueryTable:
         """The (possibly cached) query table for one resolution.
@@ -199,7 +266,18 @@ class StoreRegistry:
                 self.stats["table_hits"] += 1
                 return got
             self.stats["table_misses"] += 1
-        tab = QueryTable(self._load_entry(spec_hash, snap))
+        try:
+            tab = QueryTable(self._load_entry(spec_hash, snap))
+        except KeyError:
+            # unknown hash — unless we once served it (stale tables cached
+            # under an older snapshot): then its store directory was
+            # deleted after registration, which is a per-hash degradation,
+            # and the stale tables must go with it
+            if spec_hash is not None and self.evict(spec_hash):
+                raise EntryUnavailableError(
+                    spec_hash,
+                    "store directory deleted after registration") from None
+            raise
         with self._lock:
             self._tables[key] = tab
             self._tables.move_to_end(key)

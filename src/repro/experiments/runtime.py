@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.checkpoint import store as ckpt
 from repro.core.algorithm1 import InnerTrace, ProblemTerms, SummaryTrace
 from repro.core import vfa as vfa_lib
@@ -218,8 +219,13 @@ def completed_chunks(store_dir: str, exec_hash: str) -> dict[int, str]:
         path = os.path.join(store_dir, name)
         try:
             meta = ckpt.load_metadata(path)
+        except ckpt.CorruptCheckpointError as e:
+            # torn/corrupt chunk: rename it aside (never silently reuse a
+            # name a later save would collide with) and recompute
+            faults.quarantine_path(path, f"unreadable chunk: {e}")
+            continue
         except Exception:
-            continue                      # torn/foreign file: recompute
+            continue                      # foreign file: ignore
         if meta.get("exec_hash") == exec_hash:
             out[int(m.group(1))] = path
     return out
@@ -239,6 +245,7 @@ def run_sweep_resumable(
     state_init_fn=None,
     summary_store: Optional[Union[str, store_lib.SweepStore]] = None,
     on_chunk=None,
+    durable: bool = False,
 ) -> SweepResult:
     """``run_sweep``, executed in checkpointed segments so it can resume.
 
@@ -257,6 +264,16 @@ def run_sweep_resumable(
                      dispatched and queued for checkpointing — NOT a
                      durability signal: a chunk is only guaranteed on
                      disk once this function returns.
+      durable:       fsync chunk files' containing directory after each
+                     atomic rename (and the summary-store entry dir on
+                     commit) — rename alone does not survive power loss.
+                     Off by default so tests stay fast.
+
+    A chunk that fails its restore (torn write, bit flip — checksums in
+    every chunk's npz sidecar are re-verified) is **quarantined**: renamed
+    aside with a stderr log, then recomputed in place, so the resumed
+    result is still bitwise identical to the uninterrupted run.  Corrupt
+    chunks are never silently merged.
 
     Segment granularity is ``spec.chunk_size`` runs per device
     (``SweepPlan.segment_runs``); with ``chunk_size=None`` the whole grid
@@ -296,8 +313,9 @@ def run_sweep_resumable(
         "summary_store": (summary_store.root
                           if summary_store is not None else None),
     })
-    with open(os.path.join(store_dir, _INCOMPLETE), "w") as f:
-        f.write(exec_hash)
+    with faults.scope("runtime.lock"):
+        with open(os.path.join(store_dir, _INCOMPLETE), "w") as f:
+            f.write(exec_hash)
     done = completed_chunks(store_dir, exec_hash)
     template = _segment_template(plan) if done else None
 
@@ -306,7 +324,7 @@ def run_sweep_resumable(
         # finishes this segment, while the main thread has already
         # dispatched the next one — checkpoint I/O overlaps execution.
         host = jax.tree.map(np.asarray, out)
-        ckpt.save(path, host, metadata={
+        ckpt.save(path, host, durable=durable, metadata={
             "exec_hash": exec_hash, "spec_hash": sh,
             "inputs_digest": in_digest, "segment_index": index,
             "segment": list(segments[index]),
@@ -328,16 +346,26 @@ def run_sweep_resumable(
             max_workers=1, thread_name_prefix="sweep-ckpt") as pool:
         pending = []
         for i, (a, b) in enumerate(segments):
+            seg = None
             if i in done:
-                restored, meta = ckpt.restore(done[i], template)
-                if tuple(meta["segment"]) != (a, b):
-                    raise ValueError(
-                        f"chunk {done[i]} covers runs {meta['segment']}, "
-                        f"expected [{a}, {b}) — stale store_dir?")
-                seg = restored
-                if on_chunk is not None:
-                    on_chunk(i, len(segments), True)
-            else:
+                try:
+                    restored, meta = ckpt.restore(done[i], template)
+                except ckpt.CorruptCheckpointError as e:
+                    # checksum/decode failure on a finished chunk: rename
+                    # it aside and recompute the segment — the resumed
+                    # result stays bitwise identical to a clean run, and
+                    # corrupt bytes are never merged
+                    faults.quarantine_path(done[i], str(e))
+                    del done[i]
+                else:
+                    if tuple(meta["segment"]) != (a, b):
+                        raise ValueError(
+                            f"chunk {done[i]} covers runs {meta['segment']}, "
+                            f"expected [{a}, {b}) — stale store_dir?")
+                    seg = restored
+                    if on_chunk is not None:
+                        on_chunk(i, len(segments), True)
+            if seg is None:
                 seg = exec_plan_segment(plan, a, b)   # async dispatch
                 # the writer closure holds the only other reference to seg;
                 # it is submitted BEFORE the scatter so the checkpoint bytes
@@ -357,10 +385,15 @@ def run_sweep_resumable(
     result = finalize_sweep(plan, flat)
 
     if summary_store is not None:
-        store_result(summary_store, spec, result, inputs_digest_=in_digest)
+        store_result(summary_store, spec, result, inputs_digest_=in_digest,
+                     durable=durable)
     # every chunk is durable and the summary (if requested) committed:
-    # release the resume lock so gc_finished may collect the chunk dir
-    os.remove(os.path.join(store_dir, _INCOMPLETE))
+    # release the resume lock so gc_finished may collect the chunk dir.
+    # A crash before this remove leaves a committed entry under a live
+    # lock — the stale-lock rules in gc_finished/_lock_is_stale, and a
+    # re-run simply restores every chunk and re-puts byte-identically.
+    with faults.scope("runtime.unlock"):
+        os.remove(os.path.join(store_dir, _INCOMPLETE))
     return result
 
 
@@ -474,12 +507,13 @@ def gc_finished(store_dir: str,
             f"({entry_digest} != {manifest['inputs_digest']}) — refusing "
             "to treat it as this sweep's final record")
     files, freed = 0, 0
-    for name in sorted(os.listdir(store_dir)):
-        if _CHUNK_RE.match(name) or name == _MANIFEST:
-            path = os.path.join(store_dir, name)
-            freed += os.path.getsize(path)
-            os.remove(path)
-            files += 1
+    with faults.scope("runtime.gc"):
+        for name in sorted(os.listdir(store_dir)):
+            if _CHUNK_RE.match(name) or name == _MANIFEST:
+                path = os.path.join(store_dir, name)
+                freed += os.path.getsize(path)
+                os.remove(path)
+                files += 1
     if not os.listdir(store_dir):
         os.rmdir(store_dir)
     return {"collected": True, "files": files, "bytes": freed,
@@ -523,14 +557,16 @@ def arrays_to_result(entry: store_lib.StoredSweep) -> SweepResult:
 def store_result(store: store_lib.SweepStore, spec: SweepSpec,
                  result: SweepResult, *,
                  inputs_digest_: Optional[str] = None,
-                 extra: Optional[dict] = None) -> str:
+                 extra: Optional[dict] = None,
+                 durable: bool = False) -> str:
     """Append a finished sweep to the summary store; returns its hash."""
     kind = "full" if isinstance(result.trace, InnerTrace) else "summary"
     meta = {"trace_kind": kind}
     if inputs_digest_ is not None:
         meta["inputs_digest"] = inputs_digest_
     meta.update(extra or {})
-    return store.put(spec, result_arrays(result), result.axes, extra=meta)
+    return store.put(spec, result_arrays(result), result.axes, extra=meta,
+                     durable=durable)
 
 
 def _select_lambdas(entry: store_lib.StoredSweep,
@@ -588,29 +624,43 @@ def run_sweep_extend(
     in_digest = inputs_digest(sampler, w0, problem=problem,
                               param_sets=param_sets, env_sets=env_sets,
                               fleet_sets=fleet_sets)
-    missing = store.missing_lambdas(spec, inputs_digest=in_digest)
-    if missing:
-        sub = dataclasses.replace(spec, lambdas=tuple(missing))
-        if store_dir is not None:
-            result = run_sweep_resumable(
-                sub, sampler, w0, problem, store_dir=store_dir,
-                param_sets=param_sets, env_sets=env_sets,
-                fleet_sets=fleet_sets, mesh=mesh,
-                state_init_fn=state_init_fn)
-        else:
-            from repro.experiments.sweep import run_sweep
-            result = run_sweep(sub, sampler, w0, problem,
-                               param_sets=param_sets, env_sets=env_sets,
-                               fleet_sets=fleet_sets, mesh=mesh,
-                               state_init_fn=state_init_fn)
-        store_result(store, sub, result, inputs_digest_=in_digest,
-                     extra=extra)
-        if store_dir is not None:
-            # the sub-sweep's record is committed (with the figure extras,
-            # which is why run_sweep_resumable does not write it itself):
-            # note the store root so gc_finished can verify unaided
-            _note_summary_store(store_dir, store.root)
-    merged = store.merged(spec, inputs_digest=in_digest)
+    # A corrupt family member discovered while merging is quarantined and
+    # its λ columns recomputed — each retry removes one entry from the
+    # family, so the loop is bounded by the family size.
+    attempt = 0
+    while True:
+        missing = store.missing_lambdas(spec, inputs_digest=in_digest)
+        if missing:
+            sub = dataclasses.replace(spec, lambdas=tuple(missing))
+            # one store_dir holds one chunk layout: a quarantine-retry
+            # sub-sweep (different λ set, different exec hash) must not
+            # reuse the dir the first sub-sweep claimed
+            if store_dir is not None and attempt == 0:
+                result = run_sweep_resumable(
+                    sub, sampler, w0, problem, store_dir=store_dir,
+                    param_sets=param_sets, env_sets=env_sets,
+                    fleet_sets=fleet_sets, mesh=mesh,
+                    state_init_fn=state_init_fn)
+            else:
+                from repro.experiments.sweep import run_sweep
+                result = run_sweep(sub, sampler, w0, problem,
+                                   param_sets=param_sets, env_sets=env_sets,
+                                   fleet_sets=fleet_sets, mesh=mesh,
+                                   state_init_fn=state_init_fn)
+            store_result(store, sub, result, inputs_digest_=in_digest,
+                         extra=extra)
+            if store_dir is not None:
+                # the sub-sweep's record is committed (with the figure
+                # extras, which is why run_sweep_resumable does not write it
+                # itself): note the store root so gc_finished can verify
+                # unaided
+                _note_summary_store(store_dir, store.root)
+        try:
+            merged = store.merged(spec, inputs_digest=in_digest)
+            break
+        except store_lib.StoreCorruptError as e:
+            store.quarantine(e.spec_hash, e.reason)
+            attempt += 1
     entry = _select_lambdas(merged, tuple(float(l) for l in spec.lambdas))
     if extra:
         entry = dataclasses.replace(entry, extra={**entry.extra, **extra})
@@ -648,17 +698,25 @@ def sweep_or_load(
     if not isinstance(store, store_lib.SweepStore):
         store = store_lib.SweepStore(store)
     if store.has(spec):
-        entry = store.get(spec)
-        in_digest = inputs_digest(sampler, w0, problem=problem,
-                                  param_sets=param_sets, env_sets=env_sets,
-                                  fleet_sets=fleet_sets)
-        stored = entry.extra.get("inputs_digest")
-        if stored is not None and stored != in_digest:
-            raise ValueError(
-                f"store entry {entry.spec_hash} was computed from different "
-                "inputs (w0/sampler/env/fleet digests differ) — same spec, "
-                "different experiment; give this sweep its own SweepSpec.tag")
-        return arrays_to_result(entry)
+        try:
+            entry = store.get(spec, verify=True)
+        except store_lib.StoreCorruptError as e:
+            # corrupt cached entry: quarantine it and fall through to the
+            # recompute path — transparent recovery, identical bytes
+            store.quarantine(e.spec_hash, e.reason)
+        else:
+            in_digest = inputs_digest(sampler, w0, problem=problem,
+                                      param_sets=param_sets,
+                                      env_sets=env_sets,
+                                      fleet_sets=fleet_sets)
+            stored = entry.extra.get("inputs_digest")
+            if stored is not None and stored != in_digest:
+                raise ValueError(
+                    f"store entry {entry.spec_hash} was computed from "
+                    "different inputs (w0/sampler/env/fleet digests differ) "
+                    "— same spec, different experiment; give this sweep its "
+                    "own SweepSpec.tag")
+            return arrays_to_result(entry)
     return run_sweep_extend(store, spec, sampler, w0, problem,
                             param_sets=param_sets, env_sets=env_sets,
                             fleet_sets=fleet_sets, mesh=mesh,

@@ -42,8 +42,15 @@ import sys
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro import faults
 from repro.experiments import query as query_lib
-from repro.experiments.registry import StoreRegistry
+from repro.experiments.registry import EntryUnavailableError, StoreRegistry
+
+
+def _unavailable_body(e: EntryUnavailableError) -> dict:
+    """The structured 503 body: per-hash reason, machine-checkable flag."""
+    return {"error": str(e), "unavailable": True, "spec_hash": e.spec_hash,
+            "reason": e.reason, "jax_loaded": "jax" in sys.modules}
 
 QUERY_NAMES = ("best_lambda", "tradeoff", "pareto", "curve", "sweeps",
                "stats")
@@ -112,6 +119,11 @@ def handle_batch(registry: StoreRegistry, payload: dict) -> dict:
         try:
             results.append(handle_query(registry, str(item.get("query", "")),
                                         params))
+        except EntryUnavailableError as e:
+            # one poisoned hash degrades its slot, the rest of the batch
+            # (and every other hash) keeps serving
+            registry.evict(e.spec_hash)
+            results.append(_unavailable_body(e))
         except (KeyError, ValueError, IndexError, TypeError) as e:
             # TypeError covers malformed JSON param types (lam=null,
             # budget={...}): float(None) etc. must 400 the item, not 500
@@ -147,7 +159,20 @@ class _Handler(BaseHTTPRequestHandler):
         path = parsed.path.strip("/")
         name = path[len("query/"):] if path.startswith("query/") else path
         try:
-            body, code = handle_query(self.registry, name, params), 200
+            with faults.scope("serve.request"):
+                body, code = handle_query(self.registry, name, params), 200
+        except faults.TransientFault:
+            # injected connection-level fault: drop the connection with no
+            # response, like a socket reset — the client's retry policy is
+            # what recovers this, not the server
+            self.close_connection = True
+            return
+        except EntryUnavailableError as e:
+            # degrade per hash: evict any stale cached table and answer a
+            # structured 503; other entries (and this connection) keep
+            # serving
+            self.registry.evict(e.spec_hash)
+            body, code = _unavailable_body(e), 503
         except (KeyError, ValueError, IndexError) as e:
             body, code = {"error": str(e)}, 400
         self._respond(body, code)
@@ -159,11 +184,15 @@ class _Handler(BaseHTTPRequestHandler):
                                     "accepts POST"}, 404)
             return
         try:
-            n = int(self.headers.get("Content-Length", 0))
-            payload = json.loads(self.rfile.read(n) or b"null")
-            if not isinstance(payload, dict):
-                raise ValueError("batch body must be a JSON object")
-            body, code = handle_batch(self.registry, payload), 200
+            with faults.scope("serve.request"):
+                n = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(n) or b"null")
+                if not isinstance(payload, dict):
+                    raise ValueError("batch body must be a JSON object")
+                body, code = handle_batch(self.registry, payload), 200
+        except faults.TransientFault:
+            self.close_connection = True
+            return
         except (ValueError, KeyError, TypeError) as e:
             body, code = {"error": str(e)}, 400
         self._respond(body, code)

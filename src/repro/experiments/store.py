@@ -36,12 +36,31 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import io
 import json
 import os
 import tempfile
 from typing import Iterable, Optional, Union
 
 import numpy as np
+
+from repro import faults
+
+
+class StoreCorruptError(ValueError):
+    """A store entry's bytes are wrong: unreadable npz, a file sha256
+    that no longer matches ``meta.json``'s ``checksums`` record, or a
+    ``meta.json`` whose spec no longer hashes to its directory name.
+
+    Carries ``spec_hash`` and ``reason`` so the serving tier can degrade
+    to a structured per-hash error instead of tearing down a connection,
+    and the runtime can quarantine-and-recompute.
+    """
+
+    def __init__(self, spec_hash: str, reason: str):
+        super().__init__(f"store entry {spec_hash} corrupt: {reason}")
+        self.spec_hash = spec_hash
+        self.reason = reason
 
 # Fields that select *how* a sweep executes but provably cannot change its
 # results (map-over-vmap chunking is bitwise on this backend — asserted by
@@ -56,6 +75,14 @@ MERGE_FIELD = "lambdas"
 
 _META = "meta.json"
 _ARRAYS = "arrays.npz"
+
+
+def _fsync_dir(dirname: str) -> None:
+    fd = os.open(dirname or ".", os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _canon(v):
@@ -199,11 +226,15 @@ class SweepStore:
         return os.path.join(self.root, h)
 
     def hashes(self) -> list[str]:
-        out = []
-        for name in sorted(os.listdir(self.root)):
-            if os.path.isfile(os.path.join(self.root, name, _META)):
-                out.append(name)
-        return out
+        try:
+            names = sorted(os.listdir(self.root))
+        except FileNotFoundError:
+            # a vanished root is an empty store, not a connection-killing
+            # 500 — the serving tier lists hashes on live requests
+            return []
+        return [name for name in names
+                if ".quarantined" not in name
+                and os.path.isfile(os.path.join(self.root, name, _META))]
 
     def entries(self) -> list[dict]:
         """All entry metadata (cheap: no arrays loaded)."""
@@ -225,11 +256,17 @@ class SweepStore:
     # -------------------------------------------------------------- I/O --
 
     def put(self, spec, arrays: dict[str, np.ndarray],
-            axes: Iterable[str], extra: Optional[dict] = None) -> str:
+            axes: Iterable[str], extra: Optional[dict] = None,
+            durable: bool = False) -> str:
         """Append one finished sweep; returns its spec hash.
 
         Idempotent for byte-identical re-puts; raises if the hash exists
         with different bytes (append-only: results are never overwritten).
+        The arrays npz is serialized in memory and its file sha256
+        recorded in ``meta.json["checksums"]`` *before* any byte reaches
+        disk, so on-disk corruption can never be blessed into the commit
+        marker.  ``durable=True`` fsyncs the entry directory after the
+        meta commit.
         """
         payload = spec_payload(spec)
         h = _digest(payload)
@@ -239,20 +276,25 @@ class SweepStore:
                 raise TypeError(f"array {k!r} has non-native dtype {a.dtype}; "
                                 "view it as a native dtype before storing")
         if self.has(h):
-            prev = self.get(h)
-            if (sorted(prev.arrays) != sorted(arrays)
-                    or arrays_digest(prev.arrays) != arrays_digest(arrays)):
-                raise ValueError(
-                    f"store entry {h} already exists with different results "
-                    "— the store is append-only and a spec hash must map to "
-                    "one set of bytes")
-            return h
-        d = self._dir(h)
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, **arrays)
-        os.replace(tmp, os.path.join(d, _ARRAYS))
+            try:
+                prev = self.get(h, verify=True)
+            except StoreCorruptError as e:
+                # a committed-but-corrupt entry (torn arrays under a valid
+                # commit marker): quarantine it and fall through to write
+                # the fresh bytes — the recompute path, not an overwrite
+                self.quarantine(h, e.reason)
+            else:
+                if (sorted(prev.arrays) != sorted(arrays)
+                        or arrays_digest(prev.arrays)
+                        != arrays_digest(arrays)):
+                    raise ValueError(
+                        f"store entry {h} already exists with different "
+                        "results — the store is append-only and a spec hash "
+                        "must map to one set of bytes")
+                return h
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        blob = buf.getvalue()
         meta = {
             "spec": payload,
             "spec_hash": h,
@@ -260,27 +302,134 @@ class SweepStore:
             "axes": list(axes),
             "arrays": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
                        for k, a in arrays.items()},
+            "checksums": {_ARRAYS: hashlib.sha256(blob).hexdigest(),
+                          "arrays_digest": arrays_digest(arrays)},
             "extra": dict(extra or {}),
         }
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(meta, f, indent=1, sort_keys=True)
-        os.replace(tmp, os.path.join(d, _META))   # commit marker, written last
+        d = self._dir(h)
+        with faults.scope("store.commit") as fs:
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, os.path.join(d, _ARRAYS))
+            # torn/flip faults land on the already-renamed arrays file,
+            # so the commit marker below still lands: the store ends up
+            # holding a committed-but-corrupt entry — the case the
+            # checksum verification + quarantine path exists for.
+            fs.mangle(os.path.join(d, _ARRAYS))
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(meta, f, indent=1, sort_keys=True)
+            os.replace(tmp, os.path.join(d, _META))  # commit marker, last
+            if durable:
+                _fsync_dir(d)
+                _fsync_dir(self.root)
         return h
 
-    def get(self, spec_or_hash) -> StoredSweep:
-        h = self._resolve(spec_or_hash)
+    def _read_meta(self, h: str) -> dict:
         d = self._dir(h)
         if not os.path.isfile(os.path.join(d, _META)):
             raise KeyError(f"no store entry {h} under {self.root}")
-        with open(os.path.join(d, _META)) as f:
-            meta = json.load(f)
-        with np.load(os.path.join(d, _ARRAYS), allow_pickle=False) as z:
-            arrays = {k: z[k] for k in z.files}
+        try:
+            with open(os.path.join(d, _META)) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise StoreCorruptError(h, f"meta.json unreadable: {e!r}") from e
+        return meta
+
+    def verify_meta(self, h: str, meta: dict) -> None:
+        """meta.json self-consistency: its spec must hash to its dirname.
+
+        meta.json is plain JSON with no CRC, so a bit flip there is
+        caught by re-deriving the spec hash (any flip inside ``spec``
+        moves the digest) and checking the recorded hash fields.
+        """
+        if meta.get("spec_hash") != h:
+            raise StoreCorruptError(
+                h, f"meta.json records spec_hash {meta.get('spec_hash')!r}")
+        derived = _digest(meta.get("spec", {}))
+        if derived != h:
+            raise StoreCorruptError(
+                h, f"meta.json spec re-hashes to {derived} (bit flip in "
+                   "spec payload or wrong directory)")
+
+    def get(self, spec_or_hash, verify: bool = False) -> StoredSweep:
+        """Load one entry.  Decode failures always raise
+        ``StoreCorruptError``; ``verify=True`` additionally re-derives
+        the spec hash from ``meta.json`` and the arrays-file sha256
+        against the ``checksums`` record (entries written before the
+        checksum format skip the file check).
+        """
+        h = self._resolve(spec_or_hash)
+        d = self._dir(h)
+        meta = self._read_meta(h)
+        if verify:
+            self.verify_meta(h, meta)
+            want = meta.get("checksums", {}).get(_ARRAYS)
+            if want is not None:
+                with open(os.path.join(d, _ARRAYS), "rb") as f:
+                    got = hashlib.sha256(f.read()).hexdigest()
+                if got != want:
+                    raise StoreCorruptError(
+                        h, f"{_ARRAYS} sha256 {got} != recorded {want}")
+        try:
+            with np.load(os.path.join(d, _ARRAYS), allow_pickle=False) as z:
+                arrays = {k: z[k] for k in z.files}
+        except Exception as e:
+            raise StoreCorruptError(
+                h, f"{_ARRAYS} unreadable (torn or corrupt): {e!r}") from e
         return StoredSweep(spec=meta["spec"], spec_hash=meta["spec_hash"],
                            family_hash=meta["family_hash"],
                            axes=tuple(meta["axes"]), arrays=arrays,
                            extra=meta.get("extra", {}))
+
+    # -------------------------------------------------------- durability --
+
+    def quarantine(self, spec_or_hash, reason: str) -> str:
+        """Rename a corrupt entry directory aside; returns the new path.
+
+        Quarantine, never delete: the corrupt bytes stay on disk as
+        evidence, the hash becomes free for a clean recompute, and
+        ``hashes()`` skips ``.quarantined`` names.
+        """
+        h = self._resolve(spec_or_hash)
+        return faults.quarantine_path(self._dir(h), reason)
+
+    def verify_all(self) -> dict[str, Optional[str]]:
+        """Checksum-verify every entry; hash -> None (ok) or reason."""
+        out: dict[str, Optional[str]] = {}
+        for h in self.hashes():
+            try:
+                self.get(h, verify=True)
+                out[h] = None
+            except StoreCorruptError as e:
+                out[h] = e.reason
+        return out
+
+    def add_checksums(self, spec_or_hash) -> bool:
+        """Migrate a pre-checksum entry: record the arrays-file sha256
+        and content digest in its ``meta.json``.  Spec hashes are
+        untouched (meta.json is not part of the spec hash).  Returns
+        True when the meta was rewritten.
+        """
+        h = self._resolve(spec_or_hash)
+        d = self._dir(h)
+        meta = self._read_meta(h)
+        self.verify_meta(h, meta)
+        if "checksums" in meta:
+            return False
+        with open(os.path.join(d, _ARRAYS), "rb") as f:
+            blob = f.read()
+        with np.load(io.BytesIO(blob), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        meta["checksums"] = {_ARRAYS: hashlib.sha256(blob).hexdigest(),
+                             "arrays_digest": arrays_digest(arrays)}
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(d, _META))
+        return True
 
     # ------------------------------------------------- merge / extension --
 
@@ -291,8 +440,9 @@ class SweepStore:
             fh = spec_or_family_hash
         else:
             fh = family_hash(spec_or_family_hash)
-        # filter on meta.json alone; arrays load only for actual members
-        return [self.get(m["spec_hash"])
+        # filter on meta.json alone; arrays load (checksum-verified: these
+        # entries feed merges) only for actual members
+        return [self.get(m["spec_hash"], verify=True)
                 for m in self._family_metas(fh, inputs_digest)]
 
     def _family_metas(self, fh: str,
@@ -332,6 +482,7 @@ class SweepStore:
         """
         if not entries:
             raise ValueError("nothing to merge")
+        faults.event("store.merge")
         base = entries[0]
         lam_axis = base.axes.index("lam")
         keyset = sorted(base.arrays)

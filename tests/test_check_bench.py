@@ -195,3 +195,62 @@ def test_delivered_rate_must_not_exceed_attempted():
     nan = [dict(committed[0], delivered_rate=float("nan"))]
     errs = check_suite("degraded_edge", committed, nan)
     assert errs
+
+
+CHAOS_COMMITTED = [
+    dict(bench="chaos", site=s, kind="crash_after", child="sweep",
+         crashed=True, faulted_rc=43, recovered_bitwise=True, quarantined=0,
+         recovery_s=5.0, clean_s=8.0, overhead_pct=-37.5, us_per_call=5e6)
+    for s in ("ckpt.write", "store.commit", "runtime.unlock")
+] + [
+    dict(bench="chaos_serving", site=s, kind=k, healthy_kept_serving=True,
+         poisoned_status=st, us_per_call=1e4)
+    for s, k, st in (("registry.load", "flip", 503),
+                     ("serve.request", "oserror", 200))
+]
+
+
+def test_chaos_schema_passes():
+    assert check_suite("chaos", CHAOS_COMMITTED,
+                       [dict(r) for r in CHAOS_COMMITTED]) == []
+
+
+def test_chaos_missing_required_site_fails():
+    rows = [dict(r) for r in CHAOS_COMMITTED
+            if r["site"] != "store.commit"]
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("store.commit" in e and "site" in e for e in errs)
+
+
+@pytest.mark.parametrize("bad", [False, None, "yes"])
+def test_chaos_recovery_must_be_bitwise(bad):
+    rows = [dict(r) for r in CHAOS_COMMITTED]
+    rows[0]["recovered_bitwise"] = bad
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("recovered_bitwise" in e for e in errs)
+
+
+@pytest.mark.parametrize("bad", [0.0, -1.0, float("nan"), float("inf"), "s"])
+def test_chaos_recovery_time_must_be_finite_positive(bad):
+    rows = [dict(r) for r in CHAOS_COMMITTED]
+    rows[1]["recovery_s"] = bad
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("recovery_s" in e for e in errs)
+
+
+def test_chaos_crash_claim_needs_nonzero_rc():
+    rows = [dict(r) for r in CHAOS_COMMITTED]
+    rows[0]["faulted_rc"] = 0
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("faulted_rc" in e for e in errs)
+
+
+def test_chaos_serving_rows_must_keep_healthy_hashes_serving():
+    rows = [dict(r) for r in CHAOS_COMMITTED]
+    rows[-1]["healthy_kept_serving"] = False
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("stopped serving" in e for e in errs)
+    rows = [dict(r) for r in CHAOS_COMMITTED]
+    rows[-2]["poisoned_status"] = 500          # unstructured crash
+    errs = check_suite("chaos", CHAOS_COMMITTED, rows)
+    assert any("poisoned_status" in e for e in errs)

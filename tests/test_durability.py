@@ -1,0 +1,242 @@
+"""Hardened durability path (ISSUE 10): checksums, corrupt-byte
+detection, quarantine-and-recompute.
+
+Every artifact the runtime persists now carries content checksums
+computed from in-memory bytes *before* anything touches disk — so torn
+writes and bit flips (injected via ``repro.faults`` or applied directly
+to the files) are always detected on read, never blessed into results:
+
+* chunk checkpoints: per-array sha256 sidecar; a flipped/truncated npz
+  raises ``CorruptCheckpointError`` (template mismatches stay plain
+  ``ValueError`` — a caller bug must not be "recovered" by recompute);
+* store entries: whole-file sha256 + content digest in ``meta.json``;
+  a corrupt entry raises ``StoreCorruptError`` naming the hash;
+* the resumable runtime quarantines a corrupt chunk aside (evidence is
+  never deleted) and recomputes that segment — the final sweep is
+  bitwise identical to an uninterrupted run;
+* ``SweepStore.put`` self-heals a committed-but-corrupt entry: the old
+  bytes are quarantined and fresh bytes written, never merged.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import store as ckpt
+from repro.core.algorithm1 import ParamSampler
+from repro.envs import GridWorld
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments.runtime import run_sweep_resumable
+from repro.experiments.store import StoreCorruptError, SweepStore
+
+GW = GridWorld()
+PROB = GW.vfa_problem(np.zeros(GW.num_states))
+EPS = 0.5
+RHO = PROB.min_rho(EPS) * 1.0001
+W0 = jnp.zeros(GW.num_states)
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+# -------------------------------------------------- chunk checkpoints ------
+
+
+def test_checkpoint_roundtrip_with_checksums(tmp_path):
+    p = str(tmp_path / "c.npz")
+    ckpt.save(p, _tree(), metadata={"k": 1}, durable=True)
+    got, meta = ckpt.restore(p, _tree())
+    assert meta["k"] == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(_tree()["w"]))
+    with np.load(p) as npz:                       # the sidecar is on disk
+        assert "__checksums__" in npz.files
+
+
+@pytest.mark.parametrize("corrupt", [faults.flip_bit, faults.truncate_half],
+                         ids=["flip", "torn"])
+def test_corrupt_checkpoint_raises_corrupt_error(tmp_path, corrupt):
+    p = str(tmp_path / "c.npz")
+    ckpt.save(p, _tree())
+    corrupt(p)
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(p, _tree())
+    if corrupt is faults.truncate_half:
+        # truncation kills the zip central directory, so even the
+        # metadata read fails; a flipped bit inside an array member
+        # leaves __meta__ intact (restore's checksums catch it above)
+        with pytest.raises(ckpt.CorruptCheckpointError):
+            ckpt.load_metadata(p)
+
+
+def test_template_mismatch_stays_plain_value_error(tmp_path):
+    """Wrong template = caller bug: it must NOT look like corruption, or
+    the runtime would silently 'recover' it by recomputing forever."""
+    p = str(tmp_path / "c.npz")
+    ckpt.save(p, _tree())
+    wrong = {"w": jnp.zeros((5, 5)), "step": jnp.asarray(0, jnp.int32)}
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(p, wrong)
+    assert not isinstance(ei.value, ckpt.CorruptCheckpointError)
+
+
+def test_injected_torn_write_is_caught_on_restore(tmp_path):
+    p = str(tmp_path / "c.npz")
+    faults.install("ckpt.write:torn:1")
+    ckpt.save(p, _tree())                         # fault tears the tmp file
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.restore(p, _tree())
+
+
+# ------------------------------------------------------- store entries -----
+
+
+SPEC = {"modes": ["theoretical"], "lambdas": [1e-3, 1e-1], "rhos": [0.9],
+        "seeds": [0], "eps": 0.5, "num_iterations": 5, "num_agents": 2,
+        "tag": "durability-test"}
+
+
+def _arrays():
+    return {"trace/comm_rate": np.linspace(0, 1, 8,
+                                           dtype=np.float32).reshape(1, 2,
+                                                                     1, 1, 4),
+            "trace/j_final": np.full((1, 2, 1, 1), 0.25, np.float32)}
+
+
+def _arrays_small():
+    return {"trace/comm_rate": np.asarray([[0.5, 0.1]], np.float32),
+            "trace/j_final": np.asarray([[0.2, 0.3]], np.float32)}
+
+
+def test_put_records_checksums_and_verify_passes(tmp_path):
+    s = SweepStore(str(tmp_path))
+    h = s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    with open(os.path.join(str(tmp_path), h, "meta.json")) as f:
+        meta = json.load(f)
+    assert set(meta["checksums"]) == {"arrays.npz", "arrays_digest"}
+    s.get(h, verify=True)
+    assert s.verify_all() == {h: None}
+
+
+@pytest.mark.parametrize("corrupt", [faults.flip_bit, faults.truncate_half],
+                         ids=["flip", "torn"])
+def test_corrupt_entry_raises_store_corrupt_error(tmp_path, corrupt):
+    s = SweepStore(str(tmp_path))
+    h = s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    corrupt(os.path.join(str(tmp_path), h, "arrays.npz"))
+    with pytest.raises(StoreCorruptError) as ei:
+        s.get(h, verify=True)
+    assert ei.value.spec_hash == h
+    assert s.verify_all()[h] is not None
+
+
+def test_quarantine_renames_aside_and_hashes_skips_it(tmp_path):
+    s = SweepStore(str(tmp_path))
+    h = s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    moved = s.quarantine(h, "test incident")
+    assert ".quarantined-" in moved and os.path.isdir(moved)
+    assert s.hashes() == [] and not s.has(h)
+
+
+def test_put_self_heals_committed_but_corrupt_entry(tmp_path):
+    """The recompute path, not an overwrite: corrupt bytes move aside as
+    evidence, the fresh bytes land as a brand-new entry dir."""
+    s = SweepStore(str(tmp_path))
+    arrays = _arrays_small()
+    h = s.put(SPEC, arrays, ("mode", "lam"))
+    faults.flip_bit(os.path.join(str(tmp_path), h, "arrays.npz"))
+    h2 = s.put(SPEC, arrays, ("mode", "lam"))     # re-commit same results
+    assert h2 == h
+    s.get(h, verify=True)                         # healed
+    assert any(".quarantined" in n for n in os.listdir(str(tmp_path)))
+
+
+def test_injected_commit_torn_then_self_heal(tmp_path):
+    s = SweepStore(str(tmp_path))
+    faults.install("store.commit:torn:1")
+    h = s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    faults.reset()
+    with pytest.raises(StoreCorruptError):        # committed marker, bad bytes
+        s.get(h, verify=True)
+    s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    s.get(h, verify=True)
+
+
+def test_add_checksums_migrates_legacy_meta(tmp_path):
+    s = SweepStore(str(tmp_path))
+    h = s.put(SPEC, _arrays_small(), ("mode", "lam"))
+    mpath = os.path.join(str(tmp_path), h, "meta.json")
+    with open(mpath) as f:
+        meta = json.load(f)
+    del meta["checksums"]                         # simulate a pre-10 entry
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+    assert s.add_checksums(h) is True
+    assert s.add_checksums(h) is False            # idempotent
+    s.get(h, verify=True)
+
+
+# ------------------------------------- runtime: quarantine-and-recompute ---
+
+
+def _spec(**kw):
+    base = dict(modes=("theoretical", "practical"), lambdas=(1e-3, 1e-1),
+                seeds=(0,), rhos=(RHO,), eps=EPS, num_iterations=10,
+                num_agents=2, chunk_size=2, trace="summary")
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _sampler():
+    return ParamSampler(fn=GW.sampler_fn(10), params=GW.agent_params(W0, 2))
+
+
+def _assert_bitwise(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.comm_rate),
+                                  np.asarray(ref.comm_rate))
+    np.testing.assert_array_equal(np.asarray(got.j_final),
+                                  np.asarray(ref.j_final))
+
+
+@pytest.mark.parametrize("corrupt", [faults.flip_bit, faults.truncate_half],
+                         ids=["flip", "torn"])
+def test_corrupt_chunk_is_quarantined_and_recomputed_bitwise(tmp_path,
+                                                             corrupt):
+    spec = _spec()
+    d = str(tmp_path / "chunks")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    chunks = sorted(f for f in os.listdir(d) if f.startswith("chunk_"))
+    assert len(chunks) >= 2
+    corrupt(os.path.join(d, chunks[0]))
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB, store_dir=d)
+    _assert_bitwise(got, ref)
+    # corrupt bytes moved aside, not deleted; the healthy chunk restored
+    assert any(".quarantined" in n for n in os.listdir(d))
+
+
+def test_durable_resumable_run_matches_and_commits(tmp_path):
+    spec = _spec()
+    d = str(tmp_path / "chunks")
+    store_root = str(tmp_path / "store")
+    ref = run_sweep(spec, _sampler(), W0, problem=PROB)
+    got = run_sweep_resumable(spec, _sampler(), W0, problem=PROB,
+                              store_dir=d, summary_store=store_root,
+                              durable=True)
+    _assert_bitwise(got, ref)
+    s = SweepStore(store_root)
+    (h,) = s.hashes()
+    s.get(h, verify=True)

@@ -1,0 +1,199 @@
+"""The fault-injection harness itself (ISSUE 10 tentpole).
+
+``repro.faults`` is the substrate every durability test and the chaos
+benchmark stand on, so its own contract is pinned first: deterministic
+rule parsing (bad specs fail loudly at parse time, naming the env var),
+nth-occurrence counting, each fault kind's mechanics (crash semantics,
+torn/flip mangling, transient OSError, injected latency), and the
+quarantine naming convention.  A subprocess test proves the env-var
+path end to end: ``REPRO_FAULTS`` set → hard ``os._exit(43)`` death,
+no Python teardown.
+
+Stdlib + numpy only — no jax, no device.
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro import faults
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# ------------------------------------------------------------- parsing -----
+
+
+def test_parse_rules_roundtrip():
+    rules = faults.parse_rules("ckpt.write:torn:1, store.commit:crash-after:2")
+    assert [(r.site, r.kind, r.nth) for r in rules] == [
+        ("ckpt.write", "torn", 1), ("store.commit", "crash_after", 2)]
+
+
+@pytest.mark.parametrize("spec", [
+    "nope.site:torn:1",          # unknown site
+    "ckpt.write:melt:1",         # unknown kind
+    "ckpt.write:torn:0",         # nth must be >= 1
+    "ckpt.write",                # missing kind
+])
+def test_parse_rules_rejects_bad_specs_naming_env_var(spec):
+    with pytest.raises(ValueError, match=faults.ENV_VAR):
+        faults.parse_rules(spec)
+
+
+def test_every_declared_site_and_kind_is_parseable():
+    for site in faults.SITES:
+        for kind in faults.KINDS:
+            (rule,) = faults.parse_rules(f"{site}:{kind}:3")
+            assert (rule.site, rule.kind, rule.nth) == (site, kind, 3)
+
+
+def test_env_var_activates_and_reset_rereads(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "store.commit:oserror:1")
+    faults.reset()
+    plan = faults.active()
+    assert plan is not None and plan.rules[0].site == "store.commit"
+    monkeypatch.delenv(faults.ENV_VAR)
+    faults.reset()
+    assert faults.active() is None
+
+
+# ------------------------------------------------------ firing semantics ---
+
+
+def test_nth_occurrence_fires_exactly_once():
+    faults.install("store.commit:oserror:3")
+    for i in range(1, 6):
+        if i == 3:
+            with pytest.raises(faults.TransientFault):
+                faults.event("store.commit")
+        else:
+            faults.event("store.commit")  # occurrences 1,2,4,5: clean
+
+
+def test_sites_count_independently():
+    faults.install("runtime.gc:oserror:1")
+    faults.event("runtime.lock")          # other sites never trip the rule
+    faults.event("runtime.unlock")
+    with pytest.raises(faults.TransientFault):
+        faults.event("runtime.gc")
+
+
+def test_crash_raise_mode_uses_base_exception():
+    plan = faults.install("runtime.lock:crash_before:1")
+    with pytest.raises(faults.FaultInjected):
+        faults.event("runtime.lock")
+    # BaseException: `except Exception` recovery paths must NOT swallow
+    # an injected crash, or the harness would test the handler not the
+    # recovery
+    assert not issubclass(faults.FaultInjected, Exception)
+    assert plan.fired
+
+
+def test_crash_after_fires_on_clean_scope_exit_only():
+    faults.install("ckpt.write:crash_after:1")
+    with pytest.raises(faults.FaultInjected):
+        with faults.scope("ckpt.write"):
+            pass
+    faults.install("ckpt.write:crash_after:1")
+    with pytest.raises(RuntimeError, match="inner"):
+        # a scope that raised must not ALSO crash on exit — the real
+        # error is the evidence, the crash would bury it
+        with faults.scope("ckpt.write"):
+            raise RuntimeError("inner")
+
+
+def test_latency_kind_sleeps(monkeypatch):
+    monkeypatch.setenv(faults.ENV_LATENCY, "0.05")
+    faults.reset()
+    monkeypatch.setenv(faults.ENV_VAR, "serve.request:latency:1")
+    faults.reset()
+    t0 = time.perf_counter()
+    with faults.scope("serve.request"):
+        pass
+    assert time.perf_counter() - t0 >= 0.04
+
+
+def test_transient_fault_is_an_oserror_with_eio():
+    import errno
+    faults.install("registry.load:oserror:1")
+    with pytest.raises(OSError) as ei:
+        faults.event("registry.load")
+    assert ei.value.errno == errno.EIO
+    assert ei.value.site == "registry.load"
+
+
+# -------------------------------------------------------------- mangling ---
+
+
+def test_scope_mangle_torn_halves_the_file(tmp_path):
+    p = tmp_path / "blob.bin"
+    p.write_bytes(bytes(range(200)))
+    faults.install("ckpt.write:torn:1")
+    with faults.scope("ckpt.write") as fs:
+        fs.mangle(str(p))
+    assert p.read_bytes() == bytes(range(100))
+
+
+def test_scope_mangle_flip_is_deterministic(tmp_path):
+    blobs = []
+    for attempt in range(2):
+        p = tmp_path / f"run{attempt}" / "arrays.npz"
+        p.parent.mkdir()
+        p.write_bytes(bytes(256))
+        faults.install("store.commit:flip:1")
+        with faults.scope("store.commit") as fs:
+            fs.mangle(str(p))
+        blobs.append(p.read_bytes())
+    # same basename => same flipped offset: deterministic replay
+    assert blobs[0] == blobs[1] != bytes(256)
+    flipped = [i for i, b in enumerate(blobs[0]) if b]
+    assert len(flipped) == 1 and flipped[0] >= 64   # header skipped
+
+
+def test_mangle_without_matching_rule_is_a_noop(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"x" * 32)
+    faults.install("ckpt.write:torn:5")            # nth far away
+    with faults.scope("ckpt.write") as fs:
+        fs.mangle(str(p))
+    assert p.read_bytes() == b"x" * 32
+
+
+def test_quarantine_path_never_overwrites_evidence(tmp_path):
+    for k in range(2):
+        p = tmp_path / "arrays.npz"
+        p.write_bytes(bytes([k]))
+        moved = faults.quarantine_path(str(p), f"incident {k}")
+        assert moved.endswith(f".quarantined-{k}")
+    assert (tmp_path / "arrays.npz.quarantined-0").read_bytes() == b"\x00"
+    assert (tmp_path / "arrays.npz.quarantined-1").read_bytes() == b"\x01"
+
+
+# ------------------------------------------------------------ subprocess ---
+
+
+def test_env_crash_is_a_hard_exit_43():
+    """The real crash path: no exception, no finally blocks — the process
+    dies mid-write exactly like a kill, with the reserved exit code."""
+    code = ("from repro import faults\n"
+            "try:\n"
+            "    faults.event('store.commit')\n"
+            "finally:\n"
+            "    print('TEARDOWN RAN')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env[faults.ENV_VAR] = "store.commit:crash_before:1"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=60)
+    assert proc.returncode == faults.CRASH_EXIT
+    assert "TEARDOWN RAN" not in proc.stdout

@@ -1,0 +1,175 @@
+"""Hardened serving path (ISSUE 10): per-hash degradation + client retry.
+
+The serving contract under faults: one poisoned store entry (corrupt
+bytes, vanished directory, transient I/O) degrades to a structured 503
+naming the hash and the reason — while every other entry keeps
+answering 200 on the same connection.  A hash nobody ever stored stays
+a 400 client error; "advertised but unloadable" is the only thing that
+503s.  Dropped connections (the ``serve.request`` fault site) are the
+client's job: ``QueryServiceClient`` retries transient connection
+errors with bounded exponential backoff + deterministic jitter, and
+never retries a response the server actually sent.
+
+numpy + stdlib only (the jax-free serving half); fault injection via
+``repro.faults`` in-process (crash_mode="raise").
+"""
+
+import json
+import os
+import shutil
+import threading
+from http.server import ThreadingHTTPServer
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.experiments import serve_sweeps
+from repro.experiments.client import (QueryServiceClient, RetryError,
+                                      RetryPolicy)
+from repro.experiments.registry import EntryUnavailableError, StoreRegistry
+from repro.experiments.store import SweepStore
+
+LAMS = (1e-4, 1e-3, 1e-2, 1e-1)
+
+
+def _put_entry(store, eps, tag):
+    arrays = {
+        "trace/comm_rate": np.asarray([[1.0, 0.6, 0.3, 0.1]], np.float32),
+        "trace/j_final": np.asarray([[0.01, 0.02, 0.05, 0.2]], np.float32),
+    }
+    spec = {"modes": ["theoretical"], "lambdas": list(LAMS), "rhos": [0.9],
+            "seeds": [0], "eps": eps, "num_iterations": 5, "num_agents": 2,
+            "tag": tag}
+    return store.put(spec, arrays, ("mode", "lam"))
+
+
+@pytest.fixture
+def served(tmp_path):
+    root = str(tmp_path / "store")
+    s = SweepStore(root)
+    hashes = [_put_entry(s, 0.5, f"serving-faults-{i}") for i in range(3)]
+    handler = serve_sweeps.make_handler(root, quiet=True)
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    client = QueryServiceClient("127.0.0.1", httpd.server_address[1],
+                                timeout=10,
+                                policy=RetryPolicy(retries=3, base_s=0.01,
+                                                   seed=3))
+    yield {"root": root, "hashes": hashes, "client": client,
+           "registry": handler.registry}
+    faults.reset()
+    client.close()
+    httpd.shutdown()
+
+
+# ------------------------------------------------- per-hash degradation ----
+
+
+def test_corrupt_entry_answers_structured_503_others_keep_serving(served):
+    h0, h1, _ = served["hashes"][:3]
+    c = served["client"]
+    faults.flip_bit(os.path.join(served["root"], h1, "arrays.npz"))
+    st, body = c.get("curve", hash=h1)
+    assert st == 503
+    assert body["unavailable"] is True and body["spec_hash"] == h1
+    assert body["reason"]                     # a human-readable cause
+    # the same keep-alive connection still serves every healthy hash
+    st, body = c.get("best_lambda", budget=0.2, hash=h0)
+    assert st == 200 and body["spec_hash"] == h0
+
+
+def test_vanished_entry_dir_evicts_stale_table_and_503s(served):
+    h0, _, h2 = served["hashes"][:3]
+    c, reg = served["client"], served["registry"]
+    assert c.get("curve", hash=h2)[0] == 200  # warm the table
+    before = reg.cached_tables()
+    shutil.rmtree(os.path.join(served["root"], h2))
+    st, body = c.get("curve", hash=h2)
+    assert st == 503 and body["unavailable"] is True
+    assert reg.cached_tables() < before       # stale table went with it
+    assert c.get("curve", hash=h0)[0] == 200
+
+
+def test_never_stored_hash_stays_a_400_client_error(served):
+    st, body = served["client"].get("curve", hash="deadbeef" * 8)
+    assert st == 400 and "unavailable" not in body
+
+
+def test_transient_load_error_degrades_then_recovers(served):
+    h0 = served["hashes"][0]
+    c = served["client"]
+    faults.install("registry.load:oserror:1")
+    st, body = c.get("curve", hash=h0)
+    assert st == 503 and body["unavailable"] is True
+    st, _ = c.get("curve", hash=h0)           # fault fired once: healed
+    assert st == 200
+    # the 503 was a *response*, not a connection failure — never retried
+    assert c.stats["transient_retries"] == 0
+    assert c.stats["response_errors"] == 1
+
+
+def test_batch_items_fail_independently(served):
+    h0, h1, _ = served["hashes"][:3]
+    faults.flip_bit(os.path.join(served["root"], h1, "arrays.npz"))
+    st, body = served["client"].batch([
+        {"query": "best_lambda", "hash": h0, "budget": 0.2},
+        {"query": "curve", "hash": h1},
+        {"query": "pareto", "hash": h0}])
+    assert st == 200 and body["count"] == 3
+    ok0, bad, ok2 = body["results"]
+    assert ok0["spec_hash"] == h0 and ok2["spec_hash"] == h0
+    assert bad["unavailable"] is True and bad["spec_hash"] == h1
+
+
+def test_registry_raises_entry_unavailable_not_keyerror(served):
+    h1 = served["hashes"][1]
+    reg = StoreRegistry(served["root"])
+    faults.flip_bit(os.path.join(served["root"], h1, "arrays.npz"))
+    with pytest.raises(EntryUnavailableError) as ei:
+        reg.table(h1)
+    assert ei.value.spec_hash == h1 and ei.value.reason
+    assert not isinstance(ei.value, KeyError)
+
+
+# ------------------------------------------------------- client retries ----
+
+
+def test_dropped_connection_is_retried_and_recovers(served):
+    c = served["client"]
+    faults.install("serve.request:oserror:1")
+    st, body = c.get("best_lambda", budget=0.2, hash=served["hashes"][0])
+    assert st == 200 and "result" in body
+    assert c.stats["transient_retries"] == 1
+
+
+def test_retries_exhausted_raises_retry_error(served):
+    c = served["client"]
+    # more drops than the policy's retry budget
+    faults.install("serve.request:oserror:1,serve.request:oserror:2,"
+                   "serve.request:oserror:3,serve.request:oserror:4")
+    with pytest.raises(RetryError) as ei:
+        c.get("curve", hash=served["hashes"][0])
+    assert ei.value.attempts == 4
+
+
+def test_injected_latency_slows_but_answers(served):
+    faults.install("serve.request:latency:1")
+    st, _ = served["client"].get("curve", hash=served["hashes"][0])
+    assert st == 200
+
+
+def test_retry_policy_delays_are_deterministic_and_bounded():
+    a = list(RetryPolicy(retries=5, base_s=0.02, cap_s=0.1, seed=9).delays())
+    b = list(RetryPolicy(retries=5, base_s=0.02, cap_s=0.1, seed=9).delays())
+    other = list(RetryPolicy(retries=5, base_s=0.02, cap_s=0.1,
+                             seed=10).delays())
+    assert a == b != other                    # seeded jitter, reproducible
+    assert all(0 < d <= 0.1 * 1.5 for d in a)
+    assert a[0] < a[-1]                       # backoff grows toward the cap
+
+
+def test_sweeps_listing_survives_vanished_root(served, tmp_path):
+    shutil.rmtree(served["root"])
+    st, body = served["client"].sweeps()
+    assert st == 200 and body["entries"] == []

@@ -21,6 +21,7 @@ import pytest
 from repro.experiments.store import (
     SweepStore,
     _digest,
+    arrays_digest,
     family_payload,
     spec_hash,
     spec_payload,
@@ -89,3 +90,21 @@ def test_committed_store_loads_through_sweepstore(store_dir):
         assert e.spec_hash == h
         assert e.axes and all(isinstance(a, str) for a in e.axes)
         assert e.arrays  # arrays loaded, not just manifested
+
+
+@pytest.mark.parametrize("entry_dir", ENTRY_DIRS, ids=_id)
+def test_committed_entry_carries_and_passes_checksums(entry_dir):
+    """Every committed entry ships the ISSUE-10 durability checksums
+    (file sha256 + content digest in meta.json) and its bytes on disk
+    still verify against them — on-disk rot of a committed artifact
+    fails here, naming the entry, before any renderer consumes it."""
+    with open(os.path.join(entry_dir, "meta.json")) as f:
+        meta = json.load(f)
+    sums = meta.get("checksums")
+    assert sums, f"{_id(entry_dir)}: no checksums — run add_checksums()"
+    assert set(sums) >= {"arrays.npz", "arrays_digest"}
+    store = SweepStore(os.path.dirname(entry_dir))
+    h = os.path.basename(entry_dir)
+    entry = store.get(h, verify=True)          # file sha + digest + hash
+    assert arrays_digest(entry.arrays) == sums["arrays_digest"]
+    assert store.verify_all()[h] is None
